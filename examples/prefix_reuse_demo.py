@@ -1,0 +1,38 @@
+"""Controlled prefix-reuse demo (paper Table 2 in miniature): sweep the
+shared-prefix repeat ratio and watch the schedulers separate.
+
+    PYTHONPATH=src python examples/prefix_reuse_demo.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.workflowbench.metrics import geomean              # noqa: E402
+from repro.workflowbench.runner import run_one               # noqa: E402
+from repro.workflowbench.suites import (RATIOS, prefix_suite)  # noqa: E402
+from repro.core.devices import homogeneous_cluster           # noqa: E402
+
+
+def main() -> None:
+    cluster = homogeneous_cluster(8)
+    halo0 = {w.wid.rsplit("-", 1)[1]: run_one(w, "Halo", cluster).makespan
+             for w in prefix_suite(0.0)}
+    print("geomean makespan normalized by Halo @ ratio 0 "
+          "(lower is better):\n")
+    print(f"{'policy':8s} " + " ".join(f"r={r:<5}" for r in RATIOS))
+    for pol in ["Halo", "KVFlow", "FATE"]:
+        vals = []
+        for r in RATIOS:
+            ms = [run_one(w, pol, cluster).makespan
+                  / halo0[w.wid.rsplit('-', 1)[1]]
+                  for w in prefix_suite(r)]
+            vals.append(geomean(ms))
+        print(f"{pol:8s} " + " ".join(f"{v:<7.3f}" for v in vals))
+    print("\nFATE's edge persists at ratio 0 — future-state preservation"
+          "\n(residency + shard planning), not cache reuse alone, drives"
+          "\nthe gap (the paper's §4.3 conclusion).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Arch config module (selectable via --arch)."""
+from repro.configs.archs import QWEN3_17B as CONFIG
+from repro.configs.archs import SMOKE
+SMOKE_CONFIG = SMOKE[CONFIG.name]

@@ -1,0 +1,223 @@
+"""Commit-and-advance workflow executor (paper Algorithm 2).
+
+A discrete-event runtime over the proxy cost model (the paper's own
+evaluation substrate, Appendix C.1): policies commit Placements into a
+committed action pool; the executor issues dependency-ready actions as
+their devices free, updates the execution state (ρ, κ, ℓ, τ) on
+completion, and invokes the policy again when the pool has no feasible
+ready action.
+
+Per-query completion times are tracked through shard partitions so P95
+query latency is measurable (queries in different shards of the sink
+stage finish at different times).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Protocol
+
+from repro.core.costs import CostModel, CostParams
+from repro.core.planner import Placement
+from repro.core.state import ExecutionState
+from repro.core.workflow import ModelProfile, Stage, Workflow
+
+
+class Policy(Protocol):
+    name: str
+
+    def plan(self, wf: Workflow, state: ExecutionState,
+             ready: list[str]) -> list[Placement]:
+        ...
+
+
+@dataclasses.dataclass
+class StageRun:
+    placement: Placement
+    start: float
+    finish: float                       # max over shards
+    shard_finish: tuple[float, ...]
+    switched: tuple[bool, ...]
+
+
+@dataclasses.dataclass
+class RunResult:
+    wid: str
+    makespan: float
+    query_completion: list[float]       # per query
+    stage_runs: dict[str, StageRun]
+    # mechanism proxies (Appendix C.2), per workflow
+    cross_device_edges: int
+    prefix_hits_est: float
+    same_model_continuations: float
+    total_tasks: int
+    model_switches: int
+
+    @property
+    def p95(self) -> float:
+        xs = sorted(self.query_completion)
+        if not xs:
+            return self.makespan
+        idx = max(0, min(len(xs) - 1, int(round(0.95 * (len(xs) - 1)))))
+        return xs[idx]
+
+
+class WorkflowExecutor:
+    def __init__(self, state: ExecutionState,
+                 cost_params: Optional[CostParams] = None):
+        self.state = state
+        self.cm = CostModel(state, cost_params)
+
+    # ------------------------------------------------------------------
+    def run(self, wf: Workflow, policy: Policy) -> RunResult:
+        state = self.state
+        cm = self.cm
+        wf.validate()
+        n_stages = len(wf.stages)
+        committed: list[Placement] = []
+        issued: set[str] = set()
+        completed: set[str] = set()
+        finish_heap: list[tuple[float, str]] = []
+        runs: dict[str, StageRun] = {}
+        query_done: dict[int, float] = {}
+        edge_cross = 0
+        prefix_hits = 0.0
+        same_model = 0.0
+        switches_before = state.model_switches
+
+        def ready_uncommitted() -> list[str]:
+            in_pool = {p.sid for p in committed}
+            return [sid for sid in wf.topo_order
+                    if sid not in completed and sid not in issued
+                    and sid not in in_pool
+                    and all(p in completed
+                            for p in wf.stages[sid].parents)]
+
+        def issuable(p: Placement) -> bool:
+            st = wf.stages[p.sid]
+            if any(par not in completed for par in st.parents):
+                return False
+            return all(state.device_free(d) <= state.now + 1e-12
+                       for d in p.devices)
+
+        def issue(p: Placement) -> None:
+            nonlocal edge_cross, prefix_hits, same_model
+            st = wf.stages[p.sid]
+            primary = p.devices[0]
+            # mechanism proxies (measured at issue, before state update)
+            for par in st.parents:
+                locs = state.output_loc.get((wf.wid, par), ())
+                if locs and primary not in locs:
+                    edge_cross += 1
+            ov = state.prefix_overlap(st, primary, wf.num_queries)
+            prefix_hits += ov
+            res_frac = sum(
+                1 for d in p.devices if state.is_resident(st.model, d)
+            ) / len(p.devices)
+            same_model += res_frac
+
+            shard_fin = []
+            switched = []
+            for d, nq in zip(p.devices, p.shard_sizes):
+                was_resident = state.is_resident(st.model, d)
+                t0 = max(state.now, state.device_free(d))
+                dur = cm.base_cost(st, d, nq)
+                dur += cm.switch_cost(st, d)
+                dur += cm.transfer_cost(wf, st, d, nq)
+                dur -= cm.prefix_benefit(st, d, nq)
+                dur -= cm.locality_benefit(wf, st, d, nq)
+                if len(p.devices) > 1:
+                    dur += (cm.base_cost(st, d, wf.num_queries)
+                            * cm.p.shard_overhead)
+                dur = max(dur, 1e-6)
+                fin = t0 + dur
+                state.free_at[d] = fin
+                state.set_resident(d, st.model)
+                if st.keep_cache:
+                    state.warm_prefix(d, st.prefix_group, st.model, nq,
+                                      fin)
+                shard_fin.append(fin)
+                switched.append(not was_resident)
+            fin_all = max(shard_fin)
+            runs[p.sid] = StageRun(p, state.now, fin_all,
+                                   tuple(shard_fin), tuple(switched))
+            issued.add(p.sid)
+            heapq.heappush(finish_heap, (fin_all, p.sid))
+
+        # main loop -----------------------------------------------------
+        guard = 0
+        while len(completed) < n_stages:
+            guard += 1
+            if guard > 40 * n_stages + 1000:
+                raise RuntimeError(
+                    f"{wf.wid}: executor stalled ({policy.name})")
+            # 1. issue every committed action that can start now
+            progress = True
+            while progress:
+                progress = False
+                for p in list(committed):
+                    if p.sid in issued or p.sid in completed:
+                        committed.remove(p)
+                        continue
+                    if issuable(p):
+                        committed.remove(p)
+                        issue(p)
+                        progress = True
+            # 2. plan if the pool has no feasible ready action
+            ready = ready_uncommitted()
+            pool_feasible = any(
+                all(par in completed for par in wf.stages[p.sid].parents)
+                for p in committed)
+            if ready and not pool_feasible:
+                new = policy.plan(wf, state, ready)
+                if not new:
+                    # liveness fallback: greedily place the single best
+                    # ready stage by state-corrected cost
+                    sid = ready[0]
+                    st = wf.stages[sid]
+                    devs = (list(st.eligible) if st.eligible
+                            else state.cluster.ids())
+                    best = min(devs, key=lambda d: (
+                        cm.effective_cost(wf, st, d, wf.num_queries)
+                        + state.wait_time(d)))
+                    new = [Placement(wf.wid, sid, (best,),
+                                     (wf.num_queries,))]
+                committed.extend(new)
+                continue
+            # 3. advance time to the next completion
+            if finish_heap:
+                t, sid = heapq.heappop(finish_heap)
+                state.now = max(state.now, t)
+                completed.add(sid)
+                state.completed.add((wf.wid, sid))
+                st = wf.stages[sid]
+                run = runs[sid]
+                state.output_loc[(wf.wid, sid)] = run.placement.devices
+                # per-query completion at sink stages
+                if not st.children:
+                    qid = 0
+                    for dfin, nq in zip(run.shard_finish,
+                                        run.placement.shard_sizes):
+                        for _ in range(nq):
+                            query_done[qid] = max(
+                                query_done.get(qid, 0.0), dfin)
+                            qid += 1
+            elif not committed and not ready_uncommitted():
+                raise RuntimeError(f"{wf.wid}: deadlock ({policy.name})")
+
+        makespan = max((r.finish for r in runs.values()), default=0.0)
+        qdone = [query_done.get(i, makespan)
+                 for i in range(wf.num_queries)]
+        return RunResult(
+            wid=wf.wid, makespan=makespan, query_completion=qdone,
+            stage_runs=runs, cross_device_edges=edge_cross,
+            prefix_hits_est=prefix_hits,
+            same_model_continuations=same_model,
+            total_tasks=n_stages,
+            model_switches=state.model_switches - switches_before)
+
+
+def fresh_state(cluster, profiles=None) -> ExecutionState:
+    from repro.core.workflow import DEFAULT_PROFILES
+    return ExecutionState(cluster=cluster,
+                          profiles=dict(profiles or DEFAULT_PROFILES))

@@ -1,0 +1,187 @@
+"""FATE frontier planner: builds the frontier ILP from horizon-aware
+scores, solves it exactly, and materializes shard-slot placements
+(paper §3.3, Appendix A.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.costs import CostModel, shard_partition
+from repro.core.frontier_solver import (NEG, FrontierProblem,
+                                        FrontierSolution,
+                                        solve_frontier_exact)
+from repro.core.scoring import ScoreParams, Scorer
+from repro.core.state import ExecutionState
+from repro.core.workflow import Stage, Workflow
+
+
+@dataclasses.dataclass
+class Placement:
+    """A committed stage placement: devices[0] is the primary (slot 0)."""
+    wid: str
+    sid: str
+    devices: tuple[int, ...]
+    shard_sizes: tuple[int, ...]
+    score: float = 0.0
+    planned_at: float = 0.0
+
+
+@dataclasses.dataclass
+class SolveRecord:
+    """Per-solve stats for the Table 12 analogue."""
+    wall_time: float
+    nodes: int
+    status: str
+    n_rows: int
+    n_devices: int
+    objective: float
+
+
+class FrontierPlanner:
+    def __init__(self, params: Optional[ScoreParams] = None,
+                 time_limit: float = 5.0):
+        self.params = params or ScoreParams()
+        self.time_limit = time_limit
+        self.solve_log: list[SolveRecord] = []
+
+    def plan(self, wf: Workflow, state: ExecutionState,
+             ready: list[str]) -> list[Placement]:
+        """Commit-and-advance planning (Algorithm 2): repeatedly solve
+        frontier waves, advancing a simulated execution-state view
+        between waves (each device takes at most one assignment per
+        wave; estimated completion effects — residency, prefix warmth,
+        availability — feed the next wave's scores)."""
+        out: list[Placement] = []
+        sim = _simulate_copy(state)
+        remaining = list(ready)
+        while remaining:
+            wave = self._plan_wave(wf, sim, remaining)
+            if not wave:
+                break
+            for p in wave:
+                _apply_estimate(wf, sim, p)
+            placed = {p.sid for p in wave}
+            remaining = [s for s in remaining if s not in placed]
+            out.extend(wave)
+        return out
+
+    def _plan_wave(self, wf: Workflow, state: ExecutionState,
+                   ready: list[str]) -> list[Placement]:
+        """One CP-SAT wave over the current ready frontier."""
+        if not ready:
+            return []
+        cm = CostModel(state)
+        scorer = Scorer(state, cm, self.params)
+        scorer.set_frontier(wf, ready)
+        q = wf.num_queries
+        devices = state.cluster.ids()
+
+        # Regret-based wave scores: each stage's best placement scores a
+        # small positive margin; alternatives score margin − regret and
+        # may go negative, in which case the solver defers the stage to
+        # a later wave (e.g. queueing behind a model-resident device
+        # instead of paying a switch now).  The sum objective then
+        # approximates completion-time impact rather than raw placement
+        # count — the "balancing versus future-state preservation"
+        # tradeoff of §1 is decided by the score terms.
+        base_costs = [cm.base_cost(wf.stages[sid], d, q)
+                      for sid in ready for d in devices]
+        margin = (self.params.margin_factor
+                  * (sum(base_costs) / len(base_costs))
+                  if base_costs else 1.0)
+
+        rows: list[tuple] = []
+        weights: list[np.ndarray] = []
+        for sid in ready:
+            stage = wf.stages[sid]
+            eligible = set(stage.eligible) if stage.eligible else None
+            max_slots = (stage.max_shards if self.params.enable_shard
+                         else 1)
+            raw = np.full(len(devices), NEG)
+            efts = np.full(len(devices), np.inf)
+            for j, d in enumerate(devices):
+                if eligible is not None and d not in eligible:
+                    continue
+                raw[j] = scorer.planner_score(wf, stage, 0, d, 0.0)
+                efts[j] = scorer.corrected_eft(wf, stage, d)
+            if np.all(raw <= NEG / 2):
+                continue
+            best = raw[raw > NEG / 2].max()
+            solo_best = float(np.min(efts))
+            w0 = np.where(raw > NEG / 2, margin + raw - best, NEG)
+            rows.append((sid, 0))
+            weights.append(w0)
+            for k in range(1, max_slots):
+                w = np.full(len(devices), NEG)
+                for j, d in enumerate(devices):
+                    if eligible is not None and d not in eligible:
+                        continue
+                    w[j] = scorer.planner_score(wf, stage, k, d, 0.0,
+                                                solo_best=solo_best)
+                if np.all(w <= NEG / 2):
+                    continue
+                rows.append((sid, k))
+                weights.append(w)
+        if not rows:
+            return []
+
+        problem = FrontierProblem(rows, devices, np.array(weights))
+        sol = solve_frontier_exact(problem, self.time_limit)
+        self.solve_log.append(SolveRecord(
+            wall_time=sol.wall_time, nodes=sol.nodes, status=sol.status,
+            n_rows=len(rows), n_devices=len(devices),
+            objective=sol.objective))
+        return self._materialize(wf, state, cm, sol)
+
+    def _materialize(self, wf: Workflow, state: ExecutionState,
+                     cm: CostModel, sol: FrontierSolution
+                     ) -> list[Placement]:
+        by_stage: dict[str, dict[int, int]] = {}
+        for (sid, slot), dev in sol.assignment.items():
+            by_stage.setdefault(sid, {})[slot] = dev
+        out: list[Placement] = []
+        for sid, slots in by_stage.items():
+            if 0 not in slots:     # primary slot missing: drop (solver
+                continue           # guarantees monotonicity, belt&braces)
+            devs = tuple(slots[k] for k in sorted(slots))
+            speeds = [state.cluster.devices[d].speed for d in devs]
+            sizes = tuple(shard_partition(wf.num_queries, speeds))
+            out.append(Placement(wid=wf.wid, sid=sid, devices=devs,
+                                 shard_sizes=sizes, score=sol.objective,
+                                 planned_at=state.now))
+        return out
+
+
+def _simulate_copy(state: ExecutionState) -> ExecutionState:
+    """Cheap planning copy of the execution state (dict-level)."""
+    import copy
+    sim = ExecutionState(
+        cluster=state.cluster, profiles=state.profiles,
+        residency=dict(state.residency),
+        prefix={d: {g: copy.copy(e) for g, e in m.items()}
+                for d, m in state.prefix.items()},
+        output_loc=dict(state.output_loc),
+        free_at=dict(state.free_at), now=state.now)
+    sim.completed = set(state.completed)
+    return sim
+
+
+def _apply_estimate(wf: Workflow, sim: ExecutionState,
+                    p: Placement) -> None:
+    """Advance the simulated state by a placement's estimated effects."""
+    cm = CostModel(sim)
+    st = wf.stages[p.sid]
+    fins = []
+    for d, nq in zip(p.devices, p.shard_sizes):
+        t0 = max(sim.now, sim.device_free(d))
+        dur = max(1e-6, cm.breakdown(wf, st, d, nq).total)
+        sim.free_at[d] = t0 + dur
+        sim.residency[d] = st.model
+        if st.keep_cache:
+            sim.warm_prefix(d, st.prefix_group, st.model, nq, t0 + dur)
+        fins.append(t0 + dur)
+    sim.output_loc[(wf.wid, p.sid)] = p.devices
+    sim.completed.add((wf.wid, p.sid))

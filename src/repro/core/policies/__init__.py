@@ -1,0 +1,17 @@
+from repro.core.policies.fate import FATEPolicy
+from repro.core.policies.baselines import (HEFTPolicy, HaloPolicy,
+                                           HelixPolicy, KVFlowPolicy,
+                                           RoundRobinPolicy)
+
+ALL_POLICIES = {
+    "FATE": FATEPolicy,
+    "KVFlow": KVFlowPolicy,
+    "Helix": HelixPolicy,
+    "Halo": HaloPolicy,
+    "HEFT": HEFTPolicy,
+    "RoundRobin": RoundRobinPolicy,
+}
+
+
+def make_policy(name: str, **kwargs):
+    return ALL_POLICIES[name](**kwargs)

@@ -1,0 +1,27 @@
+"""FATE scheduling policy: CP-SAT-backed frontier planning with
+horizon-aware state-conditional scoring (the paper's method)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.planner import FrontierPlanner, Placement
+from repro.core.scoring import ScoreParams
+from repro.core.state import ExecutionState
+from repro.core.workflow import Workflow
+
+
+class FATEPolicy:
+    name = "FATE"
+
+    def __init__(self, params: Optional[ScoreParams] = None,
+                 time_limit: float = 5.0):
+        self.planner = FrontierPlanner(params, time_limit)
+        self.params = self.planner.params
+
+    def plan(self, wf: Workflow, state: ExecutionState,
+             ready: list[str]) -> list[Placement]:
+        return self.planner.plan(wf, state, ready)
+
+    @property
+    def solve_log(self):
+        return self.planner.solve_log

@@ -1,0 +1,252 @@
+"""State-aware scoring: runtime score S(v,d|s) and horizon-aware
+planner score Ψ(v,k,d|s,H)  (paper §3.3–3.4, Appendix A.3).
+
+    S(v,d|s) = −λ_q C_wait − λ_s C_switch − λ_tr C_transfer
+               + λ_c B_colo + λ_p B_prefix + λ_r B_parallel
+               (+ λ_m B_same_model — the "same-model bonus", ablated
+                separately from switch cost per Appendix C.3)
+
+    Ψ(v,k,d|s,H) = quality_base + S-terms (+ marginal shard gain for
+                   k>0) + Σ_{u ∈ Desc_H(v)} γ^{dist(u)} · tail(u, v, d)
+
+The tail folds downstream demand into current-frontier candidates
+without expanding future stages into solver variables (paper §3.3):
+  * same-model continuation — placing v on d keeps m(v) resident where
+    descendant u (same model) could continue, weighted by how scarce
+    m(v)-residency currently is;
+  * prefix affinity — placing v on d warms grp(v) state that matching
+    descendants can reuse;
+  * child transfer pressure — direct children inherit v's output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.costs import CostModel
+from repro.core.state import ExecutionState
+from repro.core.workflow import Stage, Workflow
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreParams:
+    lam_wait: float = 1.0          # λ_q
+    lam_switch: float = 1.0        # λ_s
+    lam_transfer: float = 1.0      # λ_tr
+    lam_colo: float = 0.6          # λ_c
+    lam_prefix: float = 1.5        # λ_p
+    lam_parallel: float = 0.9      # λ_r
+    lam_same_model: float = 0.5    # λ_m (same-model bonus)
+    horizon: int = 4               # H (levels; 1 = frontier only)
+    gamma: float = 0.6             # level discount
+    sibling_factor: float = 0.4    # frontier-sibling demand folding
+    bonus_factor: float = 0.4      # same-model bonus scale (of switch)
+    margin_factor: float = 0.1     # wave regret margin (of mean base)
+    specialize_factor: float = 0.15  # model-specialized device preference
+    # ablation switches (Appendix C.3)
+    enable_future: bool = True
+    enable_locality: bool = True
+    enable_same_model: bool = True
+    enable_prefix: bool = True
+    enable_shard: bool = True
+
+    def scaled(self, *, state_mul: float = 1.0, locality_mul: float = 1.0,
+               prefix_mul: float = 1.0) -> "ScoreParams":
+        """Table 10 sensitivity: scale term groups."""
+        return dataclasses.replace(
+            self,
+            lam_switch=self.lam_switch * state_mul,
+            lam_same_model=self.lam_same_model * state_mul,
+            lam_colo=self.lam_colo * locality_mul,
+            lam_transfer=self.lam_transfer * locality_mul,
+            lam_prefix=self.lam_prefix * prefix_mul,
+        )
+
+
+def _preferred_devices(model: str, n_devices: int,
+                       k: int = 2) -> tuple[int, ...]:
+    """Stable per-model device affinity (hash-spread over the cluster)."""
+    import hashlib
+    h = int(hashlib.sha256(model.encode()).hexdigest()[:8], 16)
+    return tuple((h + i * 3) % n_devices for i in range(k))
+
+
+class Scorer:
+    def __init__(self, state: ExecutionState, cost_model: CostModel,
+                 params: Optional[ScoreParams] = None):
+        self.state = state
+        self.cm = cost_model
+        self.p = params or ScoreParams()
+        self._frontier_models: dict[str, int] = {}
+        self._device_pressure_cost = 0.0
+
+    def set_frontier(self, wf: Workflow, ready: Sequence[str]) -> None:
+        """Record frontier model demand + device pressure."""
+        self._frontier_models = {}
+        for sid in ready:
+            m = wf.stages[sid].model
+            self._frontier_models[m] = self._frontier_models.get(m, 0) + 1
+        n_dev = self.state.cluster.n
+        mean_base = sum(
+            self.cm.base_cost(wf.stages[sid], self.state.cluster.ids()[0],
+                              wf.num_queries)
+            for sid in ready) / max(len(ready), 1)
+        # displacement only bites once primaries saturate the devices
+        pressure = min(1.0, max(0.0, (len(ready) - 0.75 * n_dev)
+                                / (0.5 * n_dev)))
+        self._device_pressure_cost = mean_base * pressure
+
+    # ------------------------------------------------------------------
+    def runtime_score(self, wf: Workflow, stage: Stage,
+                      device: int) -> float:
+        """S(v, d | s_t)."""
+        p = self.p
+        q = wf.num_queries
+        s = 0.0
+        s -= p.lam_wait * self.state.wait_time(device)
+        s -= p.lam_switch * self.cm.switch_cost(stage, device)
+        if p.enable_locality:
+            s -= p.lam_transfer * self.cm.transfer_cost(wf, stage, device, q)
+            if stage.parents:
+                colo = (self.state.parent_on_device(wf.wid, stage, device)
+                        / len(stage.parents))
+                s += p.lam_colo * colo * self.cm.base_cost(stage, device, q) \
+                    * 0.25
+        if p.enable_prefix:
+            s += p.lam_prefix * self.cm.prefix_benefit(stage, device, q)
+        if p.enable_same_model and self.state.is_resident(stage.model,
+                                                          device):
+            # small tie-breaker only: residency's real value is carried
+            # by C_switch (immediate) and the horizon tail (future)
+            prof = self.state.profiles[stage.model]
+            s += p.lam_same_model * prof.switch_cost * p.bonus_factor
+        return s
+
+    # ------------------------------------------------------------------
+    def _descendants_within(self, wf: Workflow, sid: str,
+                            depth: int) -> list[tuple[str, int]]:
+        out: list[tuple[str, int]] = []
+        frontier = [(sid, 0)]
+        seen = {sid}
+        while frontier:
+            cur, d = frontier.pop()
+            if d >= depth:
+                continue
+            for ch in wf.stages[cur].children:
+                if ch in seen:
+                    continue
+                seen.add(ch)
+                out.append((ch, d + 1))
+                frontier.append((ch, d + 1))
+        return out
+
+    def future_tail(self, wf: Workflow, stage: Stage, device: int) -> float:
+        """Discounted downstream (and frontier-sibling) state-preservation
+        value of placing v on d."""
+        p = self.p
+        if not p.enable_future or p.horizon <= 1:
+            return 0.0
+        q = wf.num_queries
+        tail = 0.0
+        resident_count = sum(
+            1 for d2 in self.state.cluster.ids()
+            if d2 != device and self.state.is_resident(stage.model, d2))
+        scarcity = 1.0 / (1.0 + resident_count)
+        # frontier-sibling demand: creating a NEW m(v) residency is worth
+        # a share of the switch cost the queued same-model siblings would
+        # otherwise pay (or wait out), with diminishing returns as more
+        # devices already host the model.
+        if not self.state.is_resident(stage.model, device):
+            siblings = self._frontier_models.get(stage.model, 1) - 1
+            if siblings > 0:
+                prof = self.state.profiles[stage.model]
+                tail += (p.sibling_factor * siblings
+                         * prof.switch_cost * scarcity)
+        for uid, dist in self._descendants_within(wf, stage.sid,
+                                                  p.horizon - 1):
+            u = wf.stages[uid]
+            g = p.gamma ** dist
+            if u.model == stage.model:
+                prof = self.state.profiles[u.model]
+                tail += (g * 0.5 * p.lam_switch * prof.switch_cost
+                         * scarcity)
+            if (p.enable_prefix and stage.prefix_group is not None
+                    and u.prefix_group == stage.prefix_group
+                    and u.cache_reuse and u.model == stage.model):
+                base_u = self.cm.base_cost(u, device, q)
+                tail += (g * p.lam_prefix * base_u * u.prefill_fraction
+                         * self.cm.p.prefix_saving)
+            if p.enable_locality and dist == 1:
+                # direct child inherits v's output: colocating later saves
+                # β·σ(v,u); reward keeping that option cheap on d
+                sigma_k = stage.output_tokens * q * u.comm_weight / 1000.0
+                tail += g * p.lam_transfer * \
+                    self.state.cluster.transfer_coef * sigma_k * 0.5
+        return tail
+
+    def corrected_eft(self, wf: Workflow, stage: Stage,
+                      device: int) -> float:
+        """State-corrected stage duration on d (no wait): ĉ(v,d,s)."""
+        bd = self.cm.breakdown(wf, stage, device, wf.num_queries)
+        return max(1e-6, bd.total)
+
+    # ------------------------------------------------------------------
+    def planner_score(self, wf: Workflow, stage: Stage, slot: int,
+                      device: int, quality_base: float,
+                      solo_best: float = 0.0) -> float:
+        """Ψ(v, k, d | s_t, H).
+
+        Slot 0 scores are an estimated-finish-time value in seconds:
+        −(wait + state-corrected cost) plus the discounted future tail,
+        so immediate efficiency and future-state quality share one unit
+        and the planner's wave competition approximates completion-time
+        impact (§3.2's  −C_imm + γ·V_future  decomposition).
+        """
+        p = self.p
+        q = wf.num_queries
+        if slot == 0:
+            bd = self.cm.breakdown(wf, stage, device, q)
+            eft = p.lam_wait * self.state.wait_time(device)
+            eft += bd.base
+            eft += p.lam_switch * bd.switch
+            if p.enable_locality:
+                eft += p.lam_transfer * bd.transfer
+                eft -= p.lam_colo * bd.locality_benefit
+            if p.enable_prefix:
+                eft -= p.lam_prefix * bd.prefix_benefit
+            psi = quality_base - eft
+            psi += self.future_tail(wf, stage, device)
+            if p.enable_same_model and self.state.is_resident(
+                    stage.model, device):
+                prof = self.state.profiles[stage.model]
+                psi += p.lam_same_model * prof.switch_cost \
+                    * p.bonus_factor
+            # model-specialized placement preference (deep heterogeneous
+            # workflows, §4.1 implementation summary): a stable per-model
+            # device affinity that damps residency churn across waves.
+            if p.specialize_factor and p.enable_same_model:
+                prof = self.state.profiles[stage.model]
+                if device in _preferred_devices(
+                        stage.model, self.state.cluster.n):
+                    psi += p.specialize_factor * prof.switch_cost
+            return psi
+        # extra shard slot: marginal completion-time gain minus occupancy.
+        # Under device pressure (more ready stages than devices) taking a
+        # device for a shard defers another stage's primary — charge that
+        # opportunity cost so bounded shard execution activates only when
+        # devices would otherwise idle (paper: "enables bounded
+        # multi-device shard execution when beneficial").
+        if not p.enable_shard or slot >= stage.max_shards:
+            return float("-inf")
+        # completion with this extra shard = the slowest partition; the
+        # candidate device contributes its own STATE-CORRECTED per-query
+        # cost (a cold/unswitched device can make sharding a net loss
+        # even when the primary runs warm).
+        corrected_d = self.corrected_eft(wf, stage, device)
+        solo = solo_best if solo_best > 0 else corrected_d
+        completion_new = max(solo, corrected_d) / (slot + 1)
+        overhead = solo * self.cm.p.shard_overhead
+        gain = (solo / slot - completion_new - overhead) * p.lam_parallel
+        gain -= p.lam_wait * self.state.wait_time(device)
+        gain -= self._device_pressure_cost
+        return gain

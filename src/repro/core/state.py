@@ -1,0 +1,123 @@
+"""Execution state s_t = (ρ_t, κ_t, ℓ_t, τ_t) — the object FATE preserves.
+
+  ρ_t : model residency per device (which model is live in HBM)
+  κ_t : reusable prefix-related metadata per device (prefix groups with
+        warm cache state, plus the model they were built under)
+  ℓ_t : device location(s) of completed stage outputs
+  τ_t : next-available time per device
+
+The state also carries bookkeeping used by the runtime (completed set,
+running set, committed-but-not-finished set — Appendix A.1 notes these
+implementation-level sets are suppressed in the main-text formulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.devices import Cluster
+from repro.core.workflow import ModelProfile, Stage, Workflow
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    group: str
+    model: str
+    warm_queries: int = 0          # number of queries whose prefix is warm
+    last_used: float = 0.0
+
+
+@dataclasses.dataclass
+class ExecutionState:
+    cluster: Cluster
+    profiles: dict[str, ModelProfile]
+    # ρ_t: device -> resident model alias (None = empty)
+    residency: dict[int, Optional[str]] = dataclasses.field(
+        default_factory=dict)
+    # κ_t: device -> {group: PrefixEntry}
+    prefix: dict[int, dict[str, PrefixEntry]] = dataclasses.field(
+        default_factory=dict)
+    # ℓ_t: (wid, sid) -> tuple of device ids holding the completed output
+    # (shard execution can leave outputs on several devices)
+    output_loc: dict[tuple[str, str], tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
+    # τ_t: device -> next free time
+    free_at: dict[int, float] = dataclasses.field(default_factory=dict)
+    now: float = 0.0
+    # bookkeeping
+    completed: set = dataclasses.field(default_factory=set)
+    running: set = dataclasses.field(default_factory=set)
+    committed: set = dataclasses.field(default_factory=set)
+    # mechanism counters (Appendix C.2 proxies)
+    cross_device_edges: int = 0
+    prefix_hits_est: float = 0.0
+    same_model_continuations: int = 0
+    total_tasks: int = 0
+    model_switches: int = 0
+
+    def __post_init__(self) -> None:
+        for d in self.cluster.ids():
+            self.residency.setdefault(d, None)
+            self.prefix.setdefault(d, {})
+            self.free_at.setdefault(d, 0.0)
+
+    # -- ρ --------------------------------------------------------------
+    def resident_model(self, device: int) -> Optional[str]:
+        return self.residency.get(device)
+
+    def is_resident(self, model: str, device: int) -> bool:
+        return self.residency.get(device) == model
+
+    def set_resident(self, device: int, model: str) -> None:
+        if self.residency.get(device) != model:
+            self.model_switches += 1
+            # switching a model invalidates that device's prefix cache
+            self.prefix[device] = {
+                g: e for g, e in self.prefix[device].items()
+                if e.model == model}
+        self.residency[device] = model
+
+    # -- κ --------------------------------------------------------------
+    def prefix_overlap(self, stage: Stage, device: int,
+                       num_queries: int) -> float:
+        """Overlap(grp(v), d, s_t): fraction of the stage's queries whose
+        shared prefix is warm on the device (0..1)."""
+        if not stage.cache_reuse or stage.prefix_group is None:
+            return 0.0
+        e = self.prefix.get(device, {}).get(stage.prefix_group)
+        if e is None or e.model != stage.model:
+            return 0.0
+        return (min(1.0, e.warm_queries / max(num_queries, 1))
+                * stage.shared_fraction)
+
+    def warm_prefix(self, device: int, group: Optional[str], model: str,
+                    queries: int, now: float) -> None:
+        if group is None:
+            return
+        slot = self.prefix[device].setdefault(
+            group, PrefixEntry(group, model))
+        if slot.model != model:
+            slot.model = model
+            slot.warm_queries = 0
+        slot.warm_queries = max(slot.warm_queries, queries)
+        slot.last_used = now
+
+    # -- ℓ --------------------------------------------------------------
+    def parent_locations(self, wid: str, stage: Stage) -> dict[str, tuple]:
+        return {p: self.output_loc.get((wid, p), ()) for p in stage.parents}
+
+    def parent_on_device(self, wid: str, stage: Stage, device: int) -> int:
+        """Number of parents whose output is local to ``device``."""
+        k = 0
+        for p in stage.parents:
+            if device in self.output_loc.get((wid, p), ()):
+                k += 1
+        return k
+
+    # -- τ --------------------------------------------------------------
+    def device_free(self, device: int) -> float:
+        return self.free_at.get(device, 0.0)
+
+    def wait_time(self, device: int, t: Optional[float] = None) -> float:
+        t = self.now if t is None else t
+        return max(0.0, self.device_free(device) - t)

@@ -1,0 +1,138 @@
+"""Workflow DAG model: stages, attributes, and per-instance query batches.
+
+Mirrors the paper's formulation (§2): each stage v carries
+``(m(v), A(v), R(v), c_v, φ(v), Pa(v), Ch(v))`` — model type, eligible
+devices, bounded shard degree, base runtime profile, stage-local
+features (prompt metadata, shared-prefix group, cache flags), and DAG
+neighbors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+
+@dataclasses.dataclass
+class Stage:
+    sid: str
+    model: str                               # m(v): model alias
+    eligible: tuple[int, ...] = ()           # A(v): device ids; () = all
+    max_shards: int = 1                      # R(v)
+    # base runtime profile c_v(d): per-query seconds on device d;
+    # keyed by device id, with -1 as the default entry.
+    base_cost: dict[int, float] = dataclasses.field(default_factory=dict)
+    # φ(v) — stage-local features
+    prefix_group: Optional[str] = None       # shared-prefix group id
+    shared_fraction: float = 1.0             # queries in shared groups
+    keep_cache: bool = True
+    cache_reuse: bool = True
+    output_tokens: float = 256.0             # output-size proxy (tokens)
+    prefill_fraction: float = 0.6            # share of cost that is prefill
+    comm_weight: float = 1.0                 # communication weight
+    role: str = "worker"
+    level: int = 0
+    parents: tuple[str, ...] = ()
+    children: tuple[str, ...] = ()
+
+    def cost_on(self, device: int) -> float:
+        if device in self.base_cost:
+            return self.base_cost[device]
+        return self.base_cost.get(-1, 1.0)
+
+
+@dataclasses.dataclass
+class Workflow:
+    wid: str
+    stages: dict[str, Stage]
+    num_queries: int = 16                    # batch of independent queries
+    family: str = ""
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self._wire()
+
+    def _wire(self) -> None:
+        """Recompute children from parents and topological levels."""
+        kids: dict[str, list[str]] = {s: [] for s in self.stages}
+        for s in self.stages.values():
+            for p in s.parents:
+                if p not in self.stages:
+                    raise ValueError(f"{self.wid}: unknown parent {p}")
+                kids[p].append(s.sid)
+        for sid, ch in kids.items():
+            self.stages[sid].children = tuple(sorted(ch))
+        # levels via Kahn topological pass (also validates acyclicity)
+        indeg = {s.sid: len(s.parents) for s in self.stages.values()}
+        frontier = [sid for sid, d in indeg.items() if d == 0]
+        seen = 0
+        level = {sid: 0 for sid in frontier}
+        order: list[str] = []
+        while frontier:
+            nxt: list[str] = []
+            for sid in frontier:
+                order.append(sid)
+                seen += 1
+                for ch in self.stages[sid].children:
+                    indeg[ch] -= 1
+                    level[ch] = max(level.get(ch, 0),
+                                    level.get(sid, 0) + 1)
+                    if indeg[ch] == 0:
+                        nxt.append(ch)
+            frontier = nxt
+        if seen != len(self.stages):
+            raise ValueError(f"{self.wid}: cycle detected")
+        for sid, lv in level.items():
+            self.stages[sid].level = lv
+        self._topo = order
+
+    @property
+    def topo_order(self) -> list[str]:
+        return list(self._topo)
+
+    def levels(self) -> dict[int, list[str]]:
+        out: dict[int, list[str]] = {}
+        for s in self.stages.values():
+            out.setdefault(s.level, []).append(s.sid)
+        return {k: sorted(v) for k, v in sorted(out.items())}
+
+    def max_level(self) -> int:
+        return max((s.level for s in self.stages.values()), default=0)
+
+    def sources(self) -> list[str]:
+        return [s.sid for s in self.stages.values() if not s.parents]
+
+    def sinks(self) -> list[str]:
+        return [s.sid for s in self.stages.values() if not s.children]
+
+    def validate(self) -> None:
+        for s in self.stages.values():
+            if s.max_shards < 1:
+                raise ValueError(f"{s.sid}: R(v) must be >= 1")
+            if not s.base_cost:
+                raise ValueError(f"{s.sid}: missing runtime profile")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Runtime proxy profile for a model alias (Appendix C.1)."""
+    name: str
+    size_gb: float                 # memory footprint
+    prefill_coef: float            # sec per 1k prompt tokens per query
+    decode_coef: float             # sec per 1k output tokens per query
+    switch_cost: float             # model load/activation seconds
+    family: str = "generic"
+
+
+DEFAULT_PROFILES: dict[str, ModelProfile] = {
+    # Qwen-style / DeepSeek-style / Llama-style 7–8B profiles (paper C.1)
+    "qwen-7b": ModelProfile("qwen-7b", 15.0, 0.011, 0.105, 6.5,
+                            family="qwen"),
+    "deepseek-7b": ModelProfile("deepseek-7b", 14.5, 0.012, 0.115, 7.0,
+                                family="deepseek"),
+    "llama-8b": ModelProfile("llama-8b", 16.0, 0.013, 0.120, 7.5,
+                             family="llama"),
+    "qwen-14b": ModelProfile("qwen-14b", 28.0, 0.021, 0.195, 11.0,
+                             family="qwen"),
+    "llama-3b": ModelProfile("llama-3b", 6.5, 0.006, 0.055, 3.2,
+                             family="llama"),
+}

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately simple O(S²)/unfused implementations — no
+chunking, no online softmax — so the kernels are validated against
+independent math, not against themselves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, KV, D]; GQA via H % KV == 0."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    qr = q.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, kf) * d ** -0.5
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window:
+        mask &= qi - ki < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q: [B, 1, H, D]; caches: [B, S, KV, D]; valid positions < cache_len."""
+    b, _, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    qr = q.reshape(b, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr,
+                        k_cache.astype(jnp.float32)) * d ** -0.5
+    valid = jnp.arange(s) < cache_len
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def moe_gemm_ref(x, w):
+    """Grouped GEMM: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba2_scan_ref(xh, b, c, dt, a_log):
+    """Sequential SSD recurrence (the exact math, step by step).
+
+    xh: [B, S, H, P]; b, c: [B, S, N]; dt: [B, S, H] (already softplus'd);
+    a_log: [H].  Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, b_t, c_t, dt_t = inp          # [B,H,P], [B,N], [B,N], [B,H]
+        decay = jnp.exp(dt_t * a[None])    # [B,H]
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, x_t, b_t)
+        y = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y
+
+    xs = (xh.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32))
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    fin, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), fin
+
+
+def rwkv6_scan_ref(r, k, v, w, bonus):
+    """Sequential RWKV6 recurrence.
+
+    r,k,v,w: [B, S, H, D]; bonus: [H, D].
+    out_t = r_t S_{t-1} + (r_t · (bonus ⊙ k_t)) v_t ;  S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+    Returns (out [B, S, H, D], final state [B, H, D, D]).
+    """
+    b, s, h, d = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = (x.astype(jnp.float32) for x in inp)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, state)
+        diag = jnp.einsum("bhk,hk,bhk->bh", r_t, bonus.astype(jnp.float32),
+                          k_t)
+        out = out + diag[..., None] * v_t
+        state = state * w_t[..., None] + jnp.einsum(
+            "bhk,bhv->bhkv", k_t, v_t)
+        return state, out
+
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, w))
+    state0 = jnp.zeros((b, h, d, d), jnp.float32)
+    fin, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), fin

@@ -1,0 +1,473 @@
+"""Roofline-term extraction from compiled AOT artifacts.
+
+XLA's built-in ``cost_analysis()`` visits a ``while`` body ONCE, so any
+scan-over-layers model is undercounted by ~L×.  We therefore walk the
+optimized HLO text ourselves with trip-count multiplication (XLA
+annotates ``backend_config={"known_trip_count":{"n":...}}`` on counted
+loops) and derive:
+
+  * dot-FLOPs      — 2 · |result| · contraction-size per ``dot``
+                     (+ convolution approximation), the standard
+                     MFU numerator.
+  * HBM bytes      — Σ over top-level ops of (result + operand) bytes;
+                     fusion internals stay on-chip (their boundary
+                     counts), loop bodies multiply by trip count.
+                     This is a "perfect-fusion" traffic model.
+  * collective bytes — ring-algorithm estimates per collective op.
+
+All HLO shapes in an SPMD module are per-partition, so every quantity
+is per-chip.  Roofline terms with v5e constants:
+
+    compute    = dot_FLOPs / 197e12           [bf16 peak]
+    memory     = HBM bytes / 819e9             [HBM BW]
+    collective = ring bytes moved / 50e9       [ICI link]
+
+Ring models per collective (size = per-chip result bytes, n = group):
+    all-reduce         2 * size * (n-1)/n
+    all-gather         size * (n-1)/n
+    reduce-scatter     size * (n-1)
+    all-to-all         size * (n-1)/n
+    collective-permute size
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip, TPU v5e
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+"
+                     r"([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "reshape",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        total += _elems(dims) * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    result: str        # result shape text
+    op: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: list[_Instr]
+    shapes: dict[str, str]   # symbol -> result shape text
+
+
+def _parse_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = _Comp(m.group(1), [], {})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is None:
+            continue
+        cur.instrs.append(ins)
+        cur.shapes[ins.name] = ins.result
+    return comps
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+
+
+def _parse_instr(line: str) -> Optional["_Instr"]:
+    """Parse '%name = <type> op(args...), attrs' robustly.
+
+    Tuple result types may contain nested parens and /*index=k*/ comments
+    (which contain '='), so the type is skipped by paren balancing rather
+    than regex.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):           # tuple type: skip balanced parens
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    result = rest[: i + 1]
+                    rest = rest[i + 1:]
+                    break
+        else:
+            return None
+    else:                              # plain shape token
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        result = rest[:sp]
+        rest = rest[sp:]
+    rest = rest.lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    op = rest[:par].strip()
+    if not op or not re.fullmatch(r"[\w\-]+", op):
+        return None
+    paren = rest[par + 1:]
+    depth = 1
+    end = 0
+    for i, ch in enumerate(paren):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = _OPERAND_RE.findall(paren[:end])
+    return _Instr(name, result, op, operands, line)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    if "source_target_pairs" in line:
+        return 2
+    return 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_bytes_by_op: dict = dataclasses.field(default_factory=dict)
+    dynamic_loops: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.dynamic_loops += other.dynamic_loops
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        for k, v in other.coll_bytes_by_op.items():
+            self.coll_bytes_by_op[k] = (self.coll_bytes_by_op.get(k, 0.0)
+                                        + v * mult)
+
+
+class HloCostModel:
+    """Trip-count-aware cost walker over optimized HLO text."""
+
+    def __init__(self, hlo_text: str):
+        self.comps = _parse_computations(hlo_text)
+        self._memo: dict[str, HloCost] = {}
+        entry = None
+        for name in self.comps:
+            if name.startswith("main") or ".main" in name:
+                entry = name
+        if entry is None:    # fall back: last computation in file
+            entry = list(self.comps)[-1] if self.comps else None
+        self.entry = entry
+
+    def cost(self) -> HloCost:
+        if self.entry is None:
+            return HloCost()
+        return self._comp_cost(self.entry)
+
+    def _comp_cost(self, name: str) -> HloCost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = HloCost()   # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return self._memo[name]
+        c = HloCost()
+        for ins in comp.instrs:
+            if ins.op == "while":
+                m = _TRIP_RE.search(ins.line)
+                trip = int(m.group(1)) if m else 1
+                if not m:
+                    c.dynamic_loops += 1
+                body = _BODY_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                if body:
+                    c.add(self._comp_cost(body.group(1)), trip)
+                if cond:
+                    c.add(self._comp_cost(cond.group(1)), trip)
+                continue
+            if ins.op in ("call", "conditional"):
+                for callee in _CALLS_RE.findall(ins.line):
+                    c.add(self._comp_cost(callee))
+                # fall through: no self bytes for call
+                continue
+            if ins.op == "fusion":
+                callee = _CALLS_RE.search(ins.line)
+                if callee:
+                    sub = self._comp_cost(callee.group(1))
+                    # fusions keep internals on-chip: take flops +
+                    # collectives, not bytes
+                    c.dot_flops += sub.dot_flops
+                    c.coll_bytes += sub.coll_bytes
+                    c.bytes += self._fusion_bytes(comp, ins,
+                                                  callee.group(1))
+                else:
+                    c.bytes += self._io_bytes(comp, ins)
+                continue
+            if ins.op == "dynamic-update-slice":
+                c.bytes += self._dus_bytes(comp, ins)
+                continue
+            if ins.op == "dot":
+                c.dot_flops += self._dot_flops(comp, ins)
+                c.bytes += self._io_bytes(comp, ins)
+                continue
+            if ins.op == "convolution":
+                c.dot_flops += self._conv_flops(comp, ins)
+                c.bytes += self._io_bytes(comp, ins)
+                continue
+            if any(ins.op.startswith(col) for col in _COLLECTIVES):
+                if ins.op.endswith("-done"):
+                    continue
+                base = ins.op.replace("-start", "")
+                size = _shape_bytes(ins.result)
+                if base == "all-gather" and "-start" in ins.op:
+                    # all-gather-start result is a tuple (in, out)
+                    size = size // 2
+                n = max(_group_size(ins.line), 1)
+                if base == "all-reduce":
+                    mv = 2 * size * (n - 1) / n
+                elif base == "all-gather":
+                    mv = size * (n - 1) / n
+                elif base == "reduce-scatter":
+                    mv = size * (n - 1)
+                elif base in ("all-to-all", "ragged-all-to-all"):
+                    mv = size * (n - 1) / n
+                else:
+                    mv = size
+                c.coll_bytes += mv
+                c.coll_counts[base] = c.coll_counts.get(base, 0) + 1
+                c.coll_bytes_by_op[base] = (
+                    c.coll_bytes_by_op.get(base, 0.0) + mv)
+                c.bytes += self._io_bytes(comp, ins)
+                continue
+            if ins.op in _NO_TRAFFIC:
+                continue
+            c.bytes += self._io_bytes(comp, ins)
+        self._memo[name] = c
+        return c
+
+    def _io_bytes(self, comp: _Comp, ins: _Instr) -> float:
+        total = float(_shape_bytes(ins.result))
+        for op in ins.operands:
+            sh = comp.shapes.get(op)
+            if sh is not None:
+                total += _shape_bytes(sh)
+        return total
+
+    def _dus_bytes(self, comp: _Comp, ins: _Instr) -> float:
+        """dynamic-update-slice updates in place: traffic is the slice
+        (read+write) plus indices, not the full buffer."""
+        if len(ins.operands) >= 2:
+            upd = comp.shapes.get(ins.operands[1])
+            if upd is not None:
+                return 2.0 * _shape_bytes(upd) + 64.0
+        return self._io_bytes(comp, ins)
+
+    def _fusion_bytes(self, comp: _Comp, ins: _Instr,
+                      callee: str) -> float:
+        """Fusion boundary traffic; when the fused computation performs
+        an in-place dynamic-update-slice on a parameter that aliases the
+        fusion result (the donated-KV-cache pattern), the full buffer is
+        neither read nor rewritten — count the updated slice only."""
+        sub = self.comps.get(callee)
+        result_b = _shape_bytes(ins.result)
+        operand_b = 0.0
+        largest_op = 0.0
+        for op in ins.operands:
+            sh = comp.shapes.get(op)
+            if sh is not None:
+                b = _shape_bytes(sh)
+                operand_b += b
+                largest_op = max(largest_op, b)
+        total = float(result_b + operand_b)
+        if sub is not None:
+            for i2 in sub.instrs:
+                if i2.op == "dynamic-update-slice" and i2.operands:
+                    target = sub.shapes.get(i2.operands[0], "")
+                    tb = _shape_bytes(target)
+                    upd = (_shape_bytes(sub.shapes.get(i2.operands[1],
+                                                       ""))
+                           if len(i2.operands) > 1 else 0)
+                    if tb and abs(tb - result_b) < 1e-6 * max(tb, 1):
+                        # in-place update: drop full read+write, keep
+                        # the slice write + read
+                        total = max(0.0,
+                                    total - tb - min(tb, largest_op)
+                                    + 2.0 * upd)
+                        break
+        return total
+
+    def _dot_flops(self, comp: _Comp, ins: _Instr) -> float:
+        res_elems = 1
+        for dt, dims in _SHAPE_RE.findall(ins.result):
+            res_elems = _elems(dims)
+            break
+        m = _LHS_CDIMS_RE.search(ins.line)
+        lhs_shape = comp.shapes.get(ins.operands[0], "") if ins.operands \
+            else ""
+        ldims = _shape_dims(lhs_shape)
+        contract = 1
+        if m and ldims:
+            for idx in m.group(1).split(","):
+                if idx.strip():
+                    i = int(idx)
+                    if i < len(ldims):
+                        contract *= ldims[i]
+        return 2.0 * res_elems * contract
+
+    def _conv_flops(self, comp: _Comp, ins: _Instr) -> float:
+        res_elems = 1
+        for dt, dims in _SHAPE_RE.findall(ins.result):
+            res_elems = _elems(dims)
+            break
+        if len(ins.operands) < 2:
+            return 0.0
+        kshape = _shape_dims(comp.shapes.get(ins.operands[1], ""))
+        if not kshape:
+            return 0.0
+        # kernel [spatial..., in, out]: per-output MACs = prod(k)/out
+        out_f = kshape[-1] if kshape else 1
+        per_out = max(1, math.prod(kshape) // max(out_f, 1))
+        return 2.0 * res_elems * per_out
+
+
+def roofline_terms(compiled, *, model_flops_global: float,
+                   n_chips: int) -> dict:
+    """Derive the three terms + diagnostics from a compiled executable."""
+    hlo = compiled.as_text()
+    model = HloCostModel(hlo)
+    cost = model.cost()
+
+    xla_ca = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        xla_ca = {"flops": float(ca.get("flops", 0.0)),
+                  "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                  "note": "XLA visits while bodies once; see walker values"}
+    except Exception as e:   # pragma: no cover
+        xla_ca = {"error": str(e)}
+
+    compute_s = cost.dot_flops / PEAK_FLOPS
+    memory_s = cost.bytes / HBM_BW
+    collective_s = cost.coll_bytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:   # pragma: no cover - backend-specific
+        mem["error"] = str(e)
+
+    model_flops_chip = model_flops_global / n_chips
+    return {
+        "hlo_flops_per_chip": cost.dot_flops,
+        "hlo_bytes_per_chip": cost.bytes,
+        "collective_bytes_per_chip": cost.coll_bytes,
+        "collective_counts": cost.coll_counts,
+        "collective_bytes_by_op": cost.coll_bytes_by_op,
+        "dynamic_loops": cost.dynamic_loops,
+        **terms,
+        "dominant": dominant,
+        "model_flops_per_chip": model_flops_chip,
+        "useful_flop_ratio": (model_flops_chip / cost.dot_flops)
+        if cost.dot_flops else 0.0,
+        "roofline_bound_s": max(terms.values()),
+        "memory_analysis": mem,
+        "xla_cost_analysis": xla_ca,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D (train) or 2·N·D (inference) over active params."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens

@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+DOC = """Multi-pod AOT dry-run.
+
+For every (architecture × input shape) cell, lower + compile the
+train/prefill/decode step on the production meshes:
+
+    single-pod:  (16, 16)      axes (data, model)          256 chips
+    multi-pod:   (2, 16, 16)   axes (pod, data, model)     512 chips
+
+and record memory_analysis / cost_analysis / collective schedule +
+roofline terms as one JSON artifact per cell under ``results/dryrun``.
+The run is resumable: completed cells are skipped unless --force.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # multi-pod only
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES, cells_for
+from repro.configs.archs import ARCHS
+from repro.launch import analysis
+from repro.launch.mesh import (filter_spec, make_production_mesh,
+                               shardings_for, use_mesh)
+from repro.launch.steps import (abstract_serve_params, abstract_train_state,
+                                batch_specs_shardings, input_specs,
+                                make_decode_step, make_prefill_step,
+                                make_train_step)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _dp_size(mesh) -> int:
+    s = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        s *= mesh.shape["pod"]
+    return s
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with use_mesh(mesh):
+        specs = input_specs(cfg, shape_name)
+        batch_sh = batch_specs_shardings(mesh, cfg, shape_name)
+        if shape.kind == "train":
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            aparams, astate, pspecs, sspecs = abstract_train_state(cfg)
+            p_sh = shardings_for(mesh, aparams, pspecs)
+            s_sh = type(astate)(
+                step=NamedSharding(mesh, P()),
+                mu=shardings_for(mesh, astate.mu, sspecs.mu),
+                nu=shardings_for(mesh, astate.nu, sspecs.nu))
+            step_fn, model = make_train_step(
+                cfg, dp_size=_dp_size(mesh),
+                global_batch=shape.global_batch)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, s_sh, batch_sh),
+                out_shardings=(NamedSharding(mesh, P()), p_sh, s_sh),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(aparams, astate, specs)
+        else:
+            aparams, pspecs = abstract_serve_params(cfg)
+            p_sh = shardings_for(mesh, aparams, pspecs)
+            if shape.kind == "prefill":
+                step_fn, model = make_prefill_step(cfg)
+            else:
+                step_fn, model = make_decode_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(p_sh, batch_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(aparams, specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mf = analysis.model_flops(cfg, shape)
+    terms = analysis.roofline_terms(compiled, model_flops_global=mf,
+                                    n_chips=n_chips)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": int(n_chips),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "model_flops_global": mf,
+        **terms,
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    cells = []
+    for arch, cfg in ARCHS.items():
+        if args.arch and arch != args.arch:
+            continue
+        for _, shape_name in cells_for(cfg):
+            if args.shape and shape_name != args.shape:
+                continue
+            meshes = (["single", "multi"] if args.mesh == "both"
+                      else [args.mesh])
+            for m in meshes:
+                cells.append((arch, shape_name, m == "multi"))
+
+    print(f"dry-run: {len(cells)} cells", flush=True)
+    n_ok = n_fail = n_skip = 0
+    for arch, shape_name, multi in cells:
+        tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+        out = RESULTS / f"{tag}.json"
+        if out.exists() and not args.force:
+            prev = json.loads(out.read_text())
+            if "error" not in prev:
+                n_skip += 1
+                continue
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape_name, multi)
+            out.write_text(json.dumps(rec, indent=1, default=str))
+            n_ok += 1
+            print(f"OK   {tag:60s} compile={rec['compile_s']:8.1f}s "
+                  f"dominant={rec['dominant']:<12s} "
+                  f"bound={rec['roofline_bound_s']*1e3:9.2f}ms "
+                  f"useful={rec['useful_flop_ratio']:.3f}", flush=True)
+        except Exception as e:
+            n_fail += 1
+            err = {"arch": arch, "shape": shape_name,
+                   "mesh": "multi" if multi else "single",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            out.write_text(json.dumps(err, indent=1))
+            print(f"FAIL {tag:60s} {type(e).__name__}: {str(e)[:120]}",
+                  flush=True)
+        finally:
+            jax.clear_caches()
+    print(f"done: ok={n_ok} fail={n_fail} skipped={n_skip}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

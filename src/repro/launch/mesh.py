@@ -1,0 +1,102 @@
+"""Production mesh construction + spec filtering.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import DP, get_axis_env, resolve_spec, set_axis_env
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices exist (CPU tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Enter a mesh and set the DP axis environment for _shard()."""
+    axis_names = mesh.axis_names
+    dp = ("pod", "data") if "pod" in axis_names else ("data",)
+    old = get_axis_env()
+    set_axis_env({"dp": dp, "mesh": mesh})
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_axis_env(old)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= _axis_size(mesh, a)
+        return out
+    return mesh.shape[axis]
+
+
+def filter_spec(mesh: Mesh, shape: tuple, spec: tuple) -> P:
+    """Resolve DP placeholders and drop sharding on non-divisible dims.
+
+    Several configs have head/expert counts that do not divide the model
+    axis (e.g. qwen1.5 20 heads, granite 40 experts on a 16-wide axis);
+    those dims fall back to replication — the fallback is part of the
+    documented sharding policy, not an error.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    entries = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax == DP:
+            ax = dp
+        if ax is None:
+            entries.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        if dim % size == 0 and dim >= size:
+            entries.append(tuple(ax) if isinstance(ax, (tuple, list)) else ax)
+        else:
+            # try partial composite: e.g. DP=(pod,data) but dim only
+            # divides data
+            if isinstance(ax, (tuple, list)):
+                for sub in (ax[1:], ax[:1]):
+                    ssize = _axis_size(mesh, tuple(sub))
+                    if sub and dim % ssize == 0 and dim >= ssize:
+                        entries.append(tuple(sub) if len(sub) > 1
+                                       else sub[0])
+                        break
+                else:
+                    entries.append(None)
+            else:
+                entries.append(None)
+    return P(*entries)
+
+
+def shardings_for(mesh: Mesh, abstract: Any, specs: Any) -> Any:
+    """NamedSharding tree matching an abstract value tree + spec tree."""
+    def mk(av, sp):
+        entries = sp if isinstance(sp, P) else P(*sp)
+        fs = filter_spec(mesh, av.shape, tuple(entries))
+        return NamedSharding(mesh, fs)
+    return jax.tree.map(mk, abstract, specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

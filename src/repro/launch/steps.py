@@ -1,0 +1,199 @@
+"""train_step / serve_step builders + input_specs for every arch×shape.
+
+These are the functions the multi-pod dry-run lowers and compiles, and
+the same functions the real trainer/server jit on actual devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.models.families import build_model
+from repro.models.layers import DP, abstract_params, param_specs
+from repro.models.transformer import cache_specs, materialize_cache, _shard
+from repro.training import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _token_budget(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Decoder token positions (VLM reserves the patch prefix)."""
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Abstract model inputs for one (arch, shape) cell."""
+    shape = SHAPES[shape_name] if isinstance(shape_name, str) else shape_name
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    model = build_model(cfg)
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((gb, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((gb, s), i32)
+        if cfg.family == "audio":
+            specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        elif cfg.family == "vlm":
+            specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((gb, s), i32)
+        specs["cache"] = model.init_cache(gb, s, abstract=True)
+        if cfg.family == "audio":
+            specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        elif cfg.family == "vlm":
+            specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((gb, 1), i32)
+        specs["cache"] = model.init_cache(gb, s, abstract=True)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+    return specs
+
+
+def batch_specs_shardings(mesh, cfg: ArchConfig, shape_name: str):
+    """NamedShardings for the input_specs tree."""
+    from repro.launch.mesh import filter_spec
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    out = {}
+    sp = input_specs(cfg, shape_name)
+    for k, v in sp.items():
+        if k == "cache":
+            cspec = cache_specs(model.cache_defs(shape.global_batch,
+                                                 shape.seq_len))
+            out[k] = jax.tree.map(
+                lambda leaf_sds, leaf_spec: NamedSharding(
+                    mesh, filter_spec(mesh, leaf_sds.shape,
+                                      tuple(leaf_spec))),
+                v, cspec)
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = NamedSharding(
+                mesh, filter_spec(mesh, v.shape,
+                                  (DP,) + (None,) * (len(v.shape) - 1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step (microbatched grad accumulation + AdamW)
+# ---------------------------------------------------------------------------
+
+
+def resolve_microbatch(cfg: ArchConfig, global_batch: int,
+                       dp_size: int) -> int:
+    mb = max(cfg.microbatch, dp_size)
+    while global_batch % mb:
+        mb += dp_size
+    return min(mb, global_batch)
+
+
+def make_train_step(cfg: ArchConfig, *, dp_size: int, global_batch: int,
+                    opt_cfg: Optional[opt.AdamWConfig] = None,
+                    grad_compression=None):
+    """Returns train_step(params_f32, opt_state, batch) -> (loss, params,
+    opt_state).  Gradients are accumulated over microbatches with a
+    single deferred all-reduce (XLA emits the psum once, after the accum
+    scan — communication amortized over microbatches)."""
+    model = build_model(cfg)
+    ocfg = opt_cfg or opt.AdamWConfig()
+    mb = resolve_microbatch(cfg, global_batch, dp_size)
+    n_accum = global_batch // mb
+
+    def cast(p):
+        if p.dtype == jnp.float32 and p.ndim > 1:
+            return p.astype(cfg.dtype)
+        return p
+
+    def loss_fn(params, micro):
+        cparams = jax.tree.map(cast, params)
+        return model.train_loss(cparams, micro)
+
+    def train_step(params, opt_state, batch):
+        def reshape(x):
+            x = x.reshape((n_accum, mb) + x.shape[1:])
+            return x
+
+        micro_batches = jax.tree.map(reshape, batch)
+
+        def accum(carry, micro):
+            g_acc, l_acc = carry
+            micro = jax.tree.map(lambda x: _shard(
+                x, DP, *([None] * (x.ndim - 1))), micro)
+            loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+            if grad_compression is not None:
+                grads = grad_compression(grads)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(
+            accum, (g0, jnp.zeros((), jnp.float32)), micro_batches,
+            length=n_accum)
+        grads = jax.tree.map(lambda g: g / n_accum, grads)
+        new_params, new_state = opt.apply_updates(ocfg, params, grads,
+                                                  opt_state)
+        return loss_sum / n_accum, new_params, new_state
+
+    return train_step, model
+
+
+def make_prefill_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        ee = batch.get("extra_embeds")
+        logits, cache = model.prefill(params, batch["tokens"],
+                                      batch["cache"], ee)
+        return logits, cache
+
+    return prefill_step, model
+
+
+def make_decode_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def decode_step(params, batch):
+        logits, cache = model.decode_step(params, batch["token"],
+                                          batch["cache"], batch["pos"])
+        return logits, cache
+
+    return decode_step, model
+
+
+# ---------------------------------------------------------------------------
+# Abstract params / optimizer state for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def abstract_train_state(cfg: ArchConfig):
+    """(params_f32, opt_state) as ShapeDtypeStructs + matching specs."""
+    model = build_model(cfg)
+    defs = model.param_defs()
+    aparams = abstract_params(defs)
+    # canonical fp32 master params
+    aparams = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), aparams)
+    astate = opt.abstract_state(aparams)
+    specs = param_specs(defs)
+    sspecs = opt.state_specs(specs)
+    return aparams, astate, specs, sspecs
+
+
+def abstract_serve_params(cfg: ArchConfig):
+    model = build_model(cfg)
+    defs = model.param_defs()
+    return abstract_params(defs), param_specs(defs)

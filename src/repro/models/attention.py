@@ -1,0 +1,391 @@
+"""Attention in pure JAX: chunked online-softmax ("flash") prefill paths
+and cache-based decode paths.
+
+The chunked implementation keeps the materialized score block bounded at
+``[B, H, q_chunk, kv_chunk]`` regardless of sequence length — this is the
+XLA-path equivalent of the Pallas flash kernel in ``repro.kernels`` and
+is what the multi-pod dry-run lowers (Pallas cannot compile for the CPU
+backend; the kernels are validated separately in interpret mode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (DP, FSDP, TP, ParamDef, apply_rope,
+                                 shard_activation)
+
+NEG_INF = -1e30
+
+
+def _chunk_sizes(s: int, target: int) -> int:
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def seq_parallel_degree(num_heads: int) -> int:
+    """Sequence-parallel degree for the XLA attention path: when the
+    head count doesn't divide the model axis, attention cannot use the
+    model axis via head sharding and GSPMD replicates the whole O(S²)
+    computation across it (§Perf iteration 1).  Returns the model-axis
+    size to shard the query-chunk dimension over instead, or 1."""
+    from repro.models.layers import get_axis_env
+    env = get_axis_env()
+    if env is None:
+        return 1
+    mesh = env.get("mesh")
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    tp = mesh.shape["model"]
+    return 1 if num_heads % tp == 0 else tp
+
+
+def flash_attention_sp(q, k, v, *, causal=True, window=0, n_sp=1):
+    """Sequence-parallel chunked attention: the outer query-chunk dim is
+    a real tensor dim sharded on the model axis (a scan/map dim cannot
+    be sharded), with per-lane position offsets for causal masking."""
+    b, sq, h, d = q.shape
+    if n_sp <= 1 or sq % n_sp or (sq // n_sp) < 1:
+        return flash_attention(q, k, v, causal=causal, window=window)
+    from repro.models.layers import shard_activation, TP
+    qs = q.reshape(b, n_sp, sq // n_sp, h, d)
+    qs = shard_activation(qs, DP, TP, None, None, None)
+    offs = jnp.arange(n_sp) * (sq // n_sp)
+
+    def lane(qq, off):
+        return flash_attention(qq, k, v, causal=causal, window=window,
+                               q_offset=off)
+
+    out = jax.vmap(lane, in_axes=(1, 0), out_axes=1)(qs, offs)
+    return out.reshape(b, sq, h, d)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: int = 0,
+                    q_offset: jax.Array | int = 0,
+                    q_chunk: int = 512,
+                    kv_chunk: int = 512,
+                    bias: Optional[jax.Array] = None) -> jax.Array:
+    """Chunked online-softmax attention.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KV, D] with H % KV == 0 (GQA).
+    ``window > 0`` restricts attention to the last ``window`` positions
+    (sliding-window / local attention).  ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (for chunked prefill with history).
+    Returns [B, Sq, H, D].
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // kv
+    qc = _chunk_sizes(sq, q_chunk)
+    kc = _chunk_sizes(sk, kv_chunk)
+    nq, nk = sq // qc, sk // kc
+    scale = d ** -0.5
+
+    # [B, nq, qc, KV, G, D]
+    qr = q.reshape(b, nq, qc, kv, g, d)
+    kr = k.reshape(b, nk, kc, kv, d)
+    vr = v.reshape(b, nk, kc, kv, dv)
+
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, qc)
+    k_pos = jnp.arange(sk).reshape(nk, kc)
+
+    def q_block(args):
+        qb, qp = args                        # [B, qc, KV, G, D], [qc]
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kb, vb, kp = inp                 # [B, kc, KV, D], ..., [kc]
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), dtype=bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window:
+                mask &= qp[:, None] - kp[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, kv, g, qc, dv), jnp.float32)
+        m0 = jnp.full((b, kv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)         # [B, qc, KV, G, D]
+
+    out = jax.lax.map(q_block, (qr.swapaxes(0, 1), q_pos))
+    out = out.swapaxes(0, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array | int, *,
+                     window: int = 0) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: [B, 1, H, D]; k_cache/v_cache: [B, S, KV, D]. ``cache_len`` is the
+    number of valid cache positions (query position == cache_len).
+    The score tensor [B, H, S] is linear in S — decode never materializes
+    an S×S object.  With the cache sharded on S, XLA inserts the max/sum
+    all-reduces of a distributed (flash-decoding style) softmax.
+    """
+    b, _, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    qr = q.reshape(b, kv, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    pos = jnp.arange(s)
+    valid = pos < cache_len
+    if window:
+        valid &= pos >= cache_len - window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def gqa_defs(cfg) -> dict:
+    d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = cfg.dtype
+    defs = {
+        "wq": ParamDef((d, h, hd), (FSDP, TP, None), dt),
+        "wk": ParamDef((d, kv, hd), (FSDP, TP, None), dt),
+        "wv": ParamDef((d, kv, hd), (FSDP, TP, None), dt),
+        "wo": ParamDef((h, hd, d), (TP, None, FSDP), dt,
+                       fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), (TP, None), dt, init="zeros")
+        defs["bk"] = ParamDef((kv, hd), (TP, None), dt, init="zeros")
+        defs["bv"] = ParamDef((kv, hd), (TP, None), dt, init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), "float32", init="zeros")
+        defs["k_norm"] = ParamDef((hd,), (None,), "float32", init="zeros")
+    return defs
+
+
+def _qk_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def gqa_project_qkv(p: dict, cfg, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # pin batch (and heads when divisible) sharding: GSPMD otherwise
+    # replicates attention for head counts that don't divide the model
+    # axis (§Perf iteration 1)
+    q = shard_activation(q, DP, None, TP, None)
+    k = shard_activation(k, DP, None, TP, None)
+    v = shard_activation(v, DP, None, TP, None)
+    return q, k, v
+
+
+def gqa_attend(p: dict, cfg, x: jax.Array, positions: jax.Array, *,
+               causal: bool = True, window: int = 0,
+               cache: Optional[tuple] = None,
+               cache_len: jax.Array | int = 0):
+    """Full-sequence (train/prefill) or decode attention.
+
+    Returns (out, new_cache).  cache = (k_cache, v_cache) of static shape
+    [B, S_max, KV, D]; prefill writes positions [0, Sq); decode appends
+    at ``cache_len``.
+    """
+    b, sq, _ = x.shape
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    new_cache = None
+    if cache is not None:
+        k_cache, v_cache = cache
+        s_cache = k_cache.shape[1]
+        if sq == 1 and window and s_cache == window:
+            # rolling window cache: shift left, append at the end; valid
+            # entries are the last min(pos+1, W) slots.
+            k_cache = jnp.concatenate(
+                [k_cache[:, 1:], k.astype(k_cache.dtype)], axis=1)
+            v_cache = jnp.concatenate(
+                [v_cache[:, 1:], v.astype(v_cache.dtype)], axis=1)
+            eff = jnp.minimum(_as_idx(cache_len) + 1, window)
+            out = _windowed_decode(q, k_cache, v_cache, eff)
+            return _proj_out(p, out), (k_cache, v_cache)
+        if sq > 1 and s_cache < sq:
+            # prefill longer than the (windowed) cache: keep the tail
+            k_cache = k[:, -s_cache:].astype(k_cache.dtype)
+            v_cache = v[:, -s_cache:].astype(v_cache.dtype)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype),
+                (0, _as_idx(cache_len), 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype),
+                (0, _as_idx(cache_len), 0, 0))
+        new_cache = (k_cache, v_cache)
+        if sq == 1:   # decode against a full-length cache
+            out = decode_attention(q, k_cache, v_cache,
+                                   cache_len + 1, window=window)
+            return _proj_out(p, out), new_cache
+        # prefill attends over freshly computed k/v (cache == prefix here)
+    out = flash_attention_sp(q, k, v, causal=causal, window=window,
+                             n_sp=seq_parallel_degree(cfg.num_heads))
+    return _proj_out(p, out), new_cache
+
+
+def _windowed_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     eff: jax.Array) -> jax.Array:
+    """Decode over a rolling window cache whose last ``eff`` slots are
+    valid (newest entry at the end)."""
+    b, _, h, d = q.shape
+    _, w, kv, _ = k_cache.shape
+    g = h // kv
+    qr = q.reshape(b, kv, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    valid = jnp.arange(w) >= w - eff
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def _proj_out(p: dict, out: jax.Array) -> jax.Array:
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def _as_idx(x):
+    return x if isinstance(x, jax.Array) else jnp.int32(x)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_defs(cfg) -> dict:
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    dt = cfg.dtype
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    defs = {
+        "w_dkv": ParamDef((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                          (FSDP, None), dt),
+        "w_uk": ParamDef((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                         (None, TP, None), dt, fan_in_axes=(0,)),
+        "w_uv": ParamDef((m.kv_lora_rank, h, m.v_head_dim),
+                         (None, TP, None), dt, fan_in_axes=(0,)),
+        "wo": ParamDef((h, m.v_head_dim, d), (TP, None, FSDP), dt,
+                       fan_in_axes=(0, 1)),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), "float32",
+                            init="zeros"),
+    }
+    if m.q_lora_rank:
+        defs["w_dq"] = ParamDef((d, m.q_lora_rank), (FSDP, None), dt)
+        defs["w_uq"] = ParamDef((m.q_lora_rank, h, qd), (None, TP, None), dt,
+                                fan_in_axes=(0,))
+        defs["q_norm"] = ParamDef((m.q_lora_rank,), (None,), "float32",
+                                  init="zeros")
+    else:
+        defs["wq"] = ParamDef((d, h, qd), (FSDP, TP, None), dt)
+    return defs
+
+
+def _mla_queries(p: dict, cfg, x: jax.Array, positions: jax.Array):
+    from repro.models.layers import rms_norm
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+        cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attend(p: dict, cfg, x: jax.Array, positions: jax.Array, *,
+               cache: Optional[jax.Array] = None,
+               cache_len: jax.Array | int = 0):
+    """MLA with compressed-KV cache [B, S, kv_lora + rope_dim].
+
+    Decode uses the absorbed-matmul formulation: queries are projected
+    into the latent space, so per-step work is O(S * kv_lora) and the
+    cache stays compressed (the paper-exact memory saving of MLA).
+    """
+    from repro.models.layers import rms_norm
+    m = cfg.mla
+    b, sq, _ = x.shape
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+
+    new_cache = None
+    if cache is not None:
+        packed = jnp.concatenate([c, k_rope], axis=-1).astype(cache.dtype)
+        cache = jax.lax.dynamic_update_slice(
+            cache, packed, (0, _as_idx(cache_len), 0))
+        new_cache = cache
+        c_all = cache[..., : m.kv_lora_rank]
+        kr_all = cache[..., m.kv_lora_rank:]
+        if sq == 1:   # absorbed decode
+            qa = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])  # latent q
+            s_lat = jnp.einsum("bshr,btr->bhst", qa, c_all)
+            s_rope = jnp.einsum("bshe,bte->bhst", q_rope, kr_all)
+            scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+            scores = (s_lat + s_rope).astype(jnp.float32) * scale
+            t = c_all.shape[1]
+            valid = jnp.arange(t) < cache_len + 1
+            scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+            pr = jax.nn.softmax(scores, axis=-1)
+            lat = jnp.einsum("bhst,btr->bshr", pr.astype(c_all.dtype), c_all)
+            out = jnp.einsum("bshr,rhe->bshe", lat, p["w_uv"])
+            return jnp.einsum("bshe,hed->bsd", out, p["wo"]), new_cache
+        c, k_rope = c_all[:, : sq], kr_all[:, : sq]
+
+    # train / prefill: expand k, v per position (flash path)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c, p["w_uv"])
+    h = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (h, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    out = flash_attention(q_full, k_full, v, causal=True)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), new_cache

@@ -1,0 +1,481 @@
+"""Non-(decoder-only-attention) model families + the model registry.
+
+* :class:`RWKVLM`       — rwkv6-3b (attention-free; recurrent state cache)
+* :class:`Mamba2Hybrid` — zamba2-2.7b (Mamba2 backbone, shared attention
+                          block applied every ``attn_every`` layers)
+* :class:`EncDecLM`     — whisper-small (encoder stub-frontend + decoder
+                          with self- and cross-attention)
+
+``build_model(cfg)`` dispatches to the right class; every class exposes
+the uniform facade described in ``transformer.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (DP, FSDP, TP, ParamDef, abstract_params,
+                                 apply_ffn, embed_defs, ffn_defs,
+                                 init_params, norm_defs, param_specs,
+                                 rms_norm, stack_defs, unembed_logits)
+from repro.models.transformer import (CacheLeaf, DecoderLM, _remat, _shard,
+                                      materialize_cache, softmax_xent)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+class RWKVLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def _block_defs(self) -> dict:
+        cfg = self.cfg
+        d = rwkv_mod.rwkv6_defs(cfg)
+        d["ln_time"] = norm_defs(cfg.d_model)
+        d["ln_channel"] = norm_defs(cfg.d_model)
+        return d
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": embed_defs(cfg.vocab_size, cfg.d_model, cfg.dtype),
+            "ln_in": norm_defs(cfg.d_model),
+            "ln_f": norm_defs(cfg.d_model),
+            "head": ParamDef((cfg.d_model, cfg.vocab_size), (FSDP, TP),
+                             cfg.dtype),
+            "blocks": stack_defs(self._block_defs(), cfg.num_layers),
+        }
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def specs(self):
+        return param_specs(self.param_defs())
+
+    def _block(self, p, x, state):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln_time"], cfg.norm_eps)
+        t_out, t_state = rwkv_mod.rwkv6_time_mix(p, cfg, h, state)
+        x = x + t_out
+        h = rms_norm(x, p["ln_channel"], cfg.norm_eps)
+        c_out, c_state = rwkv_mod.rwkv6_channel_mix(p, cfg, h, state)
+        return x + c_out, {**t_state, **c_state}
+
+    def _run(self, params, x, states, remat=True):
+        cfg = self.cfg
+
+        def body(carry, layer):
+            p, st = layer
+            out, new_st = _remat(self._block, remat and cfg.remat)(
+                p, _shard(carry, DP, None, None), st)
+            return out, new_st
+
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+        return x, new_states
+
+    def _fresh_states(self, batch):
+        cfg = self.cfg
+        defs = rwkv_mod.rwkv6_state_defs(cfg, batch)
+        return {k: jnp.zeros((cfg.num_layers,) + s, jnp.dtype(dt))
+                for k, (s, dt) in defs.items()}
+
+    def forward(self, params, tokens, extra_embeds=None, remat=True):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = rms_norm(x, params["ln_in"], cfg.norm_eps)
+        x = _shard(x, DP, None, None)
+        states = self._fresh_states(tokens.shape[0])
+        x, _ = self._run(params, x, states, remat=remat)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = unembed_logits(x, params["head"], False)
+        return _shard(logits, DP, None, TP)
+
+    def train_loss(self, params, batch):
+        return softmax_xent(self.forward(params, batch["tokens"]),
+                            batch["labels"])
+
+    def cache_defs(self, batch, max_len):
+        cfg = self.cfg
+        defs = rwkv_mod.rwkv6_state_defs(cfg, batch)
+        spec = {"shift": (None, DP, None, None),
+                "wkv": (None, DP, TP, None, None),
+                "cshift": (None, DP, None, None)}
+        return {k: CacheLeaf((cfg.num_layers,) + s, dt, spec[k])
+                for k, (s, dt) in defs.items()}
+
+    def init_cache(self, batch, max_len, abstract=False):
+        return materialize_cache(self.cache_defs(batch, max_len), abstract)
+
+    def prefill(self, params, tokens, cache, extra_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = rms_norm(x, params["ln_in"], cfg.norm_eps)
+        x = _shard(x, DP, None, None)
+        x, states = self._run(params, x, cache, remat=False)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = unembed_logits(x[:, -1:], params["head"], False)
+        return _shard(logits, DP, None, TP), states
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = params["embed"][token]
+        x = rms_norm(x, params["ln_in"], cfg.norm_eps)
+        x, states = self._run(params, x, cache, remat=False)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = unembed_logits(x, params["head"], False)
+        return _shard(logits, DP, None, TP), states
+
+
+# ---------------------------------------------------------------------------
+# Zamba2: Mamba2 backbone + shared attention block every attn_every layers
+# ---------------------------------------------------------------------------
+
+
+class Mamba2Hybrid:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.ssm is not None
+        self.n_attn = (cfg.num_layers // cfg.attn_every
+                       if cfg.attn_every else 0)
+
+    def _ssm_block_defs(self):
+        cfg = self.cfg
+        return {"ln": norm_defs(cfg.d_model),
+                "ssm": ssm_mod.mamba2_defs(cfg)}
+
+    def _attn_block_defs(self):
+        cfg = self.cfg
+        return {"ln_attn": norm_defs(cfg.d_model),
+                "ln_ffn": norm_defs(cfg.d_model),
+                "attn": attn.gqa_defs(cfg),
+                "ffn": ffn_defs(cfg.d_model, cfg.d_ff, cfg.dtype)}
+
+    def param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": embed_defs(cfg.vocab_size, cfg.d_model, cfg.dtype),
+            "ln_f": norm_defs(cfg.d_model),
+            "head": ParamDef((cfg.d_model, cfg.vocab_size), (FSDP, TP),
+                             cfg.dtype),
+            "blocks": stack_defs(self._ssm_block_defs(), cfg.num_layers),
+            "shared_attn": self._attn_block_defs(),    # ONE shared block
+        }
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def specs(self):
+        return param_specs(self.param_defs())
+
+    def _attn_block(self, p, x, positions, cache, cache_len):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        a, new_cache = attn.gqa_attend(p["attn"], cfg, h, positions,
+                                       cache=cache, cache_len=cache_len)
+        x = x + a
+        h = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+        return x + apply_ffn(p["ffn"], h), new_cache
+
+    def _run(self, params, x, positions, ssm_states=None, kv_caches=None,
+             cache_len=0, decode=False, remat=True):
+        """Layer i: mamba block; after every attn_every-th layer the
+        shared attention block (same params, per-site KV cache)."""
+        cfg = self.cfg
+        k = cfg.attn_every
+        new_ssm, new_kv = [], []
+        for site in range(self.n_attn):
+            blk = jax.tree.map(lambda a: a[site * k:(site + 1) * k],
+                               params["blocks"])
+            st = (jax.tree.map(lambda a: a[site * k:(site + 1) * k],
+                               ssm_states) if ssm_states is not None
+                  else None)
+            x, ns = self._ssm_stack(blk, x, st, decode=decode, remat=remat)
+            new_ssm.append(ns)
+            kv = (jax.tree.map(lambda a: a[site], kv_caches)
+                  if kv_caches is not None else None)
+            kv_t = (kv["k"], kv["v"]) if kv is not None else None
+            x, nkv = self._attn_block(params["shared_attn"], x, positions,
+                                      kv_t, cache_len)
+            new_kv.append(nkv)
+        tail = cfg.num_layers - self.n_attn * k
+        if tail:
+            blk = jax.tree.map(lambda a: a[-tail:], params["blocks"])
+            st = (jax.tree.map(lambda a: a[-tail:], ssm_states)
+                  if ssm_states is not None else None)
+            x, ns = self._ssm_stack(blk, x, st, decode=decode, remat=remat)
+            new_ssm.append(ns)
+        cat = lambda parts: jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        states_out = cat(new_ssm) if ssm_states is not None else None
+        kv_out = (jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0),
+            *[{"k": c[0], "v": c[1]} for c in new_kv])
+            if kv_caches is not None else None)
+        return x, states_out, kv_out
+
+    def _ssm_stack(self, blocks, x, states, decode=False, remat=True):
+        cfg = self.cfg
+
+        def body(carry, layer):
+            p, st = layer
+            xc = _shard(carry, DP, None, None)
+            h = rms_norm(xc, p["ln"], cfg.norm_eps)
+            if decode:
+                out, ns = ssm_mod.mamba2_decode(p["ssm"], cfg, h, st)
+            else:
+                out, ns = ssm_mod.mamba2_forward(p["ssm"], cfg, h, state=st)
+            return carry + out, ns
+
+        def body_nostate(carry, p):
+            def blk(pp, xx):
+                h = rms_norm(xx, pp["ln"], cfg.norm_eps)
+                out, _ = ssm_mod.mamba2_forward(pp["ssm"], cfg, h)
+                return xx + out
+            return _remat(blk, remat and cfg.remat)(p, carry), None
+
+        if states is None:
+            x, _ = jax.lax.scan(body_nostate, x, blocks)
+            return x, None
+        x, new_states = jax.lax.scan(body, x, (blocks, states))
+        return x, new_states
+
+    def forward(self, params, tokens, extra_embeds=None, remat=True):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = _shard(x, DP, None, None)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        x, _, _ = self._run(params, x, positions, remat=remat)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _shard(unembed_logits(x, params["head"], False),
+                      DP, None, TP)
+
+    def train_loss(self, params, batch):
+        return softmax_xent(self.forward(params, batch["tokens"]),
+                            batch["labels"])
+
+    def cache_defs(self, batch, max_len):
+        cfg = self.cfg
+        ssm_defs = ssm_mod.mamba2_state_defs(cfg, batch)
+        hd = cfg.resolved_head_dim
+        return {
+            "ssm": {k: CacheLeaf((cfg.num_layers,) + s, dt,
+                                 (None, DP, TP, None, None) if k == "ssm"
+                                 else (None, DP, None, TP))
+                    for k, (s, dt) in ssm_defs.items()},
+            "kv": {
+                "k": CacheLeaf((self.n_attn, batch, max_len,
+                                cfg.num_kv_heads, hd), cfg.dtype,
+                               (None, DP, "model", None, None)),
+                "v": CacheLeaf((self.n_attn, batch, max_len,
+                                cfg.num_kv_heads, hd), cfg.dtype,
+                               (None, DP, "model", None, None)),
+            },
+        }
+
+    def init_cache(self, batch, max_len, abstract=False):
+        return materialize_cache(self.cache_defs(batch, max_len), abstract)
+
+    def prefill(self, params, tokens, cache, extra_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = _shard(x, DP, None, None)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        x, ssm_st, kv = self._run(params, x, positions,
+                                  ssm_states=cache["ssm"],
+                                  kv_caches=cache["kv"], cache_len=0,
+                                  remat=False)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = unembed_logits(x[:, -1:], params["head"], False)
+        return _shard(logits, DP, None, TP), {"ssm": ssm_st, "kv": kv}
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = params["embed"][token]
+        positions = jnp.full((1, 1), pos, jnp.int32)
+        x, ssm_st, kv = self._run(params, x, positions,
+                                  ssm_states=cache["ssm"],
+                                  kv_caches=cache["kv"], cache_len=pos,
+                                  decode=True, remat=False)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = unembed_logits(x, params["head"], False)
+        return _shard(logits, DP, None, TP), {"ssm": ssm_st, "kv": kv}
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+
+
+class EncDecLM:
+    """Encoder: bidirectional transformer over (stub) frame embeddings.
+    Decoder: causal self-attention + cross-attention to encoder output."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def _enc_block_defs(self):
+        cfg = self.cfg
+        return {"ln_attn": norm_defs(cfg.d_model),
+                "ln_ffn": norm_defs(cfg.d_model),
+                "attn": attn.gqa_defs(cfg),
+                "ffn": ffn_defs(cfg.d_model, cfg.d_ff, cfg.dtype)}
+
+    def _dec_block_defs(self):
+        d = self._enc_block_defs()
+        d["ln_cross"] = norm_defs(self.cfg.d_model)
+        d["cross"] = attn.gqa_defs(self.cfg)
+        return d
+
+    def param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": embed_defs(cfg.vocab_size, cfg.d_model, cfg.dtype),
+            "pos_enc": ParamDef((cfg.encoder_frames, cfg.d_model),
+                                (None, FSDP), cfg.dtype, init="small"),
+            "ln_f": norm_defs(cfg.d_model),
+            "ln_enc": norm_defs(cfg.d_model),
+            "head": ParamDef((cfg.d_model, cfg.vocab_size), (FSDP, TP),
+                             cfg.dtype),
+            "encoder": stack_defs(self._enc_block_defs(),
+                                  cfg.encoder_layers),
+            "decoder": stack_defs(self._dec_block_defs(), cfg.num_layers),
+        }
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def specs(self):
+        return param_specs(self.param_defs())
+
+    def encode(self, params, frames, remat=True):
+        """frames: [B, T, d] precomputed conv-frontend embeddings (stub)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + params["pos_enc"][None, : x.shape[1]]
+        x = _shard(x, DP, None, None)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(carry, p):
+            def blk(pp, xx):
+                h = rms_norm(xx, pp["ln_attn"], cfg.norm_eps)
+                a, _ = attn.gqa_attend(pp["attn"], cfg, h, positions,
+                                       causal=False)
+                xx = xx + a
+                h = rms_norm(xx, pp["ln_ffn"], cfg.norm_eps)
+                return xx + apply_ffn(pp["ffn"], h)
+            return _remat(blk, remat and cfg.remat)(p, carry), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    def _cross_attend(self, p, x, enc_out):
+        cfg = self.cfg
+        b, sq, _ = x.shape
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+        k = jnp.einsum("bsd,dke->bske", enc_out, p["wk"])
+        v = jnp.einsum("bsd,dke->bske", enc_out, p["wv"])
+        out = attn.flash_attention(q, k, v, causal=False)
+        return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+    def _dec_block(self, p, x, positions, enc_out, cache, cache_len):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        a, new_cache = attn.gqa_attend(p["attn"], cfg, h, positions,
+                                       cache=cache, cache_len=cache_len)
+        x = x + a
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + self._cross_attend(p["cross"], h, enc_out)
+        h = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+        return x + apply_ffn(p["ffn"], h), new_cache
+
+    def decode(self, params, tokens, enc_out, caches=None, cache_len=0,
+               remat=True):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = _shard(x, DP, None, None)
+        positions = (jnp.arange(tokens.shape[1])[None, :] + cache_len
+                     if tokens.shape[1] > 1
+                     else jnp.full((1, 1), cache_len, jnp.int32))
+
+        def body(carry, layer):
+            p, c = layer
+            kv = (c["k"], c["v"])
+            out, nkv = self._dec_block(p, carry, positions, enc_out, kv,
+                                       cache_len)
+            return out, {"k": nkv[0], "v": nkv[1]}
+
+        def body_nc(carry, p):
+            def blk(pp, xx):
+                out, _ = self._dec_block(pp, xx, positions, enc_out,
+                                         None, 0)
+                return out
+            return _remat(blk, remat and cfg.remat)(p, carry), None
+
+        if caches is None:
+            x, _ = jax.lax.scan(body_nc, x, params["decoder"])
+            new = None
+        else:
+            x, new = jax.lax.scan(body, x, (params["decoder"], caches))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _shard(unembed_logits(x, params["head"], False),
+                      DP, None, TP), new
+
+    def forward(self, params, tokens, extra_embeds=None, remat=True):
+        """extra_embeds = encoder frames [B, T, d]."""
+        enc = self.encode(params, extra_embeds, remat=remat)
+        logits, _ = self.decode(params, tokens, enc, remat=remat)
+        return logits
+
+    def train_loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"],
+                              batch["extra_embeds"])
+        return softmax_xent(logits, batch["labels"])
+
+    def cache_defs(self, batch, max_len):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        kv = lambda: CacheLeaf((cfg.num_layers, batch, max_len,
+                                cfg.num_kv_heads, hd), cfg.dtype,
+                               (None, DP, "model", None, None))
+        return {"self": {"k": kv(), "v": kv()},
+                "enc_out": CacheLeaf((batch, cfg.encoder_frames,
+                                      cfg.d_model), cfg.dtype,
+                                     (DP, None, None))}
+
+    def init_cache(self, batch, max_len, abstract=False):
+        return materialize_cache(self.cache_defs(batch, max_len), abstract)
+
+    def prefill(self, params, tokens, cache, extra_embeds=None):
+        enc = self.encode(params, extra_embeds, remat=False)
+        logits, new_self = self.decode(params, tokens, enc,
+                                       caches=cache["self"], cache_len=0)
+        return logits[:, -1:], {"self": new_self, "enc_out": enc}
+
+    def decode_step(self, params, token, cache, pos):
+        logits, new_self = self.decode(params, token, cache["enc_out"],
+                                       caches=cache["self"], cache_len=pos)
+        return logits, {"self": new_self, "enc_out": cache["enc_out"]}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        return RWKVLM(cfg)
+    if cfg.family == "hybrid":
+        return Mamba2Hybrid(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,221 @@
+"""Core pure-JAX building blocks shared by every architecture.
+
+Params are plain nested dicts of arrays.  Every parameter is declared
+once as a :class:`ParamDef` carrying its shape, dtype and
+``PartitionSpec``; the same declaration tree produces either abstract
+``ShapeDtypeStruct`` trees (for the AOT dry-run — no allocation) or
+concretely initialized arrays (for CPU smoke tests / examples).
+
+Sharding convention (axes named ``pod``/``data``/``model``):
+  * batch / token dims           -> ("pod", "data") combined as DP
+  * weight in-features           -> data axis  (FSDP-style 2D sharding)
+  * weight out-features / heads /
+    experts / vocab              -> model axis (TP / EP)
+Dims are sharded only when divisible by the mesh axis size; the spec
+tree is built mesh-agnostically and filtered at lowering time by
+:func:`repro.launch.mesh.filter_specs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# Named sharding atoms.  "dp" expands to ("pod", "data") on the
+# multi-pod mesh and ("data",) on the single-pod mesh (see launch.mesh).
+DP = "__dp__"      # data-parallel composite axis placeholder
+FSDP = "data"      # weight in-feature sharding axis
+TP = "model"       # tensor/expert-parallel axis
+
+# Active mesh-axis environment.  None => no mesh (CPU smoke tests):
+# sharding constraints become no-ops.  Set by repro.launch.mesh.use_mesh.
+_AXIS_ENV: dict | None = None
+
+
+def set_axis_env(env: dict | None) -> None:
+    global _AXIS_ENV
+    _AXIS_ENV = env
+
+
+def get_axis_env() -> dict | None:
+    return _AXIS_ENV
+
+
+def resolve_spec(spec: tuple) -> tuple | None:
+    """Resolve DP placeholders against the active env; None if no env."""
+    if _AXIS_ENV is None:
+        return None
+    out = []
+    for s in spec:
+        if s == DP:
+            out.append(_AXIS_ENV.get("dp"))
+        else:
+            out.append(s)
+    return tuple(out)
+
+
+def shard_activation(x, *spec):
+    """Sharding constraint with divisibility checks (GSPMD recovery).
+
+    ``spec`` entries: DP (data-parallel composite), TP, or None.  Any
+    axis whose size does not divide the dim is dropped — this is the
+    §Perf fix for GSPMD losing batch sharding in attention for archs
+    whose head counts don't divide the model axis (it then replicated
+    the whole computation; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    env = _AXIS_ENV
+    if env is None:
+        return x
+    import jax as _jax
+    from jax.sharding import PartitionSpec as _P
+    mesh = env.get("mesh")
+    if mesh is None:
+        return x
+
+    def axis_size(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[ax]
+
+    entries = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == DP:
+            ax = env.get("dp")
+        n = axis_size(ax)
+        if ax is not None and n > 1 and dim % n == 0:
+            entries.append(tuple(ax) if isinstance(ax, (tuple, list))
+                           else ax)
+        else:
+            entries.append(None)
+    return _jax.lax.with_sharding_constraint(x, _P(*entries))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: tuple[Any, ...]            # PartitionSpec entries (may contain DP)
+    dtype: str = "bfloat16"
+    init: str = "normal"             # normal | zeros | ones | small
+    fan_in_axes: tuple[int, ...] = (-2,)
+
+
+ParamTree = Any     # nested dict of ParamDef / arrays / ShapeDtypeStruct
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], defs: ParamTree) -> ParamTree:
+    return jax.tree.map(fn, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def abstract_params(defs: ParamTree) -> ParamTree:
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)), defs)
+
+
+def param_specs(defs: ParamTree) -> ParamTree:
+    return tree_map_defs(lambda d: P(*d.spec), defs)
+
+
+def init_params(defs: ParamTree, key: jax.Array) -> ParamTree:
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = jnp.dtype(d.dtype)
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = 1
+            for ax in d.fan_in_axes:
+                fan_in *= d.shape[ax]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            if d.init == "small":
+                scale *= 0.1
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    angles = angles[..., None, :]                      # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def ffn_defs(d_model: int, d_ff: int, dtype: str) -> dict:
+    return {
+        "gate": ParamDef((d_model, d_ff), (FSDP, TP), dtype),
+        "up": ParamDef((d_model, d_ff), (FSDP, TP), dtype),
+        "down": ParamDef((d_ff, d_model), (TP, FSDP), dtype),
+    }
+
+
+def apply_ffn(p: dict, x: jax.Array) -> jax.Array:
+    return swiglu(x, p["gate"], p["up"], p["down"])
+
+
+def norm_defs(d_model: int, dtype: str = "float32") -> ParamDef:
+    return ParamDef((d_model,), (None,), dtype, init="zeros")
+
+
+def embed_defs(vocab: int, d_model: int, dtype: str) -> ParamDef:
+    return ParamDef((vocab, d_model), (TP, FSDP), dtype, fan_in_axes=(-1,))
+
+
+def unembed_logits(x: jax.Array, w_embed_or_head: jax.Array,
+                   transpose: bool) -> jax.Array:
+    if transpose:      # tied: w is [vocab, d]
+        return jnp.einsum("...d,vd->...v", x, w_embed_or_head)
+    return jnp.einsum("...d,dv->...v", x, w_embed_or_head)
+
+
+def stack_defs(defs: ParamTree, n: int, axis_spec: Any = None) -> ParamTree:
+    """Stack per-layer ParamDefs along a leading layer axis (for lax.scan)."""
+    def s(d: ParamDef) -> ParamDef:
+        fan = tuple(a - 1 if a >= 0 else a for a in d.fan_in_axes)
+        return ParamDef((n,) + d.shape, (axis_spec,) + d.spec, d.dtype,
+                        d.init, fan)
+    return tree_map_defs(s, defs)

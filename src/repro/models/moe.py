@@ -1,0 +1,161 @@
+"""Mixture-of-experts with sort-based capacity dispatch (TPU-native).
+
+TPU prefers regular GEMMs over scatter: tokens are sorted by assigned
+expert, gathered into a dense [E, C, d] block and processed with one
+grouped einsum per FFN matrix — the XLA analogue of a MegaBlocks grouped
+GEMM, with experts sharded on the ``model`` axis (expert parallelism)
+when divisible, falling back to within-expert tensor parallelism.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, FSDP, TP
+
+
+def moe_defs(cfg) -> dict:
+    m, d, dt = cfg.moe, cfg.d_model, cfg.dtype
+    e = m.num_experts
+    # Expert weights: experts on the model axis (EP) when divisible;
+    # launch.mesh.filter_specs falls back to d_expert sharding otherwise.
+    defs = {
+        "router": ParamDef((d, e), (FSDP, None), "float32"),
+        "w_gate": ParamDef((e, d, m.d_expert), (TP, FSDP, None), dt),
+        "w_up": ParamDef((e, d, m.d_expert), (TP, FSDP, None), dt),
+        "w_down": ParamDef((e, m.d_expert, d), (TP, None, FSDP), dt,
+                           fan_in_axes=(1,)),
+    }
+    if m.num_shared_experts:
+        ds = m.d_shared * m.num_shared_experts
+        defs["shared"] = {
+            "gate": ParamDef((d, ds), (FSDP, TP), dt),
+            "up": ParamDef((d, ds), (FSDP, TP), dt),
+            "down": ParamDef((ds, d), (TP, FSDP), dt),
+        }
+    return defs
+
+
+def _capacity(tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def apply_moe(p: dict, cfg, x: jax.Array) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d].
+
+    Dispatch is PER SAMPLE (capacity, sort and scatter batched over B):
+    a global token sort would contract across the data-parallel batch
+    dim and force GSPMD to all-gather every token to every chip — the
+    dominant collective in the §Perf baseline (EXPERIMENTS.md iteration
+    2).  Per-sample dispatch keeps the batch dim intact, so DP sharding
+    flows through the whole MoE layer; the expert GEMMs contract only
+    sample-local dims.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    cap = _capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, m.top_k)              # [B, S, K]
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # flatten (token, k) pairs within each sample; sort by expert
+    flat_e = top_e.reshape(b, s * m.top_k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), m.top_k)[None], (b, s * m.top_k))
+    flat_g = top_g.reshape(b, s * m.top_k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    # position within expert = running index − first occurrence index
+    first_idx = jax.vmap(jnp.searchsorted)(
+        se, jnp.broadcast_to(jnp.arange(m.num_experts),
+                             (b, m.num_experts)))
+    pos_in_e = (jnp.arange(se.shape[-1])[None]
+                - jnp.take_along_axis(first_idx, se, axis=-1))
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, m.num_experts * cap)
+
+    xt = jnp.take_along_axis(x, st[..., None], axis=1)        # [B,S*K,d]
+    gathered = jnp.zeros((b, m.num_experts * cap + 1, d), x.dtype)
+    gathered = _batched_scatter_set(gathered, slot,
+                                    xt * keep[..., None])
+    xe = gathered[:, :-1].reshape(b, m.num_experts, cap, d)
+
+    # When the expert count doesn't divide the model axis (granite: 40
+    # experts, 16-wide axis) EP is impossible and GSPMD resolves the
+    # d-contraction by partial-summing multi-GB activations across the
+    # data axis; gathering the (tiny) expert weights at the use point is
+    # orders of magnitude cheaper (§Perf iteration 3).
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if _replicate_expert_weights(m.num_experts):
+        from jax.sharding import PartitionSpec as P
+        rep = P(None, None, None)
+        wg = jax.lax.with_sharding_constraint(wg, rep)
+        wu = jax.lax.with_sharding_constraint(wu, rep)
+        wd = jax.lax.with_sharding_constraint(wd, rep)
+
+    from repro.models.layers import DP, TP, shard_activation
+    xe = shard_activation(xe, DP, TP, None, None)
+    g = shard_activation(jnp.einsum("becd,edf->becf", xe, wg),
+                         DP, TP, None, None)
+    u = shard_activation(jnp.einsum("becd,edf->becf", xe, wu),
+                         DP, TP, None, None)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    ye = shard_activation(jnp.einsum("becf,efd->becd", h, wd),
+                          DP, TP, None, None)
+
+    yf = ye.reshape(b, m.num_experts * cap, d)
+    safe_slot = jnp.minimum(slot, m.num_experts * cap - 1)
+    picked = jnp.take_along_axis(yf, safe_slot[..., None], axis=1)
+    contrib = jnp.where(keep, sg, 0.0)[..., None].astype(yf.dtype)
+    y = _batched_scatter_add(jnp.zeros((b, s, d), yf.dtype), st,
+                             picked * contrib * keep[..., None])
+
+    if m.num_shared_experts:
+        from repro.models.layers import apply_ffn
+        y = y + apply_ffn(p["shared"], x)
+    return y
+
+
+def _replicate_expert_weights(num_experts: int) -> bool:
+    from repro.models.layers import get_axis_env
+    env = get_axis_env()
+    if env is None:
+        return False
+    mesh = env.get("mesh")
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    tp = mesh.shape["model"]
+    return tp > 1 and num_experts % tp != 0
+
+
+def _batched_scatter_set(target, idx, updates):
+    """target[b, idx[b, i]] = updates[b, i] (batched scatter-set)."""
+    def one(t, i, u):
+        return t.at[i].set(u)
+    return jax.vmap(one)(target, idx, updates)
+
+
+def _batched_scatter_add(target, idx, updates):
+    def one(t, i, u):
+        return t.at[i].add(u)
+    return jax.vmap(one)(target, idx, updates)
+
+
+def aux_load_balance_loss(p: dict, cfg, x: jax.Array) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss (used by train_step)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, top_e = jax.lax.top_k(gates, m.top_k)
+    frac = jnp.mean(jax.nn.one_hot(top_e, m.num_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    prob = jnp.mean(gates, axis=0)
+    return m.num_experts * jnp.sum(frac * prob)

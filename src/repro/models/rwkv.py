@@ -1,0 +1,193 @@
+"""RWKV-6 ("Finch") blocks: data-dependent-decay linear attention.
+
+Time-mix state: S [B, H, K, V] plus the previous-token shift x_prev;
+channel-mix state: previous-token shift.  Chunked parallel form for
+train/prefill (per-chunk GEMMs + sequential carry), O(1) decode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, FSDP, TP
+
+
+def rwkv6_defs(cfg) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+    return {
+        "time": {
+            "mix": ParamDef((5, d), (None, None), "float32", init="small"),
+            "wr": ParamDef((d, d), (FSDP, TP), dt),
+            "wk": ParamDef((d, d), (FSDP, TP), dt),
+            "wv": ParamDef((d, d), (FSDP, TP), dt),
+            "wg": ParamDef((d, d), (FSDP, TP), dt),
+            # data-dependent decay: low-rank ddlerp
+            "w_decay_a": ParamDef((d, 64), (FSDP, None), dt),
+            "w_decay_b": ParamDef((64, d), (None, TP), dt, fan_in_axes=(0,)),
+            "decay_base": ParamDef((d,), (None,), "float32", init="zeros"),
+            "bonus": ParamDef((nh, hd), (TP, None), "float32", init="small"),
+            "wo": ParamDef((d, d), (TP, FSDP), dt),
+            "ln": ParamDef((d,), (None,), "float32", init="zeros"),
+        },
+        "channel": {
+            "mix": ParamDef((2, d), (None, None), "float32", init="small"),
+            "wk": ParamDef((d, cfg.d_ff), (FSDP, TP), dt),
+            "wv": ParamDef((cfg.d_ff, d), (TP, FSDP), dt),
+            "wr": ParamDef((d, d), (FSDP, TP), dt),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array]):
+    """Shifted sequence (previous token), carrying last token as state."""
+    if x.shape[1] == 1:
+        prev = x_prev if x_prev is not None else jnp.zeros_like(x)
+        return prev, x
+    shifted = jnp.concatenate(
+        [x_prev if x_prev is not None
+         else jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def _wkv_chunked(r, k, v, w, bonus, chunk, state0=None):
+    """Chunked RWKV6 recurrence.
+
+    r,k,v: [B,S,H,D]; w: [B,S,H,D] per-channel decay in (0,1).
+    state S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  out_t = r_t (S_{t-1} + bonus k_t v_t^T)
+    Returns (out [B,S,H,D], final state [B,H,D,D]).
+    """
+    b, s, h, d = r.shape
+    nc = s // chunk
+    rf = r.reshape(b, nc, chunk, h, d).astype(jnp.float32)
+    kf = k.reshape(b, nc, chunk, h, d).astype(jnp.float32)
+    vf = v.reshape(b, nc, chunk, h, d).astype(jnp.float32)
+    lw = jnp.log(jnp.clip(w.reshape(b, nc, chunk, h, d)
+                          .astype(jnp.float32), 1e-6, 1 - 1e-6))
+    cum = jnp.cumsum(lw, axis=2)                           # [B,nc,L,H,D]
+
+    def step(state, inp):
+        rc, kc, vc, lwc, cumc = inp                        # [B,L,H,D]...
+        # decay from chunk start up to (but excluding) position i
+        dec_in = jnp.exp(cumc - lwc)                       # prod w_1..w_{i-1}
+        # inter-chunk: (r_i ⊙ decay(<i)) @ S_prev
+        y_st = jnp.einsum("blhk,bhkv->blhv", rc * dec_in, state)
+        # intra-chunk causal part (factorized — no [B,i,j,H,D] blowup)
+        y_in = _intra_chunk(rc, kc, vc, lwc, cumc, bonus)
+        # state update: S_new = decay(total) S + sum_j decay(j+1..L) k_j v_j^T
+        total = cumc[:, -1]                                # [B,H,D]
+        tail = jnp.exp(total[:, None] - cumc)              # [B,L,H,D]
+        st_new = jnp.einsum("blhk,blhv->bhkv", kc * tail, vc)
+        state = state * jnp.exp(total)[..., None] + st_new
+        return state, y_st + y_in
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, d, d), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, state0,
+        (rf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+         lw.swapaxes(0, 1), cum.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).reshape(b, s, h, d), final
+
+
+def _intra_chunk(rc, kc, vc, lwc, cumc, bonus):
+    """Causal intra-chunk contribution, exact pairwise log-space form.
+
+    score(i,j) = sum_k r_ik * k_jk * exp(cum_i - lw_i - cum_j)_k  (i>j).
+    The exponent is a sum of per-step log-decays over s in (j, i), hence
+    always <= 0 — numerically safe for any decay magnitude (the
+    factorized e^{cum_i}·e^{-cum_j} split overflows; this form cannot).
+    Chunk length is kept small (cfg.rwkv.chunk) so the [B,L,L,H,D]
+    pairwise tensor stays VMEM-sized.  Diagonal adds the bonus term
+    r_i (bonus ⊙ k_i) v_i.
+    """
+    li = jnp.arange(rc.shape[1])
+    dij = cumc[:, :, None] - lwc[:, :, None] - cumc[:, None]  # [B,i,j,H,D]
+    strict = (li[:, None] > li[None, :])[None, :, :, None, None]
+    pair = jnp.where(strict, jnp.exp(jnp.minimum(dij, 0.0)), 0.0)
+    scores = jnp.einsum("bihk,bijhk,bjhk->bijh", rc, pair, kc)
+    y = jnp.einsum("bijh,bjhv->bihv", scores, vc)
+    diag = jnp.einsum("bihk,bihk->bih", rc * bonus[None, None], kc)
+    return y + diag[..., None] * vc
+
+
+def rwkv6_time_mix(p: dict, cfg, x: jax.Array, state: dict):
+    """Returns (out, new_state); state: {"shift": [B,1,d], "wkv": [B,H,D,D]}."""
+    t = p["time"]
+    hd = cfg.rwkv.head_dim
+    nh = cfg.d_model // hd
+    b, s, d = x.shape
+    shifted, last = _token_shift(x, state.get("shift"))
+    mix = t["mix"].astype(x.dtype)                         # [5, d]
+    xs = [x + (shifted - x) * mix[i][None, None] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xs[0], t["wr"]).reshape(b, s, nh, hd)
+    k = jnp.einsum("bsd,de->bse", xs[1], t["wk"]).reshape(b, s, nh, hd)
+    v = jnp.einsum("bsd,de->bse", xs[2], t["wv"]).reshape(b, s, nh, hd)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", xs[3], t["wg"])
+                       .astype(jnp.float32))
+    dec = jnp.einsum("bsd,dr->bsr", xs[4], t["w_decay_a"])
+    dec = jnp.einsum("bsr,rd->bsd", jnp.tanh(dec.astype(jnp.float32))
+                     .astype(x.dtype), t["w_decay_b"])
+    # w in (0,1): exp(-exp(base + dec))
+    w = jnp.exp(-jnp.exp(t["decay_base"][None, None]
+                         + dec.astype(jnp.float32)))
+    w = w.reshape(b, s, nh, hd)
+
+    if s == 1:
+        st = state["wkv"]
+        rf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+        out = jnp.einsum("bhk,bhkv->bhv", rf, st)
+        out = out + jnp.einsum("bhk,hk,bhk->bh", rf, t["bonus"], kf)[..., None] * vf
+        st = st * w[:, 0][..., None] + jnp.einsum("bhk,bhv->bhkv", kf, vf)
+        y = out.reshape(b, 1, d)
+        new = {"shift": last, "wkv": st}
+    else:
+        pad = (-s) % cfg.rwkv.chunk
+        if pad:
+            # state-neutral padding: k=v=0 and w=1 leave the state intact
+            zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r_, k_, v_ = zp(r), zp(k), zp(v)
+            w_ = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                         constant_values=1.0)
+        else:
+            r_, k_, v_, w_ = r, k, v, w
+        y, st = _wkv_chunked(r_, k_, v_, w_, t["bonus"], cfg.rwkv.chunk,
+                             state.get("wkv"))
+        y = y[:, :s].reshape(b, s, d)
+        new = {"shift": last, "wkv": st}
+    y = _ln(y, t["ln"], cfg.norm_eps) * gate.reshape(b, s, d).astype(jnp.float32)
+    return jnp.einsum("bsd,de->bse", y.astype(x.dtype), t["wo"]), new
+
+
+def rwkv6_channel_mix(p: dict, cfg, x: jax.Array, state: dict):
+    c = p["channel"]
+    shifted, last = _token_shift(x, state.get("cshift"))
+    mix = c["mix"].astype(x.dtype)
+    xk = x + (shifted - x) * mix[0][None, None]
+    xr = x + (shifted - x) * mix[1][None, None]
+    k = jnp.einsum("bsd,df->bsf", xk, c["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, c["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, c["wr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return r * kv, {"cshift": last}
+
+
+def _ln(y: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    return (yf - mu) * jax.lax.rsqrt(var + eps) * (1.0 + gamma)
+
+
+def rwkv6_state_defs(cfg, batch: int) -> dict:
+    hd = cfg.rwkv.head_dim
+    nh = cfg.d_model // hd
+    return {
+        "shift": ((batch, 1, cfg.d_model), cfg.dtype),
+        "wkv": ((batch, nh, hd, hd), "float32"),
+        "cshift": ((batch, 1, cfg.d_model), cfg.dtype),
+    }

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) blocks — chunked scan for train/prefill, O(1) recurrent
+state update for decode.
+
+The chunked formulation converts the per-token recurrence into dense
+per-chunk GEMMs (MXU-friendly) plus a short sequential carry over
+chunks — the TPU-native adaptation of the CUDA selective-scan kernel.
+Recurrent decode state: [B, H, d_head, N] per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, FSDP, TP
+
+
+def mamba2_defs(cfg) -> dict:
+    s, d, dt = cfg.ssm, cfg.d_model, cfg.dtype
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    return {
+        "w_in": ParamDef((d, 2 * d_in + 2 * s.state_dim + nh),
+                         (FSDP, TP), dt),
+        "conv": ParamDef((s.conv_width, d_in + 2 * s.state_dim),
+                         (None, TP), dt, init="small", fan_in_axes=(0,)),
+        "a_log": ParamDef((nh,), (TP,), "float32", init="zeros"),
+        "d_skip": ParamDef((nh,), (TP,), "float32", init="ones"),
+        "dt_bias": ParamDef((nh,), (TP,), "float32", init="zeros"),
+        "norm": ParamDef((d_in,), (TP,), "float32", init="zeros"),
+        "w_out": ParamDef((d_in, d), (TP, FSDP), dt),
+    }
+
+
+def _split_proj(p: dict, cfg, x: jax.Array):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * s.state_dim],
+                               axis=-1)
+    return z, xbc, dt_raw, d_in, nh
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width W.  state: [B, W-1, C] history."""
+    wdt = xbc.dtype
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), wdt)
+    else:
+        pad = state.astype(wdt)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i][None, None]
+              for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out.astype(jnp.float32)).astype(wdt), new_state
+
+
+def _ssd_chunked(xh, b, c, dt, a_log, chunk, state0=None):
+    """Chunked SSD: xh [B,S,H,P], b/c [B,S,N], dt [B,S,H] (softplus'd).
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s, h, pdim = xh.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    a = -jnp.exp(a_log)                                   # [H]
+    dta = dt * a[None, None]                              # [B,S,H] (<=0)
+
+    xr = xh.reshape(bsz, nc, chunk, h, pdim)
+    br = b.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cr = c.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    dtar = dta.reshape(bsz, nc, chunk, h)
+    cum = jnp.cumsum(dtar, axis=2)                        # [B,nc,L,H]
+
+    def chunk_step(state, inp):
+        xc, bc, cc, dtc, cumc, dtac = inp   # leading dim B
+        total = cumc[:, -1]                               # [B,H]
+        # intra-chunk (causal) contribution
+        li = jnp.arange(chunk)
+        decay = cumc[:, :, None, :] - cumc[:, None, :, :]  # [B,i,j,H]
+        mask = li[:, None] >= li[None, :]
+        g = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        sb = jnp.einsum("bin,bjn->bij", cc, bc)           # [B,i,j]
+        m = sb[..., None] * g                             # [B,i,j,H]
+        y_in = jnp.einsum("bijh,bjh,bjhp->bihp",
+                          m, dtc, xc.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        state_decay = jnp.exp(cumc)                       # [B,L,H]
+        y_st = jnp.einsum("bin,bhpn,bih->bihp", cc, state, state_decay)
+        # update carried state
+        in_decay = jnp.exp(total[:, None, :] - cumc)      # [B,L,H]
+        st_new = jnp.einsum("blh,blh,blhp,bln->bhpn",
+                            in_decay, dtc, xc.astype(jnp.float32), bc)
+        state = state * jnp.exp(total)[:, :, None, None] + st_new
+        return state, (y_in + y_st)
+
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    final, ys = jax.lax.scan(
+        chunk_step, state0,
+        (xr.swapaxes(0, 1), br.swapaxes(0, 1), cr.swapaxes(0, 1),
+         dtr.swapaxes(0, 1), cum.swapaxes(0, 1), dtar.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, h, pdim)
+    return y, final
+
+
+def mamba2_forward(p: dict, cfg, x: jax.Array, *,
+                   state: Optional[dict] = None):
+    """Full-sequence forward.  Returns (out, new_state) where state
+    carries {"ssm": [B,H,P,N], "conv": [B,W-1,C]} for chunked prefill."""
+    s = cfg.ssm
+    z, xbc, dt_raw, d_in, nh = _split_proj(p, cfg, x)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv"], conv_state)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(*xs.shape[:2], nh, s.head_dim)
+    st0 = state["ssm"] if state is not None else None
+    seq = xh.shape[1]
+    pad = (-seq) % s.chunk
+    if pad:
+        # state-neutral padding: dt=0 => no decay and no state update
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xh, b, c, dt = zp(xh), zp(b), zp(c), zp(dt)
+    y, fin = _ssd_chunked(xh, b, c, dt, p["a_log"], s.chunk, st0)
+    if pad:
+        y = y[:, :seq]
+        xh = xh[:, :seq]
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(*xs.shape[:2], d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = _group_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_state = {"ssm": fin, "conv": new_conv}
+    return out, new_state
+
+
+def mamba2_decode(p: dict, cfg, x: jax.Array, state: dict):
+    """Single-token recurrent step.  x: [B, 1, d]."""
+    s = cfg.ssm
+    z, xbc, dt_raw, d_in, nh = _split_proj(p, cfg, x)
+    xbc, new_conv = _causal_conv(xbc, p["conv"], state["conv"])
+    xs, b, c = jnp.split(xbc, [d_in, d_in + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    xh = xs.reshape(xs.shape[0], nh, s.head_dim).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)
+    cv = c[:, 0].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None])                          # [B,H]
+    ssm = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bv)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cv)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = _group_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"ssm": ssm, "conv": new_conv}
+
+
+def _group_norm(y: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = y.dtype
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def mamba2_state_defs(cfg, batch: int) -> dict:
+    """Abstract per-layer state shapes (for cache construction)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    return {
+        "ssm": ((batch, nh, s.head_dim, s.state_dim), "float32"),
+        "conv": ((batch, s.conv_width - 1, d_in + 2 * s.state_dim),
+                 cfg.dtype),
+    }

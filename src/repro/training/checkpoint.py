@@ -1,0 +1,103 @@
+"""Mesh-independent sharded checkpointing (pure JAX + msgpack).
+
+Layout: one manifest (tree structure, global shapes/dtypes, step) plus
+one blob file per host-shard.  Arrays are saved by GLOBAL shape, so a
+checkpoint written under one mesh restores under any other mesh (or none)
+— the elastic-rescale primitive.  On multi-host deployments each host
+writes its addressable shards; this container is single-host, where the
+process holds everything.
+
+Fault-tolerance contract used by the trainer:
+  * atomic write (tmp dir + rename) — a crash never corrupts the latest
+    checkpoint;
+  * ``latest_step`` scans for the newest complete manifest;
+  * restore validates structure + shapes before any device placement.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree: Any) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [{"shape": list(np.shape(x)),
+                    "dtype": str(jnp.asarray(x).dtype)} for x in leaves],
+        "format": 1,
+    }
+    blobs = []
+    for x in leaves:
+        arr = np.asarray(jax.device_get(x))
+        blobs.append(arr.tobytes())
+    with open(tmp / "shard_0.msgpack", "wb") as f:
+        msgpack.pack(blobs, f)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str | Path, step: int,
+                       target: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` optionally re-shards each leaf —
+    pass shardings built for a DIFFERENT mesh to rescale elastically."""
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    with open(path / "shard_0.msgpack", "rb") as f:
+        blobs = msgpack.unpack(f)
+    t_leaves, treedef = _flatten(target)
+    if len(blobs) != len(t_leaves):
+        raise ValueError(
+            f"checkpoint has {len(blobs)} leaves, target {len(t_leaves)}")
+    out = []
+    infos = manifest["leaves"]
+    s_leaves = (jax.tree.flatten(shardings)[0]
+                if shardings is not None else [None] * len(t_leaves))
+    for blob, info, tgt, sh in zip(blobs, infos, t_leaves, s_leaves):
+        arr = np.frombuffer(blob, dtype=np.dtype(info["dtype"])) \
+            .reshape(info["shape"])
+        if tuple(arr.shape) != tuple(np.shape(tgt)):
+            raise ValueError(
+                f"shape mismatch: ckpt {arr.shape} vs target "
+                f"{np.shape(tgt)}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

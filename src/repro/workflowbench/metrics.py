@@ -1,0 +1,44 @@
+"""Metric definitions (paper Appendix C.2).
+
+NormMS(m)  = exp( mean_i log(T_{m,i} / T_{RR,i}) )
+NormP95(m) = exp( mean_i log(L95_{m,i} / L95_{RR,i}) )
+XDevEdge   = Σ cross_device_parent_edges / Σ workflow_tasks
+CacheScore = Σ prefix_cache_hits_est / Σ workflow_tasks
+ModelCont  = Σ same_model_continuations / Σ workflow_tasks
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Sequence
+
+
+def geomean(xs: Sequence[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return float("nan")
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def normalized(values: dict[str, float], baseline: dict[str, float]
+               ) -> list[float]:
+    """Per-instance ratios value/baseline over the strict intersection."""
+    out = []
+    for k, v in values.items():
+        b = baseline.get(k)
+        if b is not None and b > 0 and v > 0:
+            out.append(v / b)
+    return out
+
+
+def mechanism_rates(rows: Iterable[dict]) -> dict[str, float]:
+    rows = list(rows)
+    tot_tasks = sum(r["total_tasks"] for r in rows)
+    if tot_tasks == 0:
+        return {"xdev_edge": float("nan"), "cache_score": float("nan"),
+                "model_cont": float("nan")}
+    return {
+        "xdev_edge": sum(r["cross_device_edges"] for r in rows) / tot_tasks,
+        "cache_score": sum(r["prefix_hits_est"] for r in rows) / tot_tasks,
+        "model_cont": sum(r["same_model_continuations"]
+                          for r in rows) / tot_tasks,
+    }

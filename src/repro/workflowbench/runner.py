@@ -1,0 +1,127 @@
+"""Manifest runner: executes every scheduler on every workflow instance
+under the same runtime and exports one CSV per experiment
+(paper Appendix C.4 — "Evaluation pipeline and result provenance").
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import io
+from pathlib import Path
+from typing import Optional, Sequence
+
+from repro.core.costs import CostParams
+from repro.core.devices import Cluster, homogeneous_cluster
+from repro.core.executor import WorkflowExecutor, fresh_state
+from repro.core.policies import make_policy
+from repro.core.scoring import ScoreParams
+from repro.core.workflow import Workflow
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "workflow"
+
+
+@dataclasses.dataclass
+class RunRow:
+    wid: str
+    family: str
+    policy: str
+    num_queries: int
+    makespan: float
+    p95: float
+    cross_device_edges: int
+    prefix_hits_est: float
+    same_model_continuations: float
+    total_tasks: int
+    model_switches: int
+    solver_ms_mean: float = 0.0
+    solver_ms_max: float = 0.0
+    solver_solves: int = 0
+    solver_all_optimal: bool = True
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def run_one(wf: Workflow, policy_name: str, cluster: Cluster, *,
+            score_params: Optional[ScoreParams] = None,
+            cost_params: Optional[CostParams] = None,
+            policy_kwargs: Optional[dict] = None) -> RunRow:
+    state = fresh_state(cluster)
+    preload = wf.meta.get("preload_model")
+    if preload:
+        for d in cluster.ids():
+            state.residency[d] = preload
+    kwargs = dict(policy_kwargs or {})
+    if policy_name == "FATE" and score_params is not None:
+        kwargs["params"] = score_params
+    policy = make_policy(policy_name, **kwargs)
+    ex = WorkflowExecutor(state, cost_params)
+    res = ex.run(wf, policy)
+    row = RunRow(
+        wid=wf.wid, family=wf.family, policy=policy_name,
+        num_queries=wf.num_queries, makespan=res.makespan, p95=res.p95,
+        cross_device_edges=res.cross_device_edges,
+        prefix_hits_est=res.prefix_hits_est,
+        same_model_continuations=res.same_model_continuations,
+        total_tasks=res.total_tasks, model_switches=res.model_switches)
+    log = getattr(policy, "solve_log", None)
+    if log:
+        times = [r.wall_time * 1e3 for r in log]
+        row.solver_ms_mean = sum(times) / len(times)
+        row.solver_ms_max = max(times)
+        row.solver_solves = len(times)
+        row.solver_all_optimal = all(r.status == "OPTIMAL" for r in log)
+    return row
+
+
+def run_suite(workflows: Sequence[Workflow], policies: Sequence[str],
+              cluster: Optional[Cluster] = None, *,
+              score_params: Optional[ScoreParams] = None,
+              cost_params: Optional[CostParams] = None,
+              csv_name: Optional[str] = None) -> list[RunRow]:
+    cluster = cluster or homogeneous_cluster(8)
+    rows: list[RunRow] = []
+    for wf in workflows:
+        for pol in policies:
+            rows.append(run_one(wf, pol, cluster,
+                                score_params=score_params,
+                                cost_params=cost_params))
+    if csv_name:
+        export_csv(rows, csv_name)
+    return rows
+
+
+def export_csv(rows: Sequence[RunRow], name: str) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / name
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].as_dict()))
+        w.writeheader()
+        for r in rows:
+            w.writerow(r.as_dict())
+    return path
+
+
+def rows_to_tables(rows: Sequence[RunRow], baseline: str = "RoundRobin"):
+    """Aggregate rows into the Table 1 style summary."""
+    from repro.workflowbench.metrics import geomean, mechanism_rates
+    by_policy: dict[str, dict[str, RunRow]] = {}
+    for r in rows:
+        by_policy.setdefault(r.policy, {})[r.wid] = r
+    base = by_policy.get(baseline, {})
+    out: dict[str, dict] = {}
+    for pol, per_wid in by_policy.items():
+        ms_ratios, p95_ratios = [], []
+        for wid, r in per_wid.items():
+            b = base.get(wid)
+            if b and b.makespan > 0:
+                ms_ratios.append(r.makespan / b.makespan)
+                p95_ratios.append(r.p95 / b.p95)
+        mech = mechanism_rates([r.as_dict() for r in per_wid.values()])
+        out[pol] = {
+            "norm_ms": geomean(ms_ratios),
+            "norm_p95": geomean(p95_ratios),
+            **mech,
+            "n": len(per_wid),
+        }
+    return out

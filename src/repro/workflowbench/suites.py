@@ -1,0 +1,106 @@
+"""Controlled behavioural suites (paper §4.3, Appendix C.1 & D.2).
+
+* Prefix-reuse suite — workflow-style DAG templates over long-context
+  workloads with shared-prefix repeat ratios {0, 0.25, 0.5, 1.0}.
+  Cache-dominant: single model family, shardable workers.  Isolates
+  whether reuse alone explains the FATE gap (Table 2).
+
+* Conflict stress suite — appendix-only diagnostic (Table 9): layers of
+  parallel stages alternate model families while retaining
+  cache-relevant state along chains, so myopic residency/locality
+  following serializes onto the few warm devices, while a
+  future-state-aware planner balances creating new residencies against
+  queueing.  Four templates at repeat ratios {0, .25, .5, 1.0}
+  (workflow_cache_conflict_{000,025,050,100}).
+"""
+from __future__ import annotations
+
+from repro.core.workflow import Stage, Workflow
+
+RATIOS = (0.0, 0.25, 0.5, 1.0)
+
+
+def prefix_suite_instance(ratio: float, index: int,
+                          num_queries: int = 16) -> Workflow:
+    """Decompose -> W parallel long-context workers -> 2 verifiers ->
+    merge.  All stages one model (cache-dominant); workers shardable."""
+    model = "qwen-7b"
+    widths = [3, 4, 5, 6]
+    w = widths[index % len(widths)]
+    grp = f"pref-{ratio}-{index}:ctx"
+    stages: dict[str, Stage] = {
+        "decompose": Stage("decompose", model, base_cost={-1: 0.06},
+                           prefix_group=grp, shared_fraction=ratio,
+                           output_tokens=256.0, role="decomposition"),
+    }
+    for i in range(w):
+        stages[f"worker{i}"] = Stage(
+            f"worker{i}", model, max_shards=2, base_cost={-1: 0.14},
+            prefill_fraction=0.85,
+            prefix_group=grp, shared_fraction=ratio,
+            output_tokens=512.0, parents=("decompose",), role="worker")
+    for j in range(2):
+        stages[f"verify{j}"] = Stage(
+            f"verify{j}", model, max_shards=2, base_cost={-1: 0.08},
+            prefill_fraction=0.85,
+            prefix_group=grp, shared_fraction=ratio,
+            output_tokens=192.0,
+            parents=tuple(f"worker{i}" for i in range(w)
+                          if i % 2 == j), role="validation")
+    stages["merge"] = Stage(
+        "merge", model, base_cost={-1: 0.1}, prefill_fraction=0.85,
+        prefix_group=grp,
+        shared_fraction=ratio, output_tokens=512.0,
+        parents=("verify0", "verify1"), role="merge")
+    wf = Workflow(wid=f"prefix-{int(ratio*100):03d}-{index:02d}",
+                  stages=stages, num_queries=num_queries,
+                  family="prefix-reuse")
+    # cache-dominant same-model setting: the serving fleet is dedicated
+    # to this model family, so it is resident before the batch arrives
+    wf.meta["preload_model"] = model
+    return wf
+
+
+def prefix_suite(ratio: float, n_instances: int = 8,
+                 num_queries: int = 16) -> list[Workflow]:
+    return [prefix_suite_instance(ratio, i, num_queries)
+            for i in range(n_instances)]
+
+
+def conflict_suite_instance(ratio: float, index: int,
+                            num_queries: int = 16) -> Workflow:
+    """workflow_cache_conflict_<ratio>: depth D layers of P parallel
+    stages; layer models alternate between two families; each chain
+    retains a shared-prefix group, so reuse/residency following pulls
+    every chain onto the same 1-2 warm devices."""
+    models = ["qwen-7b", "llama-8b"]
+    depth, par = 8, 6
+    stages: dict[str, Stage] = {}
+    prev: list[str] = []
+    for lv in range(depth):
+        model = models[lv % 2]
+        cur = []
+        for pch in range(par):
+            sid = f"l{lv}c{pch}"
+            parents = (f"l{lv-1}c{pch}",) if lv else ()
+            stages[sid] = Stage(
+                sid, model, base_cost={-1: 0.11},
+                prefix_group=f"conf-{index}:chain{pch}",
+                shared_fraction=max(ratio, 0.01),
+                output_tokens=384.0, comm_weight=1.2,
+                parents=parents, role="worker")
+            cur.append(sid)
+        prev = cur
+    stages["final"] = Stage(
+        "final", models[0], base_cost={-1: 0.12},
+        output_tokens=512.0, parents=tuple(prev),
+        role="final_synthesis")
+    return Workflow(
+        wid=f"workflow_cache_conflict_{int(ratio*100):03d}-{index:02d}",
+        stages=stages, num_queries=num_queries, family="conflict")
+
+
+def conflict_suite(ratio: float, n_instances: int = 4,
+                   num_queries: int = 16) -> list[Workflow]:
+    return [conflict_suite_instance(ratio, i, num_queries)
+            for i in range(n_instances)]

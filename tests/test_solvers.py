@@ -1,0 +1,115 @@
+"""Solver correctness: generic mini-CP-SAT vs brute force (hypothesis),
+and the Hungarian frontier solver cross-validated against both."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cpsat import CpModel, CpSolver
+from repro.core.frontier_solver import (NEG, FrontierProblem,
+                                        solve_frontier_exact)
+
+
+def _brute_force(n_vars, weights, groups, imps):
+    best = 0.0
+    for bits in itertools.product([0, 1], repeat=n_vars):
+        if any(sum(bits[i] for i in g) > 1 for g in groups):
+            continue
+        if any(bits[a] == 1 and bits[b] == 0 for a, b in imps):
+            continue
+        best = max(best, sum(w * x for w, x in zip(weights, bits)))
+    return best
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.data())
+def test_cpsolver_matches_brute_force(data):
+    n = data.draw(st.integers(2, 9))
+    weights = data.draw(st.lists(
+        st.floats(-3, 6, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    m = CpModel()
+    vs = [m.new_bool_var() for _ in range(n)]
+    m.maximize(list(zip(vs, weights)))
+    groups = []
+    for _ in range(data.draw(st.integers(0, 3))):
+        idx = data.draw(st.lists(st.integers(0, n - 1), min_size=1,
+                                 max_size=min(4, n), unique=True))
+        m.add_at_most_one([vs[i] for i in idx])
+        groups.append(idx)
+    imps = []
+    for _ in range(data.draw(st.integers(0, 3))):
+        a = data.draw(st.integers(0, n - 1))
+        b = data.draw(st.integers(0, n - 1))
+        if a != b:
+            m.add_implication(vs[a], vs[b])
+            imps.append((a, b))
+    res = CpSolver().solve(m)
+    assert res.status == "OPTIMAL"
+    expect = _brute_force(n, weights, groups, imps)
+    assert abs(res.objective - expect) < 1e-6
+
+
+def _brute_frontier(rows, weights, n_dev):
+    keys = [(i, d) for i in range(len(rows)) for d in range(n_dev)
+            if weights[i][d] > NEG / 2]
+    best = 0.0
+    for r in range(min(len(keys), n_dev) + 1):
+        for combo in itertools.combinations(keys, r):
+            devs = [d for _, d in combo]
+            rws = [i for i, _ in combo]
+            if len(set(devs)) != len(devs) or len(set(rws)) != len(rws):
+                continue
+            assigned = set(rws)
+            ok = True
+            for i, (s, k) in enumerate(rows):
+                if k > 0 and i in assigned:
+                    lo = next(j for j, (ss, kk) in enumerate(rows)
+                              if ss == s and kk == k - 1)
+                    if lo not in assigned:
+                        ok = False
+                        break
+            if ok:
+                best = max(best, sum(weights[i][d] for i, d in combo))
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_frontier_solver_exact(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 10 ** 6)))
+    n_stages = data.draw(st.integers(1, 3))
+    n_dev = data.draw(st.integers(1, 3))
+    rows, weights = [], []
+    for s in range(n_stages):
+        for k in range(data.draw(st.integers(1, 2))):
+            rows.append((f"s{s}", k))
+            w = rng.uniform(-2, 5, n_dev)
+            w[rng.random(n_dev) < 0.25] = NEG
+            weights.append(w)
+    prob = FrontierProblem(rows, list(range(n_dev)), np.array(weights))
+    sol = solve_frontier_exact(prob)
+    assert sol.status == "OPTIMAL"
+    expect = _brute_frontier(rows, np.array(weights), n_dev)
+    assert abs(sol.objective - expect) < 1e-6
+    # assignment feasibility
+    devs = list(sol.assignment.values())
+    assert len(devs) == len(set(devs))
+    assigned = set(sol.assignment)
+    for (s, k) in assigned:
+        if k > 0:
+            assert (s, k - 1) in assigned, "slot monotonicity violated"
+
+
+def test_frontier_solver_speed():
+    rng = np.random.default_rng(3)
+    rows, weights = [], []
+    for s in range(64):
+        for k in range(2):
+            rows.append((f"s{s}", k))
+            weights.append(rng.uniform(0.1, 10, 8))
+    prob = FrontierProblem(rows, list(range(8)), np.array(weights))
+    sol = solve_frontier_exact(prob)
+    assert sol.status == "OPTIMAL"
+    assert sol.wall_time < 1.0

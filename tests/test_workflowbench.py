@@ -1,0 +1,65 @@
+"""Benchmark construction invariants + end-to-end scheduling results
+(the paper's qualitative claims as assertions)."""
+import pytest
+
+from repro.workflowbench.families import FAMILIES
+from repro.workflowbench.lift import (MAX_STAGES, build_instance,
+                                      build_benchmark)
+from repro.workflowbench.runner import run_suite, rows_to_tables
+
+
+def test_generator_deterministic():
+    a = build_instance("Montage", 0, 16)
+    b = build_instance("Montage", 0, 16)
+    assert set(a.stages) == set(b.stages)
+    for sid in a.stages:
+        assert a.stages[sid].model == b.stages[sid].model
+        assert a.stages[sid].base_cost == b.stages[sid].base_cost
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_lift_invariants(family):
+    wf = build_instance(family, 1, 16)
+    wf.validate()
+    assert 1 <= len(wf.stages) <= MAX_STAGES
+    # acyclic with complete levels
+    assert len(wf.topo_order) == len(wf.stages)
+    for st in wf.stages.values():
+        assert st.model in {"qwen-7b", "deepseek-7b", "llama-8b",
+                            "llama-3b", "qwen-14b"}
+        assert st.cost_on(0) > 0
+        assert st.max_shards in (1, 2)
+
+
+def test_fixed_model_families_single_model():
+    wf = build_instance("Srasearch", 0, 16)
+    assert len({st.model for st in wf.stages.values()}) == 1
+
+
+SLICE = [build_instance(fam, i, 16)
+         for fam in FAMILIES for i in range(2)]
+
+
+def test_fate_beats_roundrobin_and_baselines():
+    """Table 1's qualitative claims: FATE < all baselines < RR."""
+    rows = run_suite(SLICE, ["RoundRobin", "FATE", "KVFlow", "Helix",
+                             "Halo", "HEFT"])
+    tab = rows_to_tables(rows)
+    assert tab["FATE"]["norm_ms"] < 0.85
+    for pol in ["KVFlow", "Helix", "Halo", "HEFT"]:
+        assert tab[pol]["norm_ms"] < 1.0          # beat RR
+        assert tab["FATE"]["norm_ms"] <= tab[pol]["norm_ms"] + 0.02
+    # mechanism: FATE preserves the most state
+    assert tab["FATE"]["model_cont"] >= tab["Halo"]["model_cont"]
+    assert tab["FATE"]["cache_score"] >= tab["Helix"]["cache_score"]
+
+
+def test_ablation_future_planning_matters():
+    """Table 3's headline: removing future planning degrades the most."""
+    from repro.core.scoring import ScoreParams
+    rows_full = run_suite(SLICE, ["RoundRobin", "FATE"])
+    full = rows_to_tables(rows_full)["FATE"]["norm_ms"]
+    rows_nf = run_suite(SLICE, ["RoundRobin", "FATE"],
+                        score_params=ScoreParams(enable_future=False))
+    nf = rows_to_tables(rows_nf)["FATE"]["norm_ms"]
+    assert nf >= full - 1e-9, (full, nf)
