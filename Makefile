@@ -1,0 +1,22 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-sched bench-sched check
+
+test:
+	$(PYTHON) -m pytest -q
+
+# Scheduler tier: the suites that are green and need only numpy/scipy
+# (the seed's kernel tests fail on jax/pallas API drift and need an
+# accelerator toolchain CI does not have).
+test-sched:
+	$(PYTHON) -m pytest -q tests/test_executor.py tests/test_solvers.py \
+	  tests/test_workflowbench.py tests/test_score_matrix_parity.py
+
+bench-sched:
+	$(PYTHON) -m benchmarks.sched_bench --quick
+
+# CI smoke gate: scheduler tests + planner-throughput regression check
+# (sched_bench exits nonzero if the vectorized engine drops below the
+# 5x wide-frontier target or placements diverge from the scalar path).
+check: test-sched bench-sched

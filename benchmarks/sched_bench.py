@@ -1,0 +1,179 @@
+"""Planner-throughput benchmark: vectorized frontier-scoring engine vs
+the seed's scalar per-(stage, slot, device) loop.
+
+Sweeps frontier width × device count × horizon on a map/reduce-shaped
+DAG (each ready worker roots a fan-out subtree, so the horizon tail has
+real downstream demand to fold), checks that both paths emit
+bit-identical placements, and writes a ``BENCH_sched.json`` trajectory.
+
+    PYTHONPATH=src python -m benchmarks.sched_bench            # full grid
+    PYTHONPATH=src python -m benchmarks.sched_bench --quick    # smoke gate
+
+The wide-frontier config (32 ready × 16 devices, horizon 4) is the
+acceptance target: >= 5x planner wall-time speedup.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.devices import heterogeneous_cluster          # noqa: E402
+from repro.core.executor import fresh_state                   # noqa: E402
+from repro.core.planner import FrontierPlanner                # noqa: E402
+from repro.core.scoring import ScoreParams                    # noqa: E402
+from repro.core.workflow import Stage, Workflow               # noqa: E402
+
+MODELS = ["qwen-7b", "deepseek-7b", "llama-8b", "llama-3b", "qwen-14b"]
+REPO_ROOT = Path(__file__).resolve().parents[1]
+TARGET_SPEEDUP = 5.0
+WIDE = (32, 16, 4)                  # width, devices, horizon
+
+
+def bench_workflow(width: int, depth: int = 3, fanout: int = 2,
+                   num_queries: int = 16) -> Workflow:
+    """Map/reduce-style DAG: ``width`` parallel workers, each rooting a
+    ``fanout**depth`` subtree (descendant demand for the horizon tail),
+    fed by completed ingest stages (parent-location/transfer signals)."""
+    stages: dict[str, Stage] = {}
+    for i in range(width):
+        stages[f"in{i}"] = Stage(f"in{i}", MODELS[i % 5],
+                                 base_cost={-1: 0.05},
+                                 output_tokens=256.0)
+        stages[f"w{i}"] = Stage(
+            f"w{i}", MODELS[(i + 1) % 5], max_shards=2,
+            base_cost={-1: 0.1 + 0.01 * (i % 7)},
+            prefix_group=f"g{i % 4}", shared_fraction=0.5,
+            output_tokens=384.0,
+            parents=(f"in{i}", f"in{(i + 1) % width}"))
+        prev = [f"w{i}"]
+        for lv in range(1, depth + 1):
+            cur = []
+            for pi, par in enumerate(prev):
+                for b in range(fanout):
+                    sid = f"c{i}_{lv}_{pi}_{b}"
+                    stages[sid] = Stage(
+                        sid, MODELS[(i + lv + b) % 5],
+                        base_cost={-1: 0.08},
+                        prefix_group=f"g{i % 4}",
+                        output_tokens=256.0, parents=(par,))
+                    cur.append(sid)
+            prev = cur
+    return Workflow(wid=f"sched-bench-{width}", stages=stages,
+                    num_queries=num_queries)
+
+
+def _warmed_state(wf: Workflow, width: int, cluster):
+    """Ingest stages done, models resident, some prefixes warm — so every
+    scoring term (transfer, locality, prefix, residency) is live."""
+    state = fresh_state(cluster)
+    n_dev = cluster.n
+    for i in range(width):
+        d = i % n_dev
+        state.output_loc[(wf.wid, f"in{i}")] = (d,)
+        state.completed.add((wf.wid, f"in{i}"))
+        state.residency[d] = MODELS[i % 5]
+        state.warm_prefix(d, f"g{i % 4}", MODELS[(i + 1) % 5], 8, 0.0)
+    return state
+
+
+def _time_plans(planner: FrontierPlanner, wf: Workflow, state,
+                ready: list[str], min_reps: int,
+                min_seconds: float) -> tuple[float, list[tuple]]:
+    placements = planner.plan(wf, state, list(ready))   # warm caches
+    reps, elapsed = 0, 0.0
+    t_start = time.perf_counter()
+    while reps < min_reps or elapsed < min_seconds:
+        placements = planner.plan(wf, state, list(ready))
+        reps += 1
+        elapsed = time.perf_counter() - t_start
+        if reps >= 200:
+            break
+    key = [(p.sid, p.devices, p.shard_sizes) for p in placements]
+    return elapsed / reps, key
+
+
+def run_config(width: int, n_devices: int, horizon: int, *,
+               min_reps: int = 5, min_seconds: float = 0.3) -> dict:
+    wf = bench_workflow(width)
+    cluster = heterogeneous_cluster(n_devices)
+    state = _warmed_state(wf, width, cluster)
+    ready = [f"w{i}" for i in range(width)]
+    params = ScoreParams(horizon=horizon)
+
+    fast = FrontierPlanner(params, use_matrix=True)
+    slow = FrontierPlanner(params, use_matrix=False)
+    t_fast, key_fast = _time_plans(fast, wf, state, ready,
+                                   min_reps, min_seconds)
+    t_slow, key_slow = _time_plans(slow, wf, state, ready,
+                                   max(2, min_reps // 2), min_seconds)
+    return {
+        "frontier_width": width,
+        "n_devices": n_devices,
+        "horizon": horizon,
+        "n_stages": len(wf.stages),
+        "fast_ms": t_fast * 1e3,
+        "slow_ms": t_slow * 1e3,
+        "speedup": t_slow / t_fast,
+        "identical_placements": key_fast == key_slow,
+        "n_placed": len(key_fast),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="wide-frontier config only, short timing windows")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_sched.json"))
+    args = ap.parse_args()
+
+    if args.quick:
+        grid = [WIDE]
+        min_reps, min_seconds = 3, 0.1
+    else:
+        grid = [(w, d, h)
+                for w in (8, 16, 32, 48)
+                for d in (8, 16)
+                for h in (2, 4)]
+        if WIDE not in grid:
+            grid.append(WIDE)
+        min_reps, min_seconds = 5, 0.3
+
+    rows = []
+    for width, n_dev, horizon in grid:
+        row = run_config(width, n_dev, horizon,
+                         min_reps=min_reps, min_seconds=min_seconds)
+        rows.append(row)
+        print(f"width={width:3d} devices={n_dev:3d} horizon={horizon} | "
+              f"fast {row['fast_ms']:7.2f} ms  slow {row['slow_ms']:7.2f} ms"
+              f"  speedup {row['speedup']:5.1f}x  "
+              f"identical={row['identical_placements']}")
+
+    wide = next(r for r in rows
+                if (r["frontier_width"], r["n_devices"], r["horizon"])
+                == WIDE)
+    ok = (wide["speedup"] >= TARGET_SPEEDUP
+          and all(r["identical_placements"] for r in rows))
+    report = {
+        "benchmark": "sched_bench",
+        "unix_time": time.time(),
+        "target_speedup": TARGET_SPEEDUP,
+        "wide_frontier": wide,
+        "configs": rows,
+        "pass": ok,
+    }
+    out = Path(args.out)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"\nwide frontier (32x16, H=4): {wide['speedup']:.1f}x "
+          f"(target >= {TARGET_SPEEDUP:.0f}x)  ->  "
+          f"{'PASS' if ok else 'FAIL'}  [{out}]")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

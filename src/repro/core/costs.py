@@ -10,10 +10,30 @@ objective (paper §3.5).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
+import numpy as np
+
+from repro.core.devices import Cluster
 from repro.core.state import ExecutionState
 from repro.core.workflow import Stage, Workflow
+
+
+@functools.lru_cache(maxsize=64)
+def cluster_arrays(cluster: Cluster) -> tuple[np.ndarray, np.ndarray]:
+    """Per-cluster (speed, transfer_scale) vectors indexed by device id.
+
+    ``Cluster`` is a frozen dataclass, so the arrays are immutable facts
+    of the topology; they are computed once and shared by every wave of
+    the vectorized scoring engine.
+    """
+    speeds = np.array([d.speed for d in cluster.devices], dtype=float)
+    tscale = np.array([d.transfer_scale for d in cluster.devices],
+                      dtype=float)
+    speeds.flags.writeable = False
+    tscale.flags.writeable = False
+    return speeds, tscale
 
 
 @dataclasses.dataclass(frozen=True)

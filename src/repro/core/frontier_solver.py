@@ -50,6 +50,29 @@ class FrontierSolution:
     nodes: int
 
 
+_AUG_BUFFERS: dict[tuple[int, int], np.ndarray] = {}
+
+
+def _aug_buffer(n_r: int, n_c: int) -> np.ndarray:
+    """Reusable augmented-cost scratch matrix for `_hungarian`.
+
+    The branch-and-bound loop calls the relaxation many times per solve
+    with an identical shape; reusing one buffer per shape avoids a
+    fresh (n_r × (n_c+n_r)) allocation per node.
+
+    NOT thread-safe: concurrent solves with the same shape would share
+    scratch; keep frontier solves on one thread (process-parallelism is
+    fine) or make this thread-local first."""
+    buf = _AUG_BUFFERS.get((n_r, n_c))
+    if buf is None:
+        buf = np.empty((n_r, n_c + n_r))
+        if len(_AUG_BUFFERS) > 32:       # bound the cache
+            _AUG_BUFFERS.clear()
+        _AUG_BUFFERS[(n_r, n_c)] = buf
+    buf.fill(NEG)
+    return buf
+
+
 def _hungarian(weights: np.ndarray, forced: set[int],
                banned: set[int]) -> Optional[tuple[float, dict[int, int]]]:
     """Max-weight assignment; rows may stay unassigned unless forced.
@@ -59,7 +82,7 @@ def _hungarian(weights: np.ndarray, forced: set[int],
     real columns only, or None if a forced row cannot be placed.
     """
     n_r, n_c = weights.shape
-    aug = np.full((n_r, n_c + n_r), NEG)
+    aug = _aug_buffer(n_r, n_c)
     aug[:, :n_c] = weights
     for r in range(n_r):
         if r in banned:

@@ -1,6 +1,17 @@
 """FATE frontier planner: builds the frontier ILP from horizon-aware
 scores, solves it exactly, and materializes shard-slot placements
 (paper §3.3, Appendix A.2).
+
+Two score-generation paths feed the same exact solver:
+
+* the vectorized engine (default) — one ``Scorer.score_matrix`` call
+  per wave computes the full frontier × device table with numpy over
+  cached DAG topology, on a copy-on-write planning overlay;
+* the scalar path (``use_matrix=False``) — the seed's per-(stage,
+  slot, device) ``planner_score`` loop, kept as the reference baseline
+  for parity tests and ``benchmarks/sched_bench.py``.
+
+Both produce bit-identical weights, hence identical placements.
 """
 from __future__ import annotations
 
@@ -42,9 +53,10 @@ class SolveRecord:
 
 class FrontierPlanner:
     def __init__(self, params: Optional[ScoreParams] = None,
-                 time_limit: float = 5.0):
+                 time_limit: float = 5.0, use_matrix: bool = True):
         self.params = params or ScoreParams()
         self.time_limit = time_limit
+        self.use_matrix = use_matrix
         self.solve_log: list[SolveRecord] = []
 
     def plan(self, wf: Workflow, state: ExecutionState,
@@ -55,19 +67,84 @@ class FrontierPlanner:
         wave; estimated completion effects — residency, prefix warmth,
         availability — feed the next wave's scores)."""
         out: list[Placement] = []
-        sim = _simulate_copy(state)
+        if self.use_matrix:
+            sim = state.overlay()          # copy-on-write planning view
+            cm = CostModel(sim)            # hoisted out of the wave loop
+            scorer = Scorer(sim, cm, self.params)
+        else:
+            sim = _simulate_copy(state)    # seed behavior: full dict copy
+            cm = scorer = None
         remaining = list(ready)
         while remaining:
-            wave = self._plan_wave(wf, sim, remaining)
+            if self.use_matrix:
+                wave = self._plan_wave_fast(wf, sim, remaining, cm,
+                                            scorer)
+            else:
+                wave = self._plan_wave(wf, sim, remaining)
             if not wave:
                 break
+            apply_cm = cm if cm is not None else CostModel(sim)
             for p in wave:
-                _apply_estimate(wf, sim, p)
+                _apply_estimate(wf, sim, p, apply_cm)
             placed = {p.sid for p in wave}
             remaining = [s for s in remaining if s not in placed]
             out.extend(wave)
         return out
 
+    # ------------------------------------------------------------------
+    # vectorized wave
+    # ------------------------------------------------------------------
+    def _plan_wave_fast(self, wf: Workflow, state: ExecutionState,
+                        ready: list[str], cm: CostModel,
+                        scorer: Scorer) -> list[Placement]:
+        """One solver wave fed by the batched scoring engine."""
+        if not ready:
+            return []
+        scorer.set_frontier(wf, ready)
+        fs = scorer.score_matrix(wf, ready)
+        devices = fs.devices
+
+        # margin: same all-pairs mean as the scalar path, accumulated
+        # in the same (row-major, builtin-sum) order for bit parity.
+        flat = fs.base.reshape(-1).tolist()
+        margin = (self.params.margin_factor * (sum(flat) / len(flat))
+                  if flat else 1.0)
+
+        rows: list[tuple] = []
+        weights: list[np.ndarray] = []
+        for i, sid in enumerate(ready):
+            raw = fs.raw[i]
+            if fs.constrained[i]:
+                if np.all(raw <= NEG / 2):
+                    continue
+                best = raw[raw > NEG / 2].max()
+                w0 = np.where(raw > NEG / 2, margin + raw - best, NEG)
+            else:                       # no eligibility holes: fast path
+                best = raw.max()
+                w0 = margin + raw - best
+            solo_best = float(np.min(fs.eft[i]))
+            rows.append((sid, 0))
+            weights.append(w0)
+            for k in range(1, fs.max_slots[i]):
+                w = fs.shard_weights(i, k, solo_best)
+                if fs.constrained[i] and np.all(w <= NEG / 2):
+                    continue
+                rows.append((sid, k))
+                weights.append(w)
+        if not rows:
+            return []
+
+        problem = FrontierProblem(rows, devices, np.array(weights))
+        sol = solve_frontier_exact(problem, self.time_limit)
+        self.solve_log.append(SolveRecord(
+            wall_time=sol.wall_time, nodes=sol.nodes, status=sol.status,
+            n_rows=len(rows), n_devices=len(devices),
+            objective=sol.objective))
+        return self._materialize(wf, state, cm, sol)
+
+    # ------------------------------------------------------------------
+    # scalar wave (seed reference path)
+    # ------------------------------------------------------------------
     def _plan_wave(self, wf: Workflow, state: ExecutionState,
                    ready: list[str]) -> list[Placement]:
         """One CP-SAT wave over the current ready frontier."""
@@ -169,10 +246,11 @@ def _simulate_copy(state: ExecutionState) -> ExecutionState:
     return sim
 
 
-def _apply_estimate(wf: Workflow, sim: ExecutionState,
-                    p: Placement) -> None:
+def _apply_estimate(wf: Workflow, sim: ExecutionState, p: Placement,
+                    cm: Optional[CostModel] = None) -> None:
     """Advance the simulated state by a placement's estimated effects."""
-    cm = CostModel(sim)
+    if cm is None:
+        cm = CostModel(sim)
     st = wf.stages[p.sid]
     fins = []
     for d, nq in zip(p.devices, p.shard_sizes):

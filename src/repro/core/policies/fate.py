@@ -14,8 +14,9 @@ class FATEPolicy:
     name = "FATE"
 
     def __init__(self, params: Optional[ScoreParams] = None,
-                 time_limit: float = 5.0):
-        self.planner = FrontierPlanner(params, time_limit)
+                 time_limit: float = 5.0, use_matrix: bool = True):
+        self.planner = FrontierPlanner(params, time_limit,
+                                       use_matrix=use_matrix)
         self.params = self.planner.params
 
     def plan(self, wf: Workflow, state: ExecutionState,

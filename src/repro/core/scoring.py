@@ -21,9 +21,14 @@ without expanding future stages into solver variables (paper §3.3):
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 from typing import Optional, Sequence
 
-from repro.core.costs import CostModel
+import numpy as np
+
+from repro.core.costs import CostModel, cluster_arrays
+from repro.core.frontier_solver import NEG
 from repro.core.state import ExecutionState
 from repro.core.workflow import Stage, Workflow
 
@@ -63,12 +68,56 @@ class ScoreParams:
         )
 
 
+@functools.lru_cache(maxsize=4096)
 def _preferred_devices(model: str, n_devices: int,
                        k: int = 2) -> tuple[int, ...]:
-    """Stable per-model device affinity (hash-spread over the cluster)."""
-    import hashlib
+    """Stable per-model device affinity (hash-spread over the cluster).
+
+    Memoized: the seed re-imported hashlib and re-hashed the model name
+    for every candidate of every wave.
+    """
     h = int(hashlib.sha256(model.encode()).hexdigest()[:8], 16)
     return tuple((h + i * 3) % n_devices for i in range(k))
+
+
+@dataclasses.dataclass
+class FrontierScores:
+    """Full frontier × device score tables for one planning wave.
+
+    ``raw[i, j]`` is the slot-0 planner score Ψ of ready stage i on
+    device j (NEG where ineligible); ``eft`` the state-corrected stage
+    durations (inf where ineligible); ``base`` the unmasked base costs
+    (the wave margin is an all-pairs mean in the scalar path).  Shard
+    slot weights are derived on demand from the cached EFT rows.
+    """
+    ready: list[str]
+    devices: list[int]
+    raw: np.ndarray                # [R, D]
+    eft: np.ndarray                # [R, D]
+    base: np.ndarray               # [R, D]
+    eligible: np.ndarray           # [R, D] bool
+    max_slots: list[int]
+    constrained: list[bool]        # row has an eligibility restriction
+    wait: np.ndarray               # [D]
+    pressure: float
+    shard_overhead: float
+    lam_parallel: float
+    lam_wait: float
+
+    def shard_weights(self, i: int, slot: int,
+                      solo_best: float) -> np.ndarray:
+        """Ψ for shard slot ``slot`` ≥ 1 of ready stage ``i`` — the
+        vectorized twin of the scalar ``planner_score`` shard branch."""
+        eft = self.eft[i]
+        completion_new = np.maximum(solo_best, eft) / (slot + 1)
+        overhead = solo_best * self.shard_overhead
+        gain = (solo_best / slot - completion_new - overhead) \
+            * self.lam_parallel
+        gain = gain - self.lam_wait * self.wait
+        gain = gain - self.pressure
+        if not self.constrained[i]:
+            return gain
+        return np.where(self.eligible[i], gain, NEG)
 
 
 class Scorer:
@@ -79,6 +128,7 @@ class Scorer:
         self.p = params or ScoreParams()
         self._frontier_models: dict[str, int] = {}
         self._device_pressure_cost = 0.0
+        self._cost_vecs: dict[tuple[str, str], np.ndarray] = {}
 
     def set_frontier(self, wf: Workflow, ready: Sequence[str]) -> None:
         """Record frontier model demand + device pressure."""
@@ -87,10 +137,16 @@ class Scorer:
             m = wf.stages[sid].model
             self._frontier_models[m] = self._frontier_models.get(m, 0) + 1
         n_dev = self.state.cluster.n
-        mean_base = sum(
-            self.cm.base_cost(wf.stages[sid], self.state.cluster.ids()[0],
-                              wf.num_queries)
-            for sid in ready) / max(len(ready), 1)
+        # mean over ALL devices: pricing pressure off device 0 alone
+        # biased shard displacement on heterogeneous clusters.
+        ids = self.state.cluster.ids()
+        speeds, _ = cluster_arrays(self.state.cluster)
+        q = wf.num_queries
+        total = 0.0
+        for sid in ready:
+            total += float(
+                self._base_row(wf, wf.stages[sid], ids, speeds, q).sum())
+        mean_base = total / max(len(ready) * n_dev, 1)
         # displacement only bites once primaries saturate the devices
         pressure = min(1.0, max(0.0, (len(ready) - 0.75 * n_dev)
                                 / (0.5 * n_dev)))
@@ -250,3 +306,219 @@ class Scorer:
         gain -= p.lam_wait * self.state.wait_time(device)
         gain -= self._device_pressure_cost
         return gain
+
+    # ------------------------------------------------------------------
+    # vectorized frontier engine
+    # ------------------------------------------------------------------
+    def _stage_cost_vec(self, wf: Workflow, stage: Stage,
+                        ids: list[int]) -> np.ndarray:
+        key = (wf.wid, stage.sid)
+        v = self._cost_vecs.get(key)
+        if v is None:
+            v = np.array([stage.cost_on(d) for d in ids], dtype=float)
+            self._cost_vecs[key] = v
+        return v
+
+    def _base_row(self, wf: Workflow, stage: Stage, ids: list[int],
+                  speeds: np.ndarray, q: int) -> np.ndarray:
+        """Cached per-device base-cost row (state-independent)."""
+        key = (wf.wid, stage.sid, "b")
+        v = self._cost_vecs.get(key)
+        if v is None:
+            v = self._stage_cost_vec(wf, stage, ids) * q / speeds
+            self._cost_vecs[key] = v
+        return v
+
+    def score_matrix(self, wf: Workflow,
+                     ready: Sequence[str]) -> FrontierScores:
+        """Batched Ψ/EFT tables for the whole ready frontier.
+
+        Computes, with one pass of numpy vector ops per ready stage,
+        exactly what ``planner_score(slot=0)`` + ``corrected_eft``
+        compute per (stage, device) pair — same term order, so results
+        are bit-identical to the scalar path.  Call ``set_frontier``
+        first (as the planner does).
+        """
+        p = self.p
+        state = self.state
+        cm = self.cm
+        q = wf.num_queries
+        cluster = state.cluster
+        ids = cluster.ids()
+        n_dev = len(ids)
+        pos = {d: j for j, d in enumerate(ids)}
+        speeds, tscale = cluster_arrays(cluster)
+
+        free = np.array([state.free_at.get(d, 0.0) for d in ids])
+        wait = np.maximum(0.0, free - state.now)
+        res_model = [state.residency.get(d) for d in ids]
+
+        models = {wf.stages[sid].model for sid in ready}
+        res_mask: dict[str, np.ndarray] = {}
+        scarcity: dict[str, np.ndarray] = {}
+        switch_vec: dict[str, np.ndarray] = {}
+        res_bonus: dict[str, np.ndarray] = {}
+        spec_bonus: dict[str, np.ndarray] = {}
+        for m in models:
+            mask = np.array([rm == m for rm in res_model])
+            res_mask[m] = mask
+            mask_i = mask.astype(np.int64)
+            scarcity[m] = 1.0 / (1.0 + (int(mask_i.sum()) - mask_i))
+            prof = state.profiles[m]
+            switch_vec[m] = np.where(
+                mask, 0.0, prof.switch_cost * cm.p.switch_scale)
+            if p.enable_same_model:
+                res_bonus[m] = np.where(
+                    mask,
+                    p.lam_same_model * prof.switch_cost * p.bonus_factor,
+                    0.0)
+                if p.specialize_factor:
+                    pref = set(_preferred_devices(m, n_dev))
+                    spec_bonus[m] = np.where(
+                        np.array([d in pref for d in ids]),
+                        p.specialize_factor * prof.switch_cost, 0.0)
+
+        # warm-prefix queries per (group, model), gathered once per wave
+        warm: dict[tuple[str, str], np.ndarray] = {}
+        for sid in ready:
+            s = wf.stages[sid]
+            if s.prefix_group is None or not s.cache_reuse:
+                continue
+            key = (s.prefix_group, s.model)
+            if key in warm:
+                continue
+            wq = []
+            for d in ids:
+                e = state.prefix.get(d, {}).get(s.prefix_group)
+                wq.append(e.warm_queries
+                          if e is not None and e.model == s.model else 0)
+            warm[key] = np.array(wq, dtype=np.int64)
+
+        zeros = np.zeros(n_dev)
+        wait_term = p.lam_wait * wait
+        R = len(ready)
+        raw = np.empty((R, n_dev))
+        eftm = np.empty((R, n_dev))
+        basem = np.empty((R, n_dev))
+        eligm = np.empty((R, n_dev), dtype=bool)
+        max_slots: list[int] = []
+        constrained: list[bool] = []
+
+        for i, sid in enumerate(ready):
+            s = wf.stages[sid]
+            m = s.model
+            prof = state.profiles[m]
+            mask = res_mask[m]
+            base = self._base_row(wf, s, ids, speeds, q)
+
+            switch = switch_vec[m]
+
+            transfer = zeros
+            if s.parents:
+                transfer = np.zeros(n_dev)
+                for par in s.parents:
+                    locs = state.output_loc.get((wf.wid, par), ())
+                    if not locs:
+                        continue
+                    src = locs[0]
+                    parent = wf.stages[par]
+                    sigma_k = (parent.output_tokens * q
+                               * s.comm_weight / 1000.0)
+                    contrib = (cluster.transfer_coef
+                               * tscale[pos[src]] * tscale) * sigma_k
+                    local = np.zeros(n_dev, dtype=bool)
+                    for d in locs:
+                        if d in pos:
+                            local[pos[d]] = True
+                    transfer = transfer + np.where(local, 0.0, contrib)
+                transfer = transfer * cm.p.transfer_scale
+
+            if (s.cache_reuse and s.prefix_group is not None
+                    and warm[(s.prefix_group, s.model)].any()):
+                wq = warm[(s.prefix_group, s.model)]
+                ov = np.minimum(1.0, wq / max(q, 1)) * s.shared_fraction
+                prefix = np.where(
+                    ov > 0.0,
+                    base * s.prefill_fraction * cm.p.prefix_saving
+                    * ov * cm.p.prefix_scale,
+                    0.0)
+            else:
+                prefix = zeros
+
+            if s.parents:
+                cnt = np.zeros(n_dev)
+                for par in s.parents:
+                    for d in state.output_loc.get((wf.wid, par), ()):
+                        if d in pos:
+                            cnt[pos[d]] += 1
+                frac = cnt / len(s.parents)
+                locality = base * cm.p.locality_saving * frac
+            else:
+                locality = zeros
+
+            # discounted future tail, accumulated in the scalar DFS order
+            tail = zeros
+            if p.enable_future and p.horizon > 1:
+                tail = np.zeros(n_dev)
+                scar = scarcity[m]
+                siblings = self._frontier_models.get(m, 1) - 1
+                if siblings > 0:
+                    coef = p.sibling_factor * siblings * prof.switch_cost
+                    tail = tail + np.where(~mask, coef * scar, 0.0)
+                for uid, dist in wf.descendants_within(sid, p.horizon - 1):
+                    u = wf.stages[uid]
+                    g = p.gamma ** dist
+                    if u.model == m:
+                        tail = tail + (g * 0.5 * p.lam_switch
+                                       * prof.switch_cost) * scar
+                    if (p.enable_prefix and s.prefix_group is not None
+                            and u.prefix_group == s.prefix_group
+                            and u.cache_reuse and u.model == m):
+                        base_u = self._base_row(wf, u, ids, speeds, q)
+                        tail = tail + g * p.lam_prefix * base_u \
+                            * u.prefill_fraction * cm.p.prefix_saving
+                    if p.enable_locality and dist == 1:
+                        sigma_k = (s.output_tokens * q
+                                   * u.comm_weight / 1000.0)
+                        tail = tail + g * p.lam_transfer \
+                            * cluster.transfer_coef * sigma_k * 0.5
+
+            # assemble Ψ in planner_score's exact accumulation order
+            eft = wait_term + base
+            eft = eft + p.lam_switch * switch
+            if p.enable_locality:
+                eft = eft + p.lam_transfer * transfer
+                eft = eft - p.lam_colo * locality
+            if p.enable_prefix:
+                eft = eft - p.lam_prefix * prefix
+            psi = 0.0 - eft
+            psi = psi + tail
+            if p.enable_same_model:
+                psi = psi + res_bonus[m]
+                if p.specialize_factor:
+                    psi = psi + spec_bonus[m]
+
+            total = base + switch + transfer - prefix - locality - 0.0
+            eft_total = np.maximum(1e-6, total)
+
+            if s.eligible:
+                elig = np.array([d in set(s.eligible) for d in ids])
+                raw[i] = np.where(elig, psi, NEG)
+                eftm[i] = np.where(elig, eft_total, np.inf)
+                eligm[i] = elig
+                constrained.append(True)
+            else:
+                raw[i] = psi
+                eftm[i] = eft_total
+                eligm[i] = True
+                constrained.append(False)
+            basem[i] = base
+            max_slots.append(s.max_shards if p.enable_shard else 1)
+
+        return FrontierScores(
+            ready=list(ready), devices=ids, raw=raw, eft=eftm,
+            base=basem, eligible=eligm, max_slots=max_slots,
+            constrained=constrained, wait=wait,
+            pressure=self._device_pressure_cost,
+            shard_overhead=cm.p.shard_overhead,
+            lam_parallel=p.lam_parallel, lam_wait=p.lam_wait)

@@ -12,6 +12,7 @@ implementation-level sets are suppressed in the main-text formulation).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Optional
 
@@ -121,3 +122,84 @@ class ExecutionState:
     def wait_time(self, device: int, t: Optional[float] = None) -> float:
         t = self.now if t is None else t
         return max(0.0, self.device_free(device) - t)
+
+    # -- planning views --------------------------------------------------
+    def overlay(self) -> "PlanningOverlay":
+        """Copy-on-write view for commit-and-advance planning."""
+        return PlanningOverlay(self)
+
+
+class _LayeredSet:
+    """Set overlay: additions land in a private layer, lookups fall
+    through to the (unmodified) base set."""
+    __slots__ = ("_base", "_added")
+
+    def __init__(self, base: set):
+        self._base = base
+        self._added: set = set()
+
+    def add(self, x) -> None:
+        if x not in self._base:
+            self._added.add(x)
+
+    def __contains__(self, x) -> bool:
+        return x in self._added or x in self._base
+
+    def __len__(self) -> int:
+        return len(self._base) + len(self._added)
+
+    def __iter__(self):
+        yield from self._base
+        yield from self._added
+
+
+class PlanningOverlay(ExecutionState):
+    """Copy-on-write overlay over an :class:`ExecutionState`.
+
+    The frontier planner simulates placement effects between waves
+    (Algorithm 2's commit-and-advance) on a scratch state.  The seed
+    implementation deep-copied the nested per-device prefix tables on
+    every ``plan()`` call; the overlay copies only the flat top-level
+    dicts (C-speed, device-count sized) and shares the inner prefix
+    dicts with the base until a device is first written, at which point
+    that device's table (and its entries, mutated in place by
+    ``warm_prefix``) is copied.
+    """
+
+    def __init__(self, base: ExecutionState):
+        # deliberately NOT calling the dataclass __init__: every field
+        # is re-bound to an overlay view of the base state.
+        self.cluster = base.cluster
+        self.profiles = base.profiles
+        self.residency = dict(base.residency)
+        self.prefix = dict(base.prefix)        # inner dicts shared (COW)
+        self.output_loc = dict(base.output_loc)
+        self.free_at = dict(base.free_at)
+        self.now = base.now
+        self.completed = _LayeredSet(base.completed)
+        self.running = _LayeredSet(base.running)
+        self.committed = _LayeredSet(base.committed)
+        self.cross_device_edges = base.cross_device_edges
+        self.prefix_hits_est = base.prefix_hits_est
+        self.same_model_continuations = base.same_model_continuations
+        self.total_tasks = base.total_tasks
+        self.model_switches = base.model_switches
+        self._base = base
+        self._prefix_own: set[int] = set()
+
+    def _own_prefix(self, device: int) -> None:
+        if device not in self._prefix_own:
+            src = self._base.prefix.get(device, {})
+            self.prefix[device] = {g: copy.copy(e) for g, e in src.items()}
+            self._prefix_own.add(device)
+
+    def warm_prefix(self, device: int, group: Optional[str], model: str,
+                    queries: int, now: float) -> None:
+        if group is None:
+            return
+        self._own_prefix(device)
+        super().warm_prefix(device, group, model, queries, now)
+
+    def set_resident(self, device: int, model: str) -> None:
+        self._own_prefix(device)
+        super().set_resident(device, model)

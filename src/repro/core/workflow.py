@@ -53,6 +53,8 @@ class Workflow:
 
     def _wire(self) -> None:
         """Recompute children from parents and topological levels."""
+        self._desc_cache: dict[int, dict[str, tuple[tuple[str, int], ...]]]
+        self._desc_cache = {}
         kids: dict[str, list[str]] = {s: [] for s in self.stages}
         for s in self.stages.values():
             for p in s.parents:
@@ -88,6 +90,38 @@ class Workflow:
     @property
     def topo_order(self) -> list[str]:
         return list(self._topo)
+
+    def descendants_within(self, sid: str,
+                           depth: int) -> tuple[tuple[str, int], ...]:
+        """Horizon-bounded descendant list ``((uid, dist), ...)``.
+
+        Cached per depth so the planner's per-(stage, device) scoring
+        never re-walks the DAG (the seed implementation re-ran this BFS
+        for every candidate pair).  The traversal order is the exact
+        LIFO order of the original ``Scorer._descendants_within`` so
+        vectorized score accumulation stays bit-identical to the scalar
+        path.
+        """
+        table = self._desc_cache.get(depth)
+        if table is None:
+            table = {}
+            for start in self.stages:
+                out: list[tuple[str, int]] = []
+                frontier = [(start, 0)]
+                seen = {start}
+                while frontier:
+                    cur, d = frontier.pop()
+                    if d >= depth:
+                        continue
+                    for ch in self.stages[cur].children:
+                        if ch in seen:
+                            continue
+                        seen.add(ch)
+                        out.append((ch, d + 1))
+                        frontier.append((ch, d + 1))
+                table[start] = tuple(out)
+            self._desc_cache[depth] = table
+        return table[sid]
 
     def levels(self) -> dict[int, list[str]]:
         out: dict[int, list[str]] = {}

@@ -1,0 +1,6 @@
+"""Make the tests directory importable so the offline fallback shim
+(`_fallback_hypothesis`) resolves regardless of pytest rootdir."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -4,7 +4,11 @@ occupancy never overlaps, all queries complete."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline container: shim
+    from _fallback_hypothesis import given, settings, strategies as st
 
 from repro.core.devices import homogeneous_cluster
 from repro.core.executor import WorkflowExecutor, fresh_state

@@ -1,0 +1,219 @@
+"""Parity suite for the vectorized frontier-scoring engine.
+
+The refactor's contract: `Scorer.score_matrix` matches the scalar
+`planner_score`/`corrected_eft` within 1e-9 (in practice bit-exactly,
+by accumulating terms in the same order), FATE placements and makespans
+are identical with the engine on or off across the workflowbench
+suites, and the CpSolver warm start never changes the proven optimum.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.costs import CostModel
+from repro.core.cpsat import CpModel, CpSolver
+from repro.core.devices import heterogeneous_cluster, homogeneous_cluster
+from repro.core.executor import WorkflowExecutor, fresh_state
+from repro.core.policies import make_policy
+from repro.core.scoring import ScoreParams, Scorer
+from repro.core.state import PlanningOverlay
+from repro.core.workflow import Stage, Workflow
+from repro.workflowbench.families import FAMILIES
+from repro.workflowbench.lift import build_instance
+from repro.workflowbench.suites import (RATIOS, conflict_suite_instance,
+                                        prefix_suite_instance)
+
+MODELS = ["qwen-7b", "deepseek-7b", "llama-8b", "llama-3b", "qwen-14b"]
+
+
+def _warmed_state(wf, cluster, seed=0):
+    """A state where every scoring term is live: residencies, warm
+    prefixes, parent output locations, busy devices."""
+    import random
+    rng = random.Random(seed)
+    state = fresh_state(cluster)
+    ids = cluster.ids()
+    sids = wf.topo_order
+    done = sids[: len(sids) // 3]
+    for sid in done:
+        locs = tuple(sorted(rng.sample(ids, rng.choice([1, 2]))))
+        state.output_loc[(wf.wid, sid)] = locs
+        state.completed.add((wf.wid, sid))
+        st = wf.stages[sid]
+        for d in locs:
+            state.residency[d] = st.model
+            state.warm_prefix(d, st.prefix_group, st.model,
+                              rng.randint(1, wf.num_queries), 0.0)
+    for d in ids:
+        if rng.random() < 0.5:
+            state.free_at[d] = rng.uniform(0.0, 0.4)
+    state.now = 0.05
+    return state
+
+
+def _ready_frontier(wf, state):
+    return [sid for sid in wf.topo_order
+            if (wf.wid, sid) not in state.completed
+            and all((wf.wid, p) in state.completed
+                    for p in wf.stages[sid].parents)]
+
+
+def _suite_workflows():
+    wfs = [prefix_suite_instance(r, i)
+           for r in RATIOS for i in range(2)]
+    wfs += [conflict_suite_instance(r, 0) for r in RATIOS]
+    wfs += [build_instance(fam, 0, 16) for fam in sorted(FAMILIES)]
+    return wfs
+
+
+@pytest.mark.parametrize("hetero", [False, True])
+@pytest.mark.parametrize("horizon", [1, 4])
+def test_score_matrix_matches_scalar(hetero, horizon):
+    cluster = (heterogeneous_cluster(6) if hetero
+               else homogeneous_cluster(6))
+    for wf in _suite_workflows()[:8]:
+        state = _warmed_state(wf, cluster, seed=7)
+        ready = _ready_frontier(wf, state)
+        if not ready:
+            continue
+        scorer = Scorer(state, CostModel(state),
+                        ScoreParams(horizon=horizon))
+        scorer.set_frontier(wf, ready)
+        fs = scorer.score_matrix(wf, ready)
+        for i, sid in enumerate(ready):
+            stage = wf.stages[sid]
+            for j, d in enumerate(cluster.ids()):
+                psi = scorer.planner_score(wf, stage, 0, d, 0.0)
+                eft = scorer.corrected_eft(wf, stage, d)
+                assert abs(fs.raw[i, j] - psi) <= 1e-9, (sid, d)
+                assert abs(fs.eft[i, j] - eft) <= 1e-9, (sid, d)
+            solo_best = float(np.min(fs.eft[i]))
+            for k in range(1, stage.max_shards):
+                w = fs.shard_weights(i, k, solo_best)
+                for j, d in enumerate(cluster.ids()):
+                    sc = scorer.planner_score(wf, stage, k, d, 0.0,
+                                              solo_best=solo_best)
+                    assert abs(w[j] - sc) <= 1e-9, (sid, k, d)
+
+
+def test_score_matrix_respects_eligibility():
+    cluster = homogeneous_cluster(4)
+    stages = {
+        "a": Stage("a", "qwen-7b", base_cost={-1: 0.1},
+                   eligible=(1, 3), max_shards=2),
+        "b": Stage("b", "llama-8b", base_cost={-1: 0.2}),
+    }
+    wf = Workflow(wid="elig", stages=stages, num_queries=8)
+    state = fresh_state(cluster)
+    scorer = Scorer(state, CostModel(state), ScoreParams())
+    scorer.set_frontier(wf, ["a", "b"])
+    fs = scorer.score_matrix(wf, ["a", "b"])
+    assert fs.raw[0, 0] < -1e14 and fs.raw[0, 2] < -1e14
+    assert np.isinf(fs.eft[0, 0]) and np.isinf(fs.eft[0, 2])
+    assert np.all(fs.raw[1] > -1e14)
+    w = fs.shard_weights(0, 1, float(np.min(fs.eft[0])))
+    assert w[0] < -1e14 and w[2] < -1e14
+
+
+@pytest.mark.parametrize("hetero", [False, True])
+def test_fate_placements_identical_across_paths(hetero):
+    """The acceptance bar: identical FATE placements/makespans with the
+    vectorized engine on vs the seed scalar loop, whole-suite."""
+    cluster = (heterogeneous_cluster(8) if hetero
+               else homogeneous_cluster(8))
+    for wf in _suite_workflows():
+        results = {}
+        for use_matrix in (True, False):
+            state = fresh_state(cluster)
+            preload = wf.meta.get("preload_model")
+            if preload:
+                for d in cluster.ids():
+                    state.residency[d] = preload
+            pol = make_policy("FATE", use_matrix=use_matrix)
+            results[use_matrix] = WorkflowExecutor(state).run(wf, pol)
+        fast, slow = results[True], results[False]
+        assert fast.makespan == slow.makespan, wf.wid
+        assert fast.p95 == slow.p95, wf.wid
+        for sid in wf.stages:
+            pf = fast.stage_runs[sid].placement
+            ps = slow.stage_runs[sid].placement
+            assert pf.devices == ps.devices, (wf.wid, sid)
+            assert pf.shard_sizes == ps.shard_sizes, (wf.wid, sid)
+
+
+def test_planning_overlay_copy_on_write():
+    """plan() must leave the real execution state untouched."""
+    wf = prefix_suite_instance(0.5, 0)
+    cluster = homogeneous_cluster(4)
+    state = _warmed_state(wf, cluster, seed=3)
+    snap_res = dict(state.residency)
+    snap_free = dict(state.free_at)
+    snap_prefix = {d: {g: (e.model, e.warm_queries, e.last_used)
+                       for g, e in m.items()}
+                   for d, m in state.prefix.items()}
+    snap_out = dict(state.output_loc)
+    snap_completed = set(state.completed)
+
+    overlay = state.overlay()
+    assert isinstance(overlay, PlanningOverlay)
+    ready = _ready_frontier(wf, state)
+    pol = make_policy("FATE")
+    placements = pol.plan(wf, state, ready)
+    assert placements, "planner placed nothing"
+
+    assert dict(state.residency) == snap_res
+    assert dict(state.free_at) == snap_free
+    assert dict(state.output_loc) == snap_out
+    assert set(state.completed) == snap_completed
+    now_prefix = {d: {g: (e.model, e.warm_queries, e.last_used)
+                      for g, e in m.items()}
+                  for d, m in state.prefix.items()}
+    assert now_prefix == snap_prefix
+
+
+def _random_cp_model(rng, n):
+    m = CpModel()
+    vs = [m.new_bool_var() for _ in range(n)]
+    weights = [rng.uniform(-3, 6) for _ in range(n)]
+    m.maximize(list(zip(vs, weights)))
+    groups = []
+    for _ in range(rng.randint(0, 4)):
+        k = rng.randint(1, min(4, n))
+        idx = rng.sample(range(n), k)
+        m.add_at_most_one([vs[i] for i in idx])
+        groups.append(idx)
+    imps = []
+    for _ in range(rng.randint(0, 4)):
+        a, b = rng.randint(0, n - 1), rng.randint(0, n - 1)
+        if a != b:
+            m.add_implication(vs[a], vs[b])
+            imps.append((a, b))
+    return m, weights, groups, imps
+
+
+def _brute(n, weights, groups, imps):
+    best = 0.0
+    for bits in itertools.product([0, 1], repeat=n):
+        if any(sum(bits[i] for i in g) > 1 for g in groups):
+            continue
+        if any(bits[a] == 1 and bits[b] == 0 for a, b in imps):
+            continue
+        best = max(best, sum(w * x for w, x in zip(weights, bits)))
+    return best
+
+
+def test_cpsolver_warm_start_matches_cold():
+    """Warm start is a pruning aid only: same proven optimum."""
+    import random
+    for seed in range(40):
+        rng = random.Random(seed)
+        n = rng.randint(2, 10)
+        model, weights, groups, imps = _random_cp_model(rng, n)
+        warm = CpSolver(warm_start=True).solve(model)
+        cold = CpSolver(warm_start=False).solve(model)
+        assert warm.status == cold.status == "OPTIMAL"
+        assert abs(warm.objective - cold.objective) < 1e-9, seed
+        assert abs(warm.objective - _brute(n, weights, groups, imps)) \
+            < 1e-6, seed
+        assert warm.nodes <= cold.nodes + 1, seed

@@ -4,7 +4,11 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline container: shim
+    from _fallback_hypothesis import given, settings, strategies as st
 
 from repro.core.cpsat import CpModel, CpSolver
 from repro.core.frontier_solver import (NEG, FrontierProblem,
