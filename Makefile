@@ -7,16 +7,18 @@ test:
 	$(PYTHON) -m pytest -q
 
 # Scheduler tier: the suites that are green and need only numpy/scipy
-# (the seed's kernel tests fail on jax/pallas API drift and need an
-# accelerator toolchain CI does not have).
+# (kernel tests additionally need the jax/pallas toolchain).
 test-sched:
 	$(PYTHON) -m pytest -q tests/test_executor.py tests/test_solvers.py \
-	  tests/test_workflowbench.py tests/test_score_matrix_parity.py
+	  tests/test_workflowbench.py tests/test_score_matrix_parity.py \
+	  tests/test_delta_rescoring.py tests/test_shared_frontier.py
 
 bench-sched:
-	$(PYTHON) -m benchmarks.sched_bench --quick
+	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve
 
-# CI smoke gate: scheduler tests + planner-throughput regression check
+# CI smoke gate: scheduler tests + planner-throughput regression checks
 # (sched_bench exits nonzero if the vectorized engine drops below the
-# 5x wide-frontier target or placements diverge from the scalar path).
+# 5x wide-frontier target, if steady-state delta rescoring drops below
+# the 2x guard — PR target 3x — or if either engine's placements
+# diverge from the reference path).
 check: test-sched bench-sched

@@ -1,5 +1,7 @@
 """Planner-throughput benchmark: vectorized frontier-scoring engine vs
-the seed's scalar per-(stage, slot, device) loop.
+the seed's scalar per-(stage, slot, device) loop, plus the incremental
+delta-rescoring engine vs full matrix rebuilds on a steady-state
+rolling-frontier trace, plus a Poisson multi-workflow serving smoke.
 
 Sweeps frontier width × device count × horizon on a map/reduce-shaped
 DAG (each ready worker roots a fan-out subtree, so the horizon tail has
@@ -8,29 +10,45 @@ bit-identical placements, and writes a ``BENCH_sched.json`` trajectory.
 
     PYTHONPATH=src python -m benchmarks.sched_bench            # full grid
     PYTHONPATH=src python -m benchmarks.sched_bench --quick    # smoke gate
+    PYTHONPATH=src python -m benchmarks.sched_bench --profile  # phase times
+    PYTHONPATH=src python -m benchmarks.sched_bench --serve    # serving mode
 
-The wide-frontier config (32 ready × 16 devices, horizon 4) is the
-acceptance target: >= 5x planner wall-time speedup.
+Gates (enforced by exit code, used by ``make check`` / CI):
+  * wide-frontier (32 ready × 16 devices, horizon 4) matrix vs scalar
+    planner wall-time speedup >= 5x, bit-identical placements;
+  * steady-state replanning on the same 32x16 H=4 rolling-frontier
+    trace: delta rescoring >= 2x faster than the full-rescore matrix
+    path (guard; the PR target is 3x, recorded in the report), with
+    bit-identical score tables and solver placements at every event.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import random
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core.devices import heterogeneous_cluster          # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.core.costs import CostModel                        # noqa: E402
+from repro.core.devices import heterogeneous_cluster, \
+    homogeneous_cluster                                       # noqa: E402
 from repro.core.executor import fresh_state                   # noqa: E402
+from repro.core.frontier_solver import FrontierProblem, \
+    solve_frontier_exact                                      # noqa: E402
 from repro.core.planner import FrontierPlanner                # noqa: E402
-from repro.core.scoring import ScoreParams                    # noqa: E402
+from repro.core.scoring import ScoreParams, Scorer            # noqa: E402
 from repro.core.workflow import Stage, Workflow               # noqa: E402
 
 MODELS = ["qwen-7b", "deepseek-7b", "llama-8b", "llama-3b", "qwen-14b"]
 REPO_ROOT = Path(__file__).resolve().parents[1]
 TARGET_SPEEDUP = 5.0
+DELTA_TARGET = 3.0              # steady-state replanning speedup target
+DELTA_GUARD = 2.0               # make-check / CI regression guard
 WIDE = (32, 16, 4)                  # width, devices, horizon
 
 
@@ -105,7 +123,10 @@ def run_config(width: int, n_devices: int, horizon: int, *,
     ready = [f"w{i}" for i in range(width)]
     params = ScoreParams(horizon=horizon)
 
-    fast = FrontierPlanner(params, use_matrix=True)
+    # use_delta=False: this gate isolates the batched BUILD engine vs
+    # the scalar loop; cross-plan delta reuse has its own benchmark
+    # (run_delta_config) and would otherwise mask build regressions.
+    fast = FrontierPlanner(params, use_matrix=True, use_delta=False)
     slow = FrontierPlanner(params, use_matrix=False)
     t_fast, key_fast = _time_plans(fast, wf, state, ready,
                                    min_reps, min_seconds)
@@ -124,10 +145,162 @@ def run_config(width: int, n_devices: int, horizon: int, *,
     }
 
 
+# ---------------------------------------------------------------------------
+# steady-state rolling-frontier delta benchmark
+# ---------------------------------------------------------------------------
+
+
+def _completion_events(n_events: int, n_devices: int,
+                       seed: int = 0) -> list[tuple]:
+    """Deterministic completion-like state mutations: each event frees a
+    device at a later time, flips its residency, warms a prefix group,
+    and advances the clock — exactly what one stage completion does to
+    (ρ, κ, τ) between serving replans."""
+    rng = random.Random(seed)
+    return [(rng.randrange(n_devices), rng.choice(MODELS),
+             f"g{rng.randrange(4)}", rng.randint(1, 16),
+             rng.uniform(0.01, 0.1)) for _ in range(n_events)]
+
+
+def _replay(wf: Workflow, cluster, ready: list[str], events: list[tuple],
+            horizon: int, mode: str, check: bool = False) -> dict:
+    """Replay the event trace replanning after every event.
+
+    ``mode='full'`` rebuilds the score matrix from scratch each replan
+    (PR 1's full-rescore path); ``mode='delta'`` rescored incrementally.
+    With ``check=True`` both engines run in lockstep and every replan
+    asserts bit-identical tables and identical solver placements.
+    """
+    width = len(ready)
+    state = _warmed_state(wf, width, cluster)
+    params = ScoreParams(horizon=horizon)
+    sc = Scorer(state, CostModel(state), params)
+    sc.set_frontier(wf, ready)
+    prev = sc.score_matrix(wf, ready)
+    identical = True
+    elapsed = 0.0
+    for d, m, g, q, dt in events:
+        state.now += dt
+        state.set_free_at(d, state.now + 0.08)
+        state.set_resident(d, m)
+        state.warm_prefix(d, g, m, q, state.now)
+        t0 = time.perf_counter()
+        sc.set_frontier(wf, ready)
+        if mode == "delta":
+            # no claimed dirty set: the safe snapshot-verified path,
+            # exactly what the planner's cross-session wave runs
+            prev = sc.rescore_matrix(wf, ready, prev)
+        else:
+            prev = sc.score_matrix(wf, ready)
+        elapsed += time.perf_counter() - t0
+        if check:
+            sc2 = Scorer(state, CostModel(state), params)
+            sc2.set_frontier(wf, ready)
+            full = sc2.score_matrix(wf, ready)
+            for name in ("raw", "eft", "base", "wait"):
+                if not np.array_equal(getattr(prev, name),
+                                      getattr(full, name)):
+                    identical = False
+            sol_a = solve_frontier_exact(FrontierProblem(
+                [(s, 0) for s in ready], prev.devices, prev.raw.copy()))
+            sol_b = solve_frontier_exact(FrontierProblem(
+                [(s, 0) for s in ready], full.devices, full.raw.copy()))
+            if sol_a.assignment != sol_b.assignment:
+                identical = False
+    return {"ms_per_replan": elapsed / max(len(events), 1) * 1e3,
+            "identical": identical}
+
+
+def run_delta_config(width: int = 32, n_devices: int = 16,
+                     horizon: int = 4, *, n_events: int = 250,
+                     n_check: int = 40) -> dict:
+    """Steady-state replanning: delta rescoring vs full matrix rebuild
+    on a rolling-frontier completion trace (the serving hot path)."""
+    wf = bench_workflow(width)
+    cluster = heterogeneous_cluster(n_devices)
+    ready = [f"w{i}" for i in range(width)]
+    events = _completion_events(n_events, n_devices)
+    # correctness pass first (short, lockstep-verified)
+    chk = _replay(wf, cluster, ready, events[:n_check], horizon,
+                  "delta", check=True)
+    full = _replay(wf, cluster, ready, events, horizon, "full")
+    delta = _replay(wf, cluster, ready, events, horizon, "delta")
+    return {
+        "frontier_width": width,
+        "n_devices": n_devices,
+        "horizon": horizon,
+        "n_events": n_events,
+        "full_ms": full["ms_per_replan"],
+        "delta_ms": delta["ms_per_replan"],
+        "speedup": full["ms_per_replan"] / delta["ms_per_replan"],
+        "identical": chk["identical"],
+        "target": DELTA_TARGET,
+        "guard": DELTA_GUARD,
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-phase profile + serving mode
+# ---------------------------------------------------------------------------
+
+
+def run_profile(width: int = 32, n_devices: int = 16,
+                horizon: int = 4, reps: int = 20) -> dict:
+    """Per-phase planner timing breakdown (matrix build vs delta
+    rescore vs exact solve) over repeated plan() sessions."""
+    wf = bench_workflow(width)
+    cluster = heterogeneous_cluster(n_devices)
+    state = _warmed_state(wf, width, cluster)
+    ready = [f"w{i}" for i in range(width)]
+    planner = FrontierPlanner(ScoreParams(horizon=horizon))
+    planner.plan(wf, state, list(ready))        # warm caches
+    planner.phase_ms = {k: 0.0 for k in planner.phase_ms}
+    planner.solve_log.clear()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        planner.plan(wf, state, list(ready))
+    total_ms = (time.perf_counter() - t0) * 1e3
+    phases = dict(planner.phase_ms)
+    accounted = sum(phases.values())
+    return {
+        "reps": reps,
+        "total_ms": total_ms,
+        "phase_ms": phases,
+        "other_ms": max(0.0, total_ms - accounted),
+        "solves": len(planner.solve_log),
+    }
+
+
+def run_serve(n_workflows: int = 12, rate: float = 6.0,
+              n_devices: int = 8, seed: int = 0) -> dict:
+    """Poisson multi-workflow serving smoke: shared-frontier FATE vs
+    round-robin, normalized makespan/P95/goodput."""
+    from repro.workflowbench.metrics import serving_summary
+    from repro.workflowbench.runner import run_serving
+    from repro.workflowbench.suites import poisson_serving_trace
+
+    trace = poisson_serving_trace(n_workflows=n_workflows, rate=rate,
+                                  seed=seed, num_queries=8)
+    results = run_serving(trace, ["RoundRobin", "FATE"],
+                          homogeneous_cluster(n_devices))
+    summary = serving_summary(results)
+    return {
+        "n_workflows": n_workflows,
+        "rate": rate,
+        "n_devices": n_devices,
+        "max_in_flight": max(r.max_in_flight for r in results.values()),
+        "policies": summary,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="wide-frontier config only, short timing windows")
+    ap.add_argument("--profile", action="store_true",
+                    help="emit per-phase planner timing breakdown")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the Poisson multi-workflow serving smoke")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_sched.json"))
     args = ap.parse_args()
 
@@ -156,20 +329,50 @@ def main() -> None:
     wide = next(r for r in rows
                 if (r["frontier_width"], r["n_devices"], r["horizon"])
                 == WIDE)
+
+    delta = run_delta_config(
+        *WIDE, n_events=120 if args.quick else 300,
+        n_check=20 if args.quick else 60)
+    print(f"delta rescore (32x16, H=4 rolling trace) | "
+          f"full {delta['full_ms']:6.3f} ms  "
+          f"delta {delta['delta_ms']:6.3f} ms  "
+          f"speedup {delta['speedup']:4.1f}x  "
+          f"identical={delta['identical']}")
+
     ok = (wide["speedup"] >= TARGET_SPEEDUP
-          and all(r["identical_placements"] for r in rows))
+          and all(r["identical_placements"] for r in rows)
+          and delta["speedup"] >= DELTA_GUARD
+          and delta["identical"])
     report = {
         "benchmark": "sched_bench",
         "unix_time": time.time(),
         "target_speedup": TARGET_SPEEDUP,
         "wide_frontier": wide,
         "configs": rows,
+        "delta_rescore": delta,
         "pass": ok,
     }
+    if args.profile:
+        report["profile"] = run_profile(*WIDE)
+        pm = report["profile"]["phase_ms"]
+        print("profile: " + "  ".join(
+            f"{k}={v:.1f}ms" for k, v in pm.items())
+            + f"  other={report['profile']['other_ms']:.1f}ms"
+            + f"  ({report['profile']['reps']} plans)")
+    if args.serve:
+        report["serving"] = run_serve(
+            n_workflows=8 if args.quick else 12)
+        for pol, row in report["serving"]["policies"].items():
+            print(f"serve: {pol:10s} norm_ms={row['norm_ms']:.3f} "
+                  f"norm_p95={row['norm_p95']:.3f} "
+                  f"goodput={row['goodput_wps']:.2f} wf/s")
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"\nwide frontier (32x16, H=4): {wide['speedup']:.1f}x "
-          f"(target >= {TARGET_SPEEDUP:.0f}x)  ->  "
+          f"(target >= {TARGET_SPEEDUP:.0f}x); "
+          f"delta rescore {delta['speedup']:.1f}x "
+          f"(target >= {DELTA_TARGET:.0f}x, guard >= "
+          f"{DELTA_GUARD:.0f}x)  ->  "
           f"{'PASS' if ok else 'FAIL'}  [{out}]")
     if not ok:
         sys.exit(1)

@@ -10,17 +10,27 @@ ready action.
 Per-query completion times are tracked through shard partitions so P95
 query latency is measurable (queries in different shards of the sink
 stage finish at different times).
+
+Two runtimes share the issue/completion machinery:
+
+* :class:`WorkflowExecutor` — the paper's single-workflow batch
+  setting: one DAG owns the cluster until it drains.
+* :class:`ServingExecutor` — the serving setting: workflows arrive
+  over time (e.g. from a Poisson trace), a :class:`SharedFrontier`
+  merges the ready sets of every in-flight DAG, and the policy replans
+  the merged frontier on every completion, so cross-workflow contention
+  for residency/prefix state is decided by one placement problem.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Optional, Protocol
+from typing import Optional, Protocol, Sequence
 
 from repro.core.costs import CostModel, CostParams
 from repro.core.planner import Placement
 from repro.core.state import ExecutionState
-from repro.core.workflow import ModelProfile, Stage, Workflow
+from repro.core.workflow import ModelProfile, Stage, StageKey, Workflow
 
 
 class Policy(Protocol):
@@ -60,6 +70,49 @@ class RunResult:
             return self.makespan
         idx = max(0, min(len(xs) - 1, int(round(0.95 * (len(xs) - 1)))))
         return xs[idx]
+
+
+def _greedy_fallback(state: ExecutionState, cm: CostModel, wf: Workflow,
+                     sid: str) -> Placement:
+    """Liveness fallback shared by both runtimes: place one ready stage
+    on the device minimizing state-corrected cost plus queueing."""
+    st = wf.stages[sid]
+    devs = list(st.eligible) if st.eligible else state.cluster.ids()
+    best = min(devs, key=lambda d: (
+        cm.effective_cost(wf, st, d, wf.num_queries)
+        + state.wait_time(d)))
+    return Placement(wf.wid, sid, (best,), (wf.num_queries,))
+
+
+def _issue_shards(state: ExecutionState, cm: CostModel, wf: Workflow,
+                  st: Stage, p: Placement
+                  ) -> tuple[list[float], list[bool]]:
+    """Start one placement's shards: per-device state-corrected duration
+    (base + switch + transfer − prefix − locality, plus coordination
+    overhead when sharded), applied to (ρ, κ, τ) through the dirty-set
+    mutators.  The single duration model shared by both runtimes."""
+    shard_fin: list[float] = []
+    switched: list[bool] = []
+    for d, nq in zip(p.devices, p.shard_sizes):
+        was_resident = state.is_resident(st.model, d)
+        t0 = max(state.now, state.device_free(d))
+        dur = cm.base_cost(st, d, nq)
+        dur += cm.switch_cost(st, d)
+        dur += cm.transfer_cost(wf, st, d, nq)
+        dur -= cm.prefix_benefit(st, d, nq)
+        dur -= cm.locality_benefit(wf, st, d, nq)
+        if len(p.devices) > 1:
+            dur += (cm.base_cost(st, d, wf.num_queries)
+                    * cm.p.shard_overhead)
+        dur = max(dur, 1e-6)
+        fin = t0 + dur
+        state.set_free_at(d, fin)
+        state.set_resident(d, st.model)
+        if st.keep_cache:
+            state.warm_prefix(d, st.prefix_group, st.model, nq, fin)
+        shard_fin.append(fin)
+        switched.append(not was_resident)
+    return shard_fin, switched
 
 
 class WorkflowExecutor:
@@ -116,28 +169,7 @@ class WorkflowExecutor:
             ) / len(p.devices)
             same_model += res_frac
 
-            shard_fin = []
-            switched = []
-            for d, nq in zip(p.devices, p.shard_sizes):
-                was_resident = state.is_resident(st.model, d)
-                t0 = max(state.now, state.device_free(d))
-                dur = cm.base_cost(st, d, nq)
-                dur += cm.switch_cost(st, d)
-                dur += cm.transfer_cost(wf, st, d, nq)
-                dur -= cm.prefix_benefit(st, d, nq)
-                dur -= cm.locality_benefit(wf, st, d, nq)
-                if len(p.devices) > 1:
-                    dur += (cm.base_cost(st, d, wf.num_queries)
-                            * cm.p.shard_overhead)
-                dur = max(dur, 1e-6)
-                fin = t0 + dur
-                state.free_at[d] = fin
-                state.set_resident(d, st.model)
-                if st.keep_cache:
-                    state.warm_prefix(d, st.prefix_group, st.model, nq,
-                                      fin)
-                shard_fin.append(fin)
-                switched.append(not was_resident)
+            shard_fin, switched = _issue_shards(state, cm, wf, st, p)
             fin_all = max(shard_fin)
             runs[p.sid] = StageRun(p, state.now, fin_all,
                                    tuple(shard_fin), tuple(switched))
@@ -173,15 +205,7 @@ class WorkflowExecutor:
                 if not new:
                     # liveness fallback: greedily place the single best
                     # ready stage by state-corrected cost
-                    sid = ready[0]
-                    st = wf.stages[sid]
-                    devs = (list(st.eligible) if st.eligible
-                            else state.cluster.ids())
-                    best = min(devs, key=lambda d: (
-                        cm.effective_cost(wf, st, d, wf.num_queries)
-                        + state.wait_time(d)))
-                    new = [Placement(wf.wid, sid, (best,),
-                                     (wf.num_queries,))]
+                    new = [_greedy_fallback(state, cm, wf, ready[0])]
                 committed.extend(new)
                 continue
             # 3. advance time to the next completion
@@ -221,3 +245,311 @@ def fresh_state(cluster, profiles=None) -> ExecutionState:
     from repro.core.workflow import DEFAULT_PROFILES
     return ExecutionState(cluster=cluster,
                           profiles=dict(profiles or DEFAULT_PROFILES))
+
+
+# ---------------------------------------------------------------------------
+# multi-workflow serving
+# ---------------------------------------------------------------------------
+
+
+class SharedFrontier:
+    """Merged ready frontier across in-flight workflow DAGs.
+
+    Tracks, per admitted workflow, which stages have completed and
+    exposes one ``(wid, sid)``-keyed ready list spanning every active
+    DAG — the planning unit of the serving setting.  Workflows are
+    iterated in admission order and stages in topological order, so the
+    merged list is deterministic; the planner (not this container)
+    decides how cross-workflow contention is resolved.  A workflow is
+    retired automatically once its last stage completes.
+    """
+
+    def __init__(self) -> None:
+        self.workflows: dict[str, Workflow] = {}
+        self.completed: dict[str, set[str]] = {}
+        self._order: list[str] = []
+
+    def admit(self, wf: Workflow) -> None:
+        if wf.wid in self.workflows:
+            raise ValueError(f"duplicate workflow id {wf.wid}")
+        wf.validate()
+        self.workflows[wf.wid] = wf
+        self.completed[wf.wid] = set()
+        self._order.append(wf.wid)
+
+    def complete(self, wid: str, sid: str) -> bool:
+        """Record a stage completion; True if the workflow finished."""
+        done = self.completed[wid]
+        done.add(sid)
+        if len(done) == len(self.workflows[wid].stages):
+            self.retire(wid)
+            return True
+        return False
+
+    def retire(self, wid: str) -> None:
+        self.workflows.pop(wid, None)
+        self.completed.pop(wid, None)
+        self._order.remove(wid)
+
+    def ready(self, exclude: set[StageKey]) -> list[StageKey]:
+        """Merged dependency-ready, not-yet-claimed stage keys."""
+        out: list[StageKey] = []
+        for wid in self._order:
+            wf = self.workflows[wid]
+            done = self.completed[wid]
+            for sid in wf.topo_order:
+                if sid in done or (wid, sid) in exclude:
+                    continue
+                if all(p in done for p in wf.stages[sid].parents):
+                    out.append((wid, sid))
+        return out
+
+    def __len__(self) -> int:
+        return len(self.workflows)
+
+
+@dataclasses.dataclass
+class WorkflowServeStats:
+    """Per-workflow serving outcome (times are absolute sim seconds)."""
+    wid: str
+    arrival: float
+    finish: float
+    query_completion: list[float]      # absolute per-query finish times
+    n_stages: int
+
+    @property
+    def makespan(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def latencies(self) -> list[float]:
+        return [t - self.arrival for t in self.query_completion]
+
+    @property
+    def p95(self) -> float:
+        xs = sorted(self.latencies)
+        if not xs:
+            return self.makespan
+        idx = max(0, min(len(xs) - 1, int(round(0.95 * (len(xs) - 1)))))
+        return xs[idx]
+
+
+@dataclasses.dataclass
+class ServingResult:
+    """Outcome of one serving trace under one policy."""
+    stats: dict[str, WorkflowServeStats]
+    horizon: float                     # first arrival -> last completion
+    max_in_flight: int
+    replans: int
+    model_switches: int
+
+    @property
+    def goodput_wps(self) -> float:
+        """Completed workflows per second over the busy horizon."""
+        return len(self.stats) / self.horizon if self.horizon > 0 else 0.0
+
+    @property
+    def goodput_qps(self) -> float:
+        n_q = sum(len(s.query_completion) for s in self.stats.values())
+        return n_q / self.horizon if self.horizon > 0 else 0.0
+
+
+class ServingExecutor:
+    """Event-driven multi-workflow runtime over the proxy cost model.
+
+    Admits workflows from an arrival trace, keeps a
+    :class:`SharedFrontier` of every in-flight DAG, and replans on
+    every completion event: unissued commitments are revoked and the
+    merged frontier is re-solved against the freshest execution state
+    (the serving analogue of Algorithm 2's replan trigger).  Policies
+    that implement ``plan_shared(workflows, state, ready)`` plan the
+    merged frontier in one problem; others fall back to per-workflow
+    ``plan`` calls over their slice of the frontier.
+    """
+
+    def __init__(self, state: ExecutionState,
+                 cost_params: Optional[CostParams] = None,
+                 replan_on_completion: bool = True):
+        self.state = state
+        self.cm = CostModel(state, cost_params)
+        self.replan_on_completion = replan_on_completion
+        # per-(wid, sid) StageRun records of the most recent run()
+        self.last_runs: dict[StageKey, StageRun] = {}
+
+    # -- policy dispatch -------------------------------------------------
+    def _plan(self, policy, frontier: SharedFrontier,
+              ready: list[StageKey]) -> list[Placement]:
+        if hasattr(policy, "plan_shared"):
+            return policy.plan_shared(frontier.workflows, self.state,
+                                      ready)
+        out: list[Placement] = []
+        by_wid: dict[str, list[str]] = {}
+        for wid, sid in ready:
+            by_wid.setdefault(wid, []).append(sid)
+        for wid, sids in by_wid.items():
+            out.extend(policy.plan(frontier.workflows[wid], self.state,
+                                   sids))
+        return out
+
+    # -- main loop -------------------------------------------------------
+    def run(self, trace: Sequence[tuple[float, Workflow]],
+            policy) -> ServingResult:
+        state = self.state
+        cm = self.cm
+        frontier = SharedFrontier()
+        heap: list[tuple[float, int, str, object]] = []
+        seq = 0
+        n_total_stages = 0
+        for t, wf in trace:
+            heapq.heappush(heap, (t, seq, "arrive", wf))
+            seq += 1
+            n_total_stages += len(wf.stages)
+        committed: list[Placement] = []
+        issued: set[StageKey] = set()
+        runs: dict[StageKey, StageRun] = {}
+        wf_finish: dict[str, float] = {}     # running max stage finish
+        arrivals: dict[str, float] = {}
+        workflows_all: dict[str, Workflow] = {}
+        stats: dict[str, WorkflowServeStats] = {}
+        query_done: dict[str, dict[int, float]] = {}
+        first_arrival = trace[0][0] if trace else 0.0
+        last_finish = first_arrival
+        max_in_flight = 0
+        replans = 0
+        switches_before = state.model_switches
+
+        def issuable(p: Placement) -> bool:
+            done = frontier.completed.get(p.wid)
+            if done is None:
+                return False
+            st_ = frontier.workflows[p.wid].stages[p.sid]
+            if any(par not in done for par in st_.parents):
+                return False
+            return all(state.device_free(d) <= state.now + 1e-12
+                       for d in p.devices)
+
+        def issue(p: Placement) -> None:
+            wf = frontier.workflows[p.wid]
+            st = wf.stages[p.sid]
+            shard_fin, switched = _issue_shards(state, cm, wf, st, p)
+            fin_all = max(shard_fin)
+            key = (p.wid, p.sid)
+            runs[key] = StageRun(p, state.now, fin_all,
+                                 tuple(shard_fin), tuple(switched))
+            wf_finish[p.wid] = max(wf_finish.get(p.wid, 0.0), fin_all)
+            issued.add(key)
+            nonlocal seq
+            heapq.heappush(heap, (fin_all, seq, "finish", key))
+            seq += 1
+
+        def finish(key: StageKey) -> None:
+            nonlocal last_finish
+            wid, sid = key
+            wf = frontier.workflows[wid]
+            st = wf.stages[sid]
+            run = runs[key]
+            state.output_loc[(wid, sid)] = run.placement.devices
+            state.completed.add((wid, sid))
+            if not st.children:          # sink: per-query completion
+                qd = query_done.setdefault(wid, {})
+                qid = 0
+                for dfin, nq in zip(run.shard_finish,
+                                    run.placement.shard_sizes):
+                    for _ in range(nq):
+                        qd[qid] = max(qd.get(qid, 0.0), dfin)
+                        qid += 1
+            issued.discard(key)
+            if frontier.complete(wid, sid):
+                wf_all = workflows_all[wid]
+                qd = query_done.get(wid, {})
+                fin_t = wf_finish.get(wid, state.now)
+                qdone = [qd.get(i, fin_t)
+                         for i in range(wf_all.num_queries)]
+                stats[wid] = WorkflowServeStats(
+                    wid=wid, arrival=arrivals[wid], finish=fin_t,
+                    query_completion=qdone, n_stages=len(wf_all.stages))
+                last_finish = max(last_finish, fin_t)
+                if hasattr(policy, "forget_workflow"):
+                    policy.forget_workflow(wid)
+
+        def issue_all() -> None:
+            progress = True
+            while progress:
+                progress = False
+                for p in list(committed):
+                    key = (p.wid, p.sid)
+                    if key in issued or p.wid not in frontier.workflows \
+                            or p.sid in frontier.completed[p.wid]:
+                        committed.remove(p)
+                        continue
+                    if issuable(p):
+                        committed.remove(p)
+                        issue(p)
+                        progress = True
+
+        guard = 0
+        guard_limit = 60 * max(n_total_stages, 1) + 1000
+        while True:
+            guard += 1
+            if guard > guard_limit:
+                raise RuntimeError(
+                    f"serving executor stalled ({policy.name})")
+            # 1. issue everything issuable at the current time
+            issue_all()
+            # 2. plan when claimed actions cannot cover the frontier
+            claimed = issued | {(p.wid, p.sid) for p in committed}
+            ready = frontier.ready(claimed)
+            pool_feasible = any(
+                all(par in frontier.completed[p.wid]
+                    for par in frontier.workflows[p.wid]
+                    .stages[p.sid].parents)
+                for p in committed if p.wid in frontier.workflows)
+            if ready and not pool_feasible:
+                new = self._plan(policy, frontier, ready)
+                replans += 1
+                if not new and not issued:
+                    # liveness fallback: greedily place the single best
+                    # ready stage by state-corrected cost
+                    wid, sid = ready[0]
+                    new = [_greedy_fallback(
+                        state, cm, frontier.workflows[wid], sid)]
+                if new:
+                    committed.extend(new)
+                    issue_all()        # start the fresh plan NOW, before
+                    continue           # the clock advances to next event
+            # 3. advance the clock to the next event batch
+            if not heap:
+                if committed or len(frontier):
+                    raise RuntimeError(
+                        f"serving executor deadlock ({policy.name})")
+                break
+            t = heap[0][0]
+            state.now = max(state.now, t)
+            completed_any = False
+            while heap and heap[0][0] <= t + 1e-12:
+                _, _, kind, payload = heapq.heappop(heap)
+                if kind == "arrive":
+                    wf = payload
+                    if wf.wid in workflows_all:
+                        # stats/arrivals are keyed by wid for the whole
+                        # trace, so a reused wid (even after the first
+                        # instance retired) would silently clobber them
+                        raise ValueError(
+                            f"duplicate workflow id in trace: {wf.wid}")
+                    frontier.admit(wf)
+                    workflows_all[wf.wid] = wf
+                    arrivals[wf.wid] = state.now
+                    max_in_flight = max(max_in_flight, len(frontier))
+                else:
+                    finish(payload)
+                    completed_any = True
+            if completed_any and self.replan_on_completion and committed:
+                # revoke unissued commitments: the completed stage
+                # changed ρ/κ/ℓ/τ, so the merged frontier is re-solved
+                committed.clear()
+        horizon = max(last_finish - first_arrival, 0.0)
+        self.last_runs = runs
+        return ServingResult(
+            stats=stats, horizon=horizon, max_in_flight=max_in_flight,
+            replans=replans,
+            model_switches=state.model_switches - switches_before)

@@ -41,6 +41,29 @@ class FrontierProblem:
         return [i for i, (s, _) in enumerate(self.rows) if s == stage_key]
 
 
+def merge_problems(problems: list[FrontierProblem]) -> FrontierProblem:
+    """Stack per-workflow frontier problems into one shared problem.
+
+    All inputs must share the device axis (same ids, same order); rows
+    keep their own keys — the shared-frontier planner keys them by
+    ``(wid, sid)`` so stage ids from different DAGs never collide.  A
+    single merged solve lets many in-flight workflows compete for the
+    same devices under one exact optimum instead of sequential
+    per-workflow greedy carve-outs.
+    """
+    if not problems:
+        raise ValueError("merge_problems: empty problem list")
+    devices = problems[0].devices
+    for pr in problems[1:]:
+        if pr.devices != devices:
+            raise ValueError("merge_problems: mismatched device axes")
+    rows: list[tuple] = []
+    for pr in problems:
+        rows.extend(pr.rows)
+    weights = np.concatenate([pr.weights for pr in problems], axis=0)
+    return FrontierProblem(rows, devices, weights)
+
+
 @dataclasses.dataclass
 class FrontierSolution:
     status: str

@@ -4,29 +4,40 @@ scores, solves it exactly, and materializes shard-slot placements
 
 Two score-generation paths feed the same exact solver:
 
-* the vectorized engine (default) — one ``Scorer.score_matrix`` call
-  per wave computes the full frontier × device table with numpy over
-  cached DAG topology, on a copy-on-write planning overlay;
+* the incremental vectorized engine (default) — the first wave of a
+  planning session calls ``Scorer.score_matrix`` (signature-batched
+  2-D build); every later wave — and every later ``plan()`` call for
+  the same workflow — calls ``Scorer.rescore_matrix``, which reuses the
+  previous wave's component cache and recomputes only entries that the
+  commit-and-advance state changes invalidated.  Runs on a
+  copy-on-write planning overlay;
 * the scalar path (``use_matrix=False``) — the seed's per-(stage,
   slot, device) ``planner_score`` loop, kept as the reference baseline
   for parity tests and ``benchmarks/sched_bench.py``.
 
 Both produce bit-identical weights, hence identical placements.
+
+``plan_shared`` extends the same machinery to a merged multi-workflow
+frontier: per-workflow score matrices (each delta-rescored against its
+own previous wave) are stacked into one assignment problem whose rows
+are ``(wid, sid)``-tagged, so many in-flight DAGs contend for devices
+inside a single exact solve.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.costs import CostModel, shard_partition
 from repro.core.frontier_solver import (NEG, FrontierProblem,
-                                        FrontierSolution,
+                                        FrontierSolution, merge_problems,
                                         solve_frontier_exact)
-from repro.core.scoring import ScoreParams, Scorer
+from repro.core.scoring import FrontierScores, ScoreParams, Scorer
 from repro.core.state import ExecutionState
-from repro.core.workflow import Stage, Workflow
+from repro.core.workflow import Stage, StageKey, Workflow
 
 
 @dataclasses.dataclass
@@ -53,11 +64,44 @@ class SolveRecord:
 
 class FrontierPlanner:
     def __init__(self, params: Optional[ScoreParams] = None,
-                 time_limit: float = 5.0, use_matrix: bool = True):
+                 time_limit: float = 5.0, use_matrix: bool = True,
+                 use_delta: bool = True):
         self.params = params or ScoreParams()
         self.time_limit = time_limit
         self.use_matrix = use_matrix
+        # use_delta=False forces a full matrix rebuild every wave — the
+        # reference for incremental-vs-full parity tests and benchmarks
+        self.use_delta = use_delta
         self.solve_log: list[SolveRecord] = []
+        self._scorer: Optional[Scorer] = None
+        # last wave's score tables per workflow: the seed of the next
+        # delta rescore (within a plan() session and across sessions).
+        # Bounded: long-lived planners seeing a stream of unique wids
+        # (serving without retirement calls) evict oldest-first.
+        self._wave_scores: dict[str, FrontierScores] = {}
+        self._max_cached_workflows = 64
+        # per-phase timing accumulators (benchmarks --profile)
+        self.phase_ms = {"full_build": 0.0, "delta_rescore": 0.0,
+                         "solve": 0.0}
+
+    def _get_scorer(self, sim: ExecutionState) -> Scorer:
+        if self._scorer is None:
+            self._scorer = Scorer(sim, CostModel(sim), self.params)
+        else:
+            self._scorer.rebind(sim)
+        return self._scorer
+
+    def _store_snapshot(self, wid: str, fs: FrontierScores) -> None:
+        if wid not in self._wave_scores and \
+                len(self._wave_scores) >= self._max_cached_workflows:
+            self.forget_workflow(next(iter(self._wave_scores)))
+        self._wave_scores[wid] = fs
+
+    def forget_workflow(self, wid: str) -> None:
+        """Release cached scores/topology for a retired workflow."""
+        self._wave_scores.pop(wid, None)
+        if self._scorer is not None:
+            self._scorer.forget_workflow(wid)
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
@@ -69,16 +113,31 @@ class FrontierPlanner:
         out: list[Placement] = []
         if self.use_matrix:
             sim = state.overlay()          # copy-on-write planning view
-            cm = CostModel(sim)            # hoisted out of the wave loop
-            scorer = Scorer(sim, cm, self.params)
+            scorer = self._get_scorer(sim)
+            cm = scorer.cm                 # hoisted out of the wave loop
         else:
             sim = _simulate_copy(state)    # seed behavior: full dict copy
             cm = scorer = None
         remaining = list(ready)
+        # cross-session snapshot: only the FIRST wave's tables (free of
+        # this session's estimated placements) seed the next plan() call
+        prev = (self._wave_scores.get(wf.wid)
+                if self.use_matrix and self.use_delta else None)
+        n_wave = 0
         while remaining:
             if self.use_matrix:
-                wave = self._plan_wave_fast(wf, sim, remaining, cm,
-                                            scorer)
+                # wave 0 rescoring verifies against full snapshots (no
+                # claim on the base state's marks); later waves patch
+                # from the overlay's own single-consumer dirty set
+                wave, fs = self._plan_wave_fast(
+                    wf, sim, remaining, cm, scorer,
+                    prev if self.use_delta else None,
+                    consume=(n_wave != 1),
+                    dirty=(sim.drain_dirty() if n_wave else None))
+                if n_wave == 0 and fs is not None:
+                    self._store_snapshot(wf.wid, fs)
+                prev = fs
+                n_wave += 1
             else:
                 wave = self._plan_wave(wf, sim, remaining)
             if not wave:
@@ -92,24 +151,120 @@ class FrontierPlanner:
         return out
 
     # ------------------------------------------------------------------
-    # vectorized wave
+    # multi-workflow shared frontier
     # ------------------------------------------------------------------
-    def _plan_wave_fast(self, wf: Workflow, state: ExecutionState,
-                        ready: list[str], cm: CostModel,
-                        scorer: Scorer) -> list[Placement]:
-        """One solver wave fed by the batched scoring engine."""
+    def plan_shared(self, workflows: dict[str, Workflow],
+                    state: ExecutionState,
+                    ready: Sequence[StageKey]) -> list[Placement]:
+        """Commit-and-advance over the merged frontier of many DAGs.
+
+        Each in-flight workflow's ready rows are scored by the same
+        incremental engine (model demand and device pressure merged
+        across workflows), stacked into one ``(wid, sid)``-keyed
+        assignment problem, and solved exactly — so workflows compete
+        for devices inside a single wave instead of being placed
+        greedily one DAG at a time."""
         if not ready:
             return []
-        scorer.set_frontier(wf, ready)
-        fs = scorer.score_matrix(wf, ready)
-        devices = fs.devices
+        sim = state.overlay()
+        scorer = self._get_scorer(sim)
+        cm = scorer.cm
+        out: list[Placement] = []
+        remaining: list[StageKey] = [k for k in ready
+                                     if k[0] in workflows]
+        # per-workflow intra-session wave chains; index 0 of each chain
+        # is the preserved cross-session snapshot (estimate-free)
+        session: dict[str, tuple[FrontierScores, int]] = {}
+        while remaining:
+            wave = self._plan_wave_shared(workflows, sim, remaining,
+                                          scorer, session)
+            if not wave:
+                break
+            for p in wave:
+                _apply_estimate(workflows[p.wid], sim, p, cm)
+            placed = {(p.wid, p.sid) for p in wave}
+            remaining = [k for k in remaining if k not in placed]
+            out.extend(wave)
+        return out
 
-        # margin: same all-pairs mean as the scalar path, accumulated
-        # in the same (row-major, builtin-sum) order for bit parity.
-        flat = fs.base.reshape(-1).tolist()
-        margin = (self.params.margin_factor * (sum(flat) / len(flat))
-                  if flat else 1.0)
+    def _plan_wave_shared(self, workflows: dict[str, Workflow],
+                          sim: ExecutionState,
+                          remaining: Sequence[StageKey],
+                          scorer: Scorer,
+                          session: dict) -> list[Placement]:
+        by_wid: dict[str, list[str]] = {}
+        for wid, sid in remaining:
+            by_wid.setdefault(wid, []).append(sid)
+        # merged frontier demand: cross-DAG same-model stages are
+        # siblings too, and pressure reflects total contention
+        counts: dict[str, int] = {}
+        entries = []
+        for wid, sids in by_wid.items():
+            wf = workflows[wid]
+            for sid in sids:
+                counts[wf.stages[sid].model] = \
+                    counts.get(wf.stages[sid].model, 0) + 1
+                entries.append((wf, sid))
+        pressure = scorer._pressure(entries)
+        problems: list[FrontierProblem] = []
+        base_sum, base_n = 0.0, 0
+        per_wf: list[tuple[str, FrontierScores, list[str]]] = []
+        # one drain per wave: every workflow's rescore must see the same
+        # dirty-device set (a per-call drain would feed only the first).
+        # The session's first wave makes no claim at all — it verifies
+        # against full warm snapshots instead.
+        dirty = sim.drain_dirty() if session else None
+        for wid, sids in by_wid.items():
+            wf = workflows[wid]
+            scorer.set_frontier_shared(wf, sids, counts, pressure)
+            t0 = time.perf_counter()
+            entry = session.get(wid)
+            if entry is None:             # first wave for this workflow
+                prev, n_scored = self._wave_scores.get(wid), 0
+            else:
+                prev, n_scored = entry
+            if not self.use_delta:
+                prev = None
+            fs = scorer.rescore_matrix(wf, sids, prev,
+                                       consume=(n_scored != 1),
+                                       dirty=dirty)
+            key = "full_build" if fs.built_full else "delta_rescore"
+            self.phase_ms[key] += (time.perf_counter() - t0) * 1e3
+            if n_scored == 0:
+                self._store_snapshot(wid, fs)  # cross-session snapshot
+            session[wid] = (fs, n_scored + 1)
+            per_wf.append((wid, fs, sids))
+            flat = fs.base.reshape(-1).tolist()
+            base_sum += sum(flat)
+            base_n += len(flat)
+        margin = (self.params.margin_factor * (base_sum / base_n)
+                  if base_n else 1.0)
+        for wid, fs, sids in per_wf:
+            rows, weights = self._rows_from_scores(fs, sids, margin,
+                                                   key_of=lambda s,
+                                                   w=wid: (w, s))
+            if rows:
+                problems.append(FrontierProblem(
+                    rows, fs.devices, np.array(weights)))
+        if not problems:
+            return []
+        problem = merge_problems(problems)
+        t0 = time.perf_counter()
+        sol = solve_frontier_exact(problem, self.time_limit)
+        self.phase_ms["solve"] += (time.perf_counter() - t0) * 1e3
+        self.solve_log.append(SolveRecord(
+            wall_time=sol.wall_time, nodes=sol.nodes, status=sol.status,
+            n_rows=len(problem.rows), n_devices=len(problem.devices),
+            objective=sol.objective))
+        return self._materialize_shared(workflows, sim, sol)
 
+    # ------------------------------------------------------------------
+    # vectorized wave
+    # ------------------------------------------------------------------
+    def _rows_from_scores(self, fs: FrontierScores, ready: list[str],
+                          margin: float, key_of=lambda s: s
+                          ) -> tuple[list[tuple], list[np.ndarray]]:
+        """Regret-margin solver rows from one score table."""
         rows: list[tuple] = []
         weights: list[np.ndarray] = []
         for i, sid in enumerate(ready):
@@ -123,24 +278,54 @@ class FrontierPlanner:
                 best = raw.max()
                 w0 = margin + raw - best
             solo_best = float(np.min(fs.eft[i]))
-            rows.append((sid, 0))
+            rows.append((key_of(sid), 0))
             weights.append(w0)
             for k in range(1, fs.max_slots[i]):
                 w = fs.shard_weights(i, k, solo_best)
                 if fs.constrained[i] and np.all(w <= NEG / 2):
                     continue
-                rows.append((sid, k))
+                rows.append((key_of(sid), k))
                 weights.append(w)
+        return rows, weights
+
+    def _plan_wave_fast(self, wf: Workflow, state: ExecutionState,
+                        ready: list[str], cm: CostModel,
+                        scorer: Scorer,
+                        prev: Optional[FrontierScores] = None,
+                        consume: bool = True,
+                        dirty: Optional[set] = None
+                        ) -> tuple[list[Placement],
+                                   Optional[FrontierScores]]:
+        """One solver wave fed by the incremental scoring engine."""
+        if not ready:
+            return [], None
+        scorer.set_frontier(wf, ready)
+        t0 = time.perf_counter()
+        fs = scorer.rescore_matrix(wf, ready, prev, consume=consume,
+                                   dirty=dirty)
+        key = "full_build" if fs.built_full else "delta_rescore"
+        self.phase_ms[key] += (time.perf_counter() - t0) * 1e3
+        devices = fs.devices
+
+        # margin: same all-pairs mean as the scalar path, accumulated
+        # in the same (row-major, builtin-sum) order for bit parity.
+        flat = fs.base.reshape(-1).tolist()
+        margin = (self.params.margin_factor * (sum(flat) / len(flat))
+                  if flat else 1.0)
+
+        rows, weights = self._rows_from_scores(fs, ready, margin)
         if not rows:
-            return []
+            return [], fs
 
         problem = FrontierProblem(rows, devices, np.array(weights))
+        t0 = time.perf_counter()
         sol = solve_frontier_exact(problem, self.time_limit)
+        self.phase_ms["solve"] += (time.perf_counter() - t0) * 1e3
         self.solve_log.append(SolveRecord(
             wall_time=sol.wall_time, nodes=sol.nodes, status=sol.status,
             n_rows=len(rows), n_devices=len(devices),
             objective=sol.objective))
-        return self._materialize(wf, state, cm, sol)
+        return self._materialize(wf, state, cm, sol), fs
 
     # ------------------------------------------------------------------
     # scalar wave (seed reference path)
@@ -231,6 +416,27 @@ class FrontierPlanner:
                                  planned_at=state.now))
         return out
 
+    def _materialize_shared(self, workflows: dict[str, Workflow],
+                            state: ExecutionState, sol: FrontierSolution
+                            ) -> list[Placement]:
+        """Materialize a merged-frontier solution whose stage keys are
+        ``(wid, sid)`` tuples."""
+        by_stage: dict[tuple, dict[int, int]] = {}
+        for (key, slot), dev in sol.assignment.items():
+            by_stage.setdefault(key, {})[slot] = dev
+        out: list[Placement] = []
+        for (wid, sid), slots in by_stage.items():
+            if 0 not in slots:
+                continue
+            wf = workflows[wid]
+            devs = tuple(slots[k] for k in sorted(slots))
+            speeds = [state.cluster.devices[d].speed for d in devs]
+            sizes = tuple(shard_partition(wf.num_queries, speeds))
+            out.append(Placement(wid=wid, sid=sid, devices=devs,
+                                 shard_sizes=sizes, score=sol.objective,
+                                 planned_at=state.now))
+        return out
+
 
 def _simulate_copy(state: ExecutionState) -> ExecutionState:
     """Cheap planning copy of the execution state (dict-level)."""
@@ -256,8 +462,11 @@ def _apply_estimate(wf: Workflow, sim: ExecutionState, p: Placement,
     for d, nq in zip(p.devices, p.shard_sizes):
         t0 = max(sim.now, sim.device_free(d))
         dur = max(1e-6, cm.breakdown(wf, st, d, nq).total)
-        sim.free_at[d] = t0 + dur
+        sim.set_free_at(d, t0 + dur)
+        # raw residency write (no switch counting / prefix pruning in
+        # the planning estimate), but still marked for delta rescoring
         sim.residency[d] = st.model
+        sim.touch_device(d)
         if st.keep_cache:
             sim.warm_prefix(d, st.prefix_group, st.model, nq, t0 + dur)
         fins.append(t0 + dur)

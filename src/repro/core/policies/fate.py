@@ -2,26 +2,41 @@
 horizon-aware state-conditional scoring (the paper's method)."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.core.planner import FrontierPlanner, Placement
 from repro.core.scoring import ScoreParams
 from repro.core.state import ExecutionState
-from repro.core.workflow import Workflow
+from repro.core.workflow import StageKey, Workflow
 
 
 class FATEPolicy:
     name = "FATE"
 
     def __init__(self, params: Optional[ScoreParams] = None,
-                 time_limit: float = 5.0, use_matrix: bool = True):
+                 time_limit: float = 5.0, use_matrix: bool = True,
+                 use_delta: bool = True):
         self.planner = FrontierPlanner(params, time_limit,
-                                       use_matrix=use_matrix)
+                                       use_matrix=use_matrix,
+                                       use_delta=use_delta)
         self.params = self.planner.params
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
         return self.planner.plan(wf, state, ready)
+
+    def plan_shared(self, workflows: dict[str, Workflow],
+                    state: ExecutionState,
+                    ready: Sequence[StageKey]) -> list[Placement]:
+        """Serving mode: one merged frontier problem across DAGs."""
+        return self.planner.plan_shared(workflows, state, ready)
+
+    def forget_workflow(self, wid: str) -> None:
+        self.planner.forget_workflow(wid)
+
+    @property
+    def phase_ms(self):
+        return self.planner.phase_ms
 
     @property
     def solve_log(self):

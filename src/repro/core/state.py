@@ -9,6 +9,28 @@
 The state also carries bookkeeping used by the runtime (completed set,
 running set, committed-but-not-finished set — Appendix A.1 notes these
 implementation-level sets are suppressed in the main-text formulation).
+
+Dirty-set protocol
+------------------
+Incremental wave rescoring (``Scorer.rescore_matrix``) reuses the
+previous wave's frontier score tables and recomputes only the entries
+whose state inputs changed.  Every mutation of per-device state must
+go through the mutator methods (``set_free_at``, ``set_resident``,
+``warm_prefix``), which record the touched device in a dirty-device
+set.  A single-consumer caller (the planner, between its own
+commit-and-advance waves on one overlay) calls
+:meth:`ExecutionState.drain_dirty` to claim-and-clear the set and
+passes it to the rescorer, which then patches only those devices'
+warm-prefix columns.  When no claimed set is available — the first
+wave of a session, or any caller that cannot guarantee it is the sole
+consumer — the rescorer verifies warm state against fully re-gathered
+per-signature snapshots instead, so a lost or stolen mark can never
+produce stale scores.  Residency, wait times, and sibling counts are
+always snapshot-diffed (clock advancement shrinks every busy device's
+wait without touching the device, so marks alone could not cover
+them).  ``PlanningOverlay`` starts each planning session with an
+empty dirty set: its drains see exactly the devices its own estimated
+placements touched.
 """
 from __future__ import annotations
 
@@ -61,6 +83,17 @@ class ExecutionState:
             self.residency.setdefault(d, None)
             self.prefix.setdefault(d, {})
             self.free_at.setdefault(d, 0.0)
+        self._dirty_devices: set[int] = set()
+
+    # -- dirty-set protocol (see module docstring) -----------------------
+    def touch_device(self, device: int) -> None:
+        self._dirty_devices.add(device)
+
+    def drain_dirty(self) -> set[int]:
+        """Claim-and-clear the set of devices mutated since last drain."""
+        out = self._dirty_devices
+        self._dirty_devices = set()
+        return out
 
     # -- ρ --------------------------------------------------------------
     def resident_model(self, device: int) -> Optional[str]:
@@ -77,6 +110,7 @@ class ExecutionState:
                 g: e for g, e in self.prefix[device].items()
                 if e.model == model}
         self.residency[device] = model
+        self.touch_device(device)
 
     # -- κ --------------------------------------------------------------
     def prefix_overlap(self, stage: Stage, device: int,
@@ -102,6 +136,7 @@ class ExecutionState:
             slot.warm_queries = 0
         slot.warm_queries = max(slot.warm_queries, queries)
         slot.last_used = now
+        self.touch_device(device)
 
     # -- ℓ --------------------------------------------------------------
     def parent_locations(self, wid: str, stage: Stage) -> dict[str, tuple]:
@@ -116,6 +151,10 @@ class ExecutionState:
         return k
 
     # -- τ --------------------------------------------------------------
+    def set_free_at(self, device: int, t: float) -> None:
+        self.free_at[device] = t
+        self.touch_device(device)
+
     def device_free(self, device: int) -> float:
         return self.free_at.get(device, 0.0)
 
@@ -186,6 +225,14 @@ class PlanningOverlay(ExecutionState):
         self.model_switches = base.model_switches
         self._base = base
         self._prefix_own: set[int] = set()
+        # fresh, overlay-local dirty set: it records ONLY this planning
+        # session's estimated placements, so the planner can trust it
+        # for intra-session wave patching (single consumer by
+        # construction).  Base-state mutations are NOT claimed — the
+        # session's first rescore verifies warm state against full
+        # re-gathered snapshots instead (see Scorer.rescore_matrix), so
+        # constructing an overlay never perturbs other consumers.
+        self._dirty_devices: set[int] = set()
 
     def _own_prefix(self, device: int) -> None:
         if device not in self._prefix_own:

@@ -11,6 +11,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional, Sequence
 
+# Globally-unique stage identity: (workflow id, stage id).  The
+# single-workflow planner keys rows by bare ``sid``; the shared-frontier
+# serving layer tags every row with its owning workflow so many in-flight
+# DAGs can contend inside one frontier problem.
+StageKey = tuple[str, str]
+
 
 @dataclasses.dataclass
 class Stage:
@@ -49,7 +55,33 @@ class Workflow:
     meta: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
+        self._generation = 0
         self._wire()
+
+    @property
+    def generation(self) -> int:
+        """Topology generation counter.
+
+        Bumped by :meth:`invalidate_topology` whenever the stage graph is
+        mutated after construction.  Consumers that memoize per-workflow
+        derived data (descendant tables here, base-cost rows and tail
+        term plans in :mod:`repro.core.scoring`) key or guard their
+        caches on this counter so a mutated workflow is never scored
+        against stale topology.
+        """
+        return self._generation
+
+    def invalidate_topology(self) -> None:
+        """Declare an in-place mutation of ``stages`` (added stages,
+        rewired parents, edited cost profiles).  Re-wires children /
+        levels / topo order, drops the descendant cache, and bumps
+        :attr:`generation` so downstream memoized scorers re-derive."""
+        self._generation += 1
+        self._wire()
+
+    def stage_key(self, sid: str) -> StageKey:
+        """Workflow-tagged stage id for cross-DAG frontiers."""
+        return (self.wid, sid)
 
     def _wire(self) -> None:
         """Recompute children from parents and topological levels."""

@@ -1,0 +1,13 @@
+"""Pallas-TPU API drift shims.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across jax releases; the pinned container ships the
+older name.  Import ``CompilerParams`` from here so the kernels build
+against either API.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

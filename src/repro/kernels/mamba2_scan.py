@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _mamba_kernel(xh_ref, b_ref, c_ref, dta_ref, dt_ref, o_ref, fin_ref,
                   state_scr, *, chunk: int):
@@ -99,7 +101,7 @@ def mamba2_scan(xh: jax.Array, b: jax.Array, c: jax.Array, dt: jax.Array,
             jax.ShapeDtypeStruct((bsz * h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xf, bf, cf, dtaf, dtf)

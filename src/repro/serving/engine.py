@@ -169,7 +169,7 @@ class ServingEngine:
                 now = time.perf_counter() - t_start
                 state.now = now
                 for d in p.devices:
-                    state.free_at[d] = now
+                    state.set_free_at(d, now)
                     state.set_resident(d, stage.model)
                     if stage.keep_cache:
                         state.warm_prefix(d, stage.prefix_group,

@@ -5,6 +5,12 @@ NormP95(m) = exp( mean_i log(L95_{m,i} / L95_{RR,i}) )
 XDevEdge   = Σ cross_device_parent_edges / Σ workflow_tasks
 CacheScore = Σ prefix_cache_hits_est / Σ workflow_tasks
 ModelCont  = Σ same_model_continuations / Σ workflow_tasks
+
+Serving metrics (shared-frontier suite): per-workflow makespan is
+finish − arrival, P95 is the 95th-percentile per-query latency relative
+to arrival, both normalized per instance against the baseline policy
+and geomeaned; goodput is completed workflows (and queries) per second
+of busy horizon.
 """
 from __future__ import annotations
 
@@ -27,6 +33,40 @@ def normalized(values: dict[str, float], baseline: dict[str, float]
         b = baseline.get(k)
         if b is not None and b > 0 and v > 0:
             out.append(v / b)
+    return out
+
+
+def serving_summary(results: dict, baseline: str = "RoundRobin"
+                    ) -> dict[str, dict]:
+    """Aggregate ``{policy: ServingResult}`` into normalized serving
+    metrics: geomean per-workflow makespan/P95 ratios vs ``baseline``
+    (strict instance intersection), goodput, and contention stats."""
+    base = results.get(baseline)
+    out: dict[str, dict] = {}
+    for pol, res in results.items():
+        ms_ratios, p95_ratios = [], []
+        if base is not None:
+            for wid, s in res.stats.items():
+                b = base.stats.get(wid)
+                if b is None:
+                    continue
+                if b.makespan > 0 and s.makespan > 0:
+                    ms_ratios.append(s.makespan / b.makespan)
+                if b.p95 > 0 and s.p95 > 0:
+                    p95_ratios.append(s.p95 / b.p95)
+        out[pol] = {
+            "norm_ms": geomean(ms_ratios),
+            "norm_p95": geomean(p95_ratios),
+            "goodput_wps": res.goodput_wps,
+            "goodput_qps": res.goodput_qps,
+            "mean_makespan": (sum(s.makespan for s in res.stats.values())
+                              / len(res.stats) if res.stats
+                              else float("nan")),
+            "max_in_flight": res.max_in_flight,
+            "replans": res.replans,
+            "model_switches": res.model_switches,
+            "n": len(res.stats),
+        }
     return out
 
 

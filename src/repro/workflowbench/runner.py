@@ -12,7 +12,8 @@ from typing import Optional, Sequence
 
 from repro.core.costs import CostParams
 from repro.core.devices import Cluster, homogeneous_cluster
-from repro.core.executor import WorkflowExecutor, fresh_state
+from repro.core.executor import (ServingExecutor, ServingResult,
+                                 WorkflowExecutor, fresh_state)
 from repro.core.policies import make_policy
 from repro.core.scoring import ScoreParams
 from repro.core.workflow import Workflow
@@ -99,6 +100,55 @@ def export_csv(rows: Sequence[RunRow], name: str) -> Path:
         w.writeheader()
         for r in rows:
             w.writerow(r.as_dict())
+    return path
+
+
+def run_serving(trace: Sequence[tuple[float, Workflow]],
+                policies: Sequence[str],
+                cluster: Optional[Cluster] = None, *,
+                score_params: Optional[ScoreParams] = None,
+                cost_params: Optional[CostParams] = None,
+                csv_name: Optional[str] = None
+                ) -> dict[str, ServingResult]:
+    """Run one Poisson serving trace under every policy.
+
+    Each policy gets a fresh execution state over the same cluster and
+    the same arrival trace (same workflow instances — the generators
+    are deterministic, so cross-policy per-workflow ratios are
+    meaningful).  Returns ``{policy: ServingResult}``; aggregate with
+    :func:`repro.workflowbench.metrics.serving_summary`.
+    """
+    cluster = cluster or homogeneous_cluster(8)
+    results: dict[str, ServingResult] = {}
+    for pol_name in policies:
+        kwargs = {}
+        if pol_name == "FATE" and score_params is not None:
+            kwargs["params"] = score_params
+        policy = make_policy(pol_name, **kwargs)
+        state = fresh_state(cluster)
+        ex = ServingExecutor(state, cost_params)
+        results[pol_name] = ex.run(list(trace), policy)
+    if csv_name:
+        export_serving_csv(results, csv_name)
+    return results
+
+
+def export_serving_csv(results: dict[str, ServingResult],
+                       name: str) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / name
+    fields = ["policy", "wid", "arrival", "finish", "makespan", "p95",
+              "n_stages", "n_queries"]
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields)
+        w.writeheader()
+        for pol, res in results.items():
+            for wid, s in sorted(res.stats.items()):
+                w.writerow({
+                    "policy": pol, "wid": wid, "arrival": s.arrival,
+                    "finish": s.finish, "makespan": s.makespan,
+                    "p95": s.p95, "n_stages": s.n_stages,
+                    "n_queries": len(s.query_completion)})
     return path
 
 

@@ -1,4 +1,6 @@
-"""Controlled behavioural suites (paper §4.3, Appendix C.1 & D.2).
+"""Controlled behavioural suites (paper §4.3, Appendix C.1 & D.2),
+plus the multi-workflow serving trace generator (§2's serving setting:
+many agentic DAGs with stochastic arrivals contend for one cluster).
 
 * Prefix-reuse suite — workflow-style DAG templates over long-context
   workloads with shared-prefix repeat ratios {0, 0.25, 0.5, 1.0}.
@@ -104,3 +106,40 @@ def conflict_suite(ratio: float, n_instances: int = 4,
                    num_queries: int = 16) -> list[Workflow]:
     return [conflict_suite_instance(ratio, i, num_queries)
             for i in range(n_instances)]
+
+
+# ---------------------------------------------------------------------------
+# multi-workflow serving traces
+# ---------------------------------------------------------------------------
+
+
+def poisson_serving_trace(n_workflows: int = 12, rate: float = 4.0,
+                          seed: int = 0, num_queries: int = 8,
+                          mix: str = "mixed"
+                          ) -> list[tuple[float, "Workflow"]]:
+    """Poisson arrival trace of heterogeneous workflow instances.
+
+    Inter-arrival times are Exp(rate); instances cycle through the
+    prefix-reuse and conflict-stress templates (``mix='mixed'``), or a
+    single family (``mix='prefix'`` / ``mix='conflict'``), each with a
+    unique workflow id so many copies can be in flight at once.
+    Deterministic in ``seed``.  Returned sorted by arrival time —
+    directly consumable by ``ServingExecutor.run``.
+    """
+    import random
+
+    rng = random.Random(seed)
+    trace: list[tuple[float, Workflow]] = []
+    t = 0.0
+    for i in range(n_workflows):
+        t += rng.expovariate(rate)
+        ratio = RATIOS[i % len(RATIOS)]
+        if mix == "prefix" or (mix == "mixed" and i % 2 == 0):
+            wf = prefix_suite_instance(ratio, i, num_queries)
+            wf.wid = f"serve-prefix-{i:03d}"
+        else:
+            wf = conflict_suite_instance(ratio, i, num_queries)
+            wf.wid = f"serve-conflict-{i:03d}"
+        wf.meta.pop("preload_model", None)   # serving fleet is shared
+        trace.append((t, wf))
+    return trace

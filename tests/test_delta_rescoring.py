@@ -1,0 +1,263 @@
+"""Incremental delta-rescoring engine: property-tested bit-parity with
+full ``score_matrix`` recomputation across random commit waves, plus
+the cache-invalidation generation-counter regressions (stale
+``descendants_within`` / ``_preferred_devices`` / base-cost rows)."""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline container: shim
+    from _fallback_hypothesis import given, settings, strategies as st
+
+from repro.core.costs import CostModel
+from repro.core.devices import heterogeneous_cluster, homogeneous_cluster
+from repro.core.executor import WorkflowExecutor, fresh_state
+from repro.core.policies import make_policy
+from repro.core.scoring import (ScoreParams, Scorer, _preferred_devices,
+                                invalidate_affinity_cache)
+from repro.core.workflow import Stage, Workflow
+
+MODELS = ["qwen-7b", "deepseek-7b", "llama-8b", "llama-3b", "qwen-14b"]
+
+
+def _random_workflow(rng: random.Random, n_stages: int,
+                     wid: str) -> Workflow:
+    stages = {}
+    for i in range(n_stages):
+        parents = tuple(
+            f"s{j}" for j in range(i)
+            if rng.random() < min(0.5, 2.5 / max(i, 1)))
+        stages[f"s{i}"] = Stage(
+            sid=f"s{i}", model=rng.choice(MODELS),
+            max_shards=rng.choice([1, 1, 2]),
+            base_cost={-1: rng.uniform(0.01, 0.2)},
+            prefix_group=rng.choice([None, "g0", "g1"]),
+            shared_fraction=rng.uniform(0.2, 1.0),
+            output_tokens=rng.choice([64.0, 256.0, 512.0]),
+            parents=parents)
+    return Workflow(wid=wid, stages=stages, num_queries=8)
+
+
+def _ready(wf, done):
+    return [sid for sid in wf.topo_order if sid not in done
+            and all(p in done for p in wf.stages[sid].parents)]
+
+
+def _mutate(rng: random.Random, state, n_dev: int) -> None:
+    """One completion-like state change through the dirty-set mutators."""
+    d = rng.randrange(n_dev)
+    kind = rng.randrange(5)
+    if kind == 0:
+        state.set_free_at(d, state.now + rng.uniform(0.0, 0.5))
+    elif kind == 1:
+        state.set_resident(d, rng.choice(MODELS))
+    elif kind == 2:
+        state.warm_prefix(d, rng.choice(["g0", "g1"]),
+                          rng.choice(MODELS), rng.randint(1, 8),
+                          state.now)
+    elif kind == 3:
+        state.now += rng.uniform(0.0, 0.1)
+    # kind 4: no mutation — exercises the pure-reuse fast path
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(4, 24),
+       hetero=st.sampled_from([False, True]),
+       horizon=st.sampled_from([1, 3, 4]))
+def test_delta_matches_full_recompute(seed, n, hetero, horizon):
+    """The tentpole contract: across random commit waves (stage
+    completions, residency flips, prefix warms, clock advances, rows
+    entering/leaving the frontier), ``rescore_matrix`` is bit-identical
+    to a from-scratch ``score_matrix`` on the same state."""
+    rng = random.Random(seed)
+    cluster = (heterogeneous_cluster(6) if hetero
+               else homogeneous_cluster(6))
+    wf = _random_workflow(rng, n, f"delta-{seed}")
+    state = fresh_state(cluster)
+    params = ScoreParams(horizon=horizon)
+    scorer = Scorer(state, CostModel(state), params)
+    done: set[str] = set()
+    prev = None
+    for _ in range(12):
+        ready = _ready(wf, done)
+        if not ready:
+            break
+        scorer.set_frontier(wf, ready)
+        prev = scorer.rescore_matrix(wf, ready, prev)
+        fresh = Scorer(state, CostModel(state), params)
+        fresh.set_frontier(wf, ready)
+        full = fresh.score_matrix(wf, ready)
+        for name in ("raw", "eft", "base", "wait"):
+            assert np.array_equal(getattr(prev, name),
+                                  getattr(full, name)), name
+        assert prev.pressure == full.pressure
+        assert prev.constrained == full.constrained
+        assert prev.max_slots == full.max_slots
+        # advance: complete a random ready stage + mutate device state
+        sid = rng.choice(ready)
+        done.add(sid)
+        st_ = wf.stages[sid]
+        d = rng.randrange(cluster.n)
+        state.output_loc[(wf.wid, sid)] = (d,)
+        state.completed.add((wf.wid, sid))
+        state.set_free_at(d, state.now + 0.1)
+        state.set_resident(d, st_.model)
+        if st_.keep_cache:
+            state.warm_prefix(d, st_.prefix_group, st_.model, 4,
+                              state.now)
+        _mutate(rng, state, cluster.n)
+
+
+def test_consume_false_preserves_prev():
+    """``consume=False`` must leave the previous tables usable: two
+    divergent rescores off one snapshot both match full recomputes."""
+    rng = random.Random(7)
+    cluster = homogeneous_cluster(4)
+    wf = _random_workflow(rng, 10, "keep")
+    state = fresh_state(cluster)
+    params = ScoreParams()
+    scorer = Scorer(state, CostModel(state), params)
+    ready = _ready(wf, set())
+    scorer.set_frontier(wf, ready)
+    snap = scorer.score_matrix(wf, ready)
+    raw0 = snap.raw.copy()
+    state.set_resident(0, "qwen-14b")
+    scorer.set_frontier(wf, ready)
+    a = scorer.rescore_matrix(wf, ready, snap, consume=False)
+    assert np.array_equal(snap.raw, raw0)          # snapshot untouched
+    state.set_resident(1, "llama-3b")
+    scorer.set_frontier(wf, ready)
+    b = scorer.rescore_matrix(wf, ready, a)        # chained, consumed
+    fresh = Scorer(state, CostModel(state), params)
+    fresh.set_frontier(wf, ready)
+    full = fresh.score_matrix(wf, ready)
+    assert np.array_equal(b.raw, full.raw)
+    assert np.array_equal(b.eft, full.eft)
+
+
+def test_planner_reuses_delta_across_plan_calls():
+    """The planner's cross-session snapshot must not go stale while the
+    executor mutates the base state between replans (placements stay
+    identical to the scalar reference across whole runs)."""
+    rng = random.Random(3)
+    for seed in range(6):
+        wf = _random_workflow(random.Random(seed), 14, f"x{seed}")
+        results = {}
+        for use_matrix in (True, False):
+            state = fresh_state(homogeneous_cluster(5))
+            pol = make_policy("FATE", use_matrix=use_matrix)
+            results[use_matrix] = WorkflowExecutor(state).run(wf, pol)
+        fast, slow = results[True], results[False]
+        assert fast.makespan == slow.makespan, seed
+        for sid in wf.stages:
+            assert (fast.stage_runs[sid].placement.devices
+                    == slow.stage_runs[sid].placement.devices), (seed,
+                                                                 sid)
+        rng.random()
+
+
+def test_overlay_creation_cannot_starve_delta_rescoring():
+    """Constructing a planning overlay (any consumer, any time) must
+    not invalidate another planner's delta correctness: warm-prefix
+    changes on the base state are detected by snapshot re-gather, not
+    by ownership of the dirty marks."""
+    rng = random.Random(11)
+    wf = _random_workflow(rng, 12, "steal")
+    state = fresh_state(homogeneous_cluster(4))
+    pol = make_policy("FATE")
+    ready = _ready(wf, set())
+    pol.plan(wf, state, ready)                 # seed the snapshot
+    # base-state mutation (a completion warming a prefix group) ...
+    state.warm_prefix(1, "g0", wf.stages[ready[0]].model, 8, 0.0)
+    state.set_resident(2, "qwen-14b")
+    # ... then an unrelated consumer creates an overlay ("steals" any
+    # pending marks) before the planner replans
+    state.overlay()
+    fast = pol.plan(wf, state, list(ready))
+    ref = make_policy("FATE", use_delta=False).plan(wf, state,
+                                                    list(ready))
+    assert [(p.sid, p.devices, p.shard_sizes) for p in fast] \
+        == [(p.sid, p.devices, p.shard_sizes) for p in ref]
+
+
+# ---------------------------------------------------------------------------
+# cache invalidation (generation counters)
+# ---------------------------------------------------------------------------
+
+
+def test_new_workflow_object_with_reused_wid_not_poisoned():
+    """A fresh Workflow reusing a wid starts at generation 0 again, so
+    the persistent planner caches must key on object identity, not the
+    (wid, generation) pair alone."""
+    def build(model, cost):
+        stages = {
+            "a": Stage("a", model, base_cost={-1: cost}),
+            "b": Stage("b", model, base_cost={-1: cost},
+                       parents=("a",)),
+        }
+        return Workflow(wid="reused", stages=stages, num_queries=8)
+
+    pol = make_policy("FATE")
+    state1 = fresh_state(homogeneous_cluster(4))
+    pol.plan(build("qwen-7b", 0.1), state1, ["a"])
+    # same wid, different DAG contents, same generation (0)
+    wf2 = build("qwen-14b", 0.35)
+    state2 = fresh_state(homogeneous_cluster(4))
+    got = pol.plan(wf2, state2, ["a"])
+    ref = make_policy("FATE").plan(wf2,
+                                   fresh_state(homogeneous_cluster(4)),
+                                   ["a"])
+    assert [(p.sid, p.devices) for p in got] \
+        == [(p.sid, p.devices) for p in ref]
+
+
+def test_workflow_generation_invalidates_descendants():
+    stages = {
+        "a": Stage("a", "qwen-7b", base_cost={-1: 0.1}),
+        "b": Stage("b", "qwen-7b", base_cost={-1: 0.1}, parents=("a",)),
+    }
+    wf = Workflow(wid="gen", stages=stages, num_queries=4)
+    assert wf.descendants_within("a", 3) == (("b", 1),)
+    gen0 = wf.generation
+    # mutate the DAG in place: add a grandchild
+    wf.stages["c"] = Stage("c", "llama-8b", base_cost={-1: 0.1},
+                           parents=("b",))
+    wf.invalidate_topology()
+    assert wf.generation == gen0 + 1
+    assert wf.descendants_within("a", 3) == (("b", 1), ("c", 2))
+    assert wf.stages["b"].children == ("c",)
+
+
+def test_scorer_drops_stale_caches_on_generation_bump():
+    """Mutating a stage's cost profile after first scoring must reflect
+    in scores once the workflow declares the mutation."""
+    stages = {
+        "a": Stage("a", "qwen-7b", base_cost={-1: 0.1}),
+        "b": Stage("b", "llama-8b", base_cost={-1: 0.2}),
+    }
+    wf = Workflow(wid="stale", stages=stages, num_queries=4)
+    state = fresh_state(homogeneous_cluster(3))
+    scorer = Scorer(state, CostModel(state), ScoreParams())
+    scorer.set_frontier(wf, ["a", "b"])
+    fs1 = scorer.score_matrix(wf, ["a", "b"])
+    wf.stages["a"].base_cost[-1] = 0.4          # in-place mutation
+    wf.invalidate_topology()
+    scorer.set_frontier(wf, ["a", "b"])
+    fs2 = scorer.rescore_matrix(wf, ["a", "b"], fs1)
+    fresh = Scorer(state, CostModel(state), ScoreParams())
+    fresh.set_frontier(wf, ["a", "b"])
+    full = fresh.score_matrix(wf, ["a", "b"])
+    assert np.array_equal(fs2.raw, full.raw)
+    assert fs2.base[0, 0] == pytest.approx(0.4 * 4)   # speed 1.0
+
+
+def test_preferred_devices_generation_key():
+    a = _preferred_devices("some-model", 8)
+    assert _preferred_devices("some-model", 8) is a   # memoized
+    invalidate_affinity_cache()
+    b = _preferred_devices("some-model", 8)
+    assert b == a                                     # same spread...
+    assert b is not a                                 # ...recomputed

@@ -1,0 +1,196 @@
+"""Multi-workflow shared-frontier serving: SharedFrontier mechanics,
+ServingExecutor invariants under Poisson load (>= 8 concurrent DAGs),
+and the workflowbench serving metrics."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.costs import CostModel
+from repro.core.devices import homogeneous_cluster
+from repro.core.executor import (ServingExecutor, SharedFrontier,
+                                 fresh_state)
+from repro.core.policies import ALL_POLICIES, make_policy
+from repro.core.scoring import ScoreParams, Scorer
+from repro.core.workflow import Stage, Workflow
+from repro.workflowbench.metrics import serving_summary
+from repro.workflowbench.runner import run_serving
+from repro.workflowbench.suites import poisson_serving_trace
+
+
+def _chain(wid: str, n: int = 3, model: str = "qwen-7b") -> Workflow:
+    stages = {}
+    prev = ()
+    for i in range(n):
+        stages[f"s{i}"] = Stage(f"s{i}", model, base_cost={-1: 0.05},
+                                parents=prev)
+        prev = (f"s{i}",)
+    return Workflow(wid=wid, stages=stages, num_queries=4)
+
+
+def test_shared_frontier_merges_and_retires():
+    fr = SharedFrontier()
+    fr.admit(_chain("wf-a"))
+    fr.admit(_chain("wf-b", n=2))
+    assert fr.ready(set()) == [("wf-a", "s0"), ("wf-b", "s0")]
+    # claimed stages disappear from the merged list
+    assert fr.ready({("wf-a", "s0")}) == [("wf-b", "s0")]
+    assert not fr.complete("wf-a", "s0")
+    assert fr.ready(set()) == [("wf-a", "s1"), ("wf-b", "s0")]
+    # finishing the last stage retires the workflow
+    assert not fr.complete("wf-b", "s0")
+    assert fr.complete("wf-b", "s1")
+    assert len(fr) == 1
+    with pytest.raises(ValueError):
+        fr.admit(_chain("wf-a"))
+
+
+def test_serving_rejects_reused_wid_in_trace():
+    """Serving stats are keyed by wid for the whole trace: a reused id
+    (even after the first instance completed) must be rejected loudly
+    rather than clobbering the earlier workflow's stats."""
+    trace = [(0.0, _chain("dup")), (100.0, _chain("dup"))]
+    ex = ServingExecutor(fresh_state(homogeneous_cluster(2)))
+    with pytest.raises(ValueError, match="duplicate workflow id"):
+        ex.run(trace, make_policy("RoundRobin"))
+
+
+def test_serving_trace_deterministic():
+    a = poisson_serving_trace(n_workflows=6, seed=3)
+    b = poisson_serving_trace(n_workflows=6, seed=3)
+    assert [(t, wf.wid) for t, wf in a] == [(t, wf.wid) for t, wf in b]
+    assert all(t1 <= t2 for (t1, _), (t2, _) in zip(a, a[1:]))
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+def test_serving_executor_invariants(policy):
+    """Every admitted workflow completes; per-device busy intervals
+    never overlap; latencies are positive and bounded by the horizon."""
+    trace = poisson_serving_trace(n_workflows=8, rate=8.0, seed=1,
+                                  num_queries=4)
+    state = fresh_state(homogeneous_cluster(6))
+    ex = ServingExecutor(state)
+    res = ex.run(trace, make_policy(policy))
+    assert set(res.stats) == {wf.wid for _, wf in trace}
+    assert res.max_in_flight >= 1
+    for wid, s in res.stats.items():
+        assert s.finish >= s.arrival
+        assert len(s.query_completion) == 4
+        assert all(t >= s.arrival - 1e-9 for t in s.query_completion)
+        assert s.p95 <= s.makespan + 1e-9
+    assert res.horizon > 0
+    assert res.goodput_wps > 0
+
+
+def test_serving_concurrency_and_summary():
+    """Acceptance: >= 8 concurrent DAGs from a Poisson trace end-to-end
+    with normalized makespan/P95 reported per policy."""
+    trace = poisson_serving_trace(n_workflows=10, rate=50.0, seed=0,
+                                  num_queries=4)
+    results = run_serving(trace, ["RoundRobin", "FATE"],
+                          homogeneous_cluster(8))
+    assert results["FATE"].max_in_flight >= 8
+    summ = serving_summary(results)
+    assert set(summ) == {"RoundRobin", "FATE"}
+    for pol, row in summ.items():
+        assert math.isfinite(row["norm_ms"])
+        assert math.isfinite(row["norm_p95"])
+        assert row["n"] == 10
+    assert summ["RoundRobin"]["norm_ms"] == pytest.approx(1.0)
+    # the future-state-aware planner should not lose to round-robin
+    # under contention (it wins by a wide margin in practice)
+    assert summ["FATE"]["norm_ms"] < 1.0
+    assert summ["FATE"]["goodput_wps"] >= summ["RoundRobin"]["goodput_wps"]
+
+
+def test_shared_rescore_one_drain_feeds_every_workflow():
+    """Rescoring several workflows against one state for the same wave
+    must hand the SAME dirty-device set to each of them: a per-call
+    drain would update only the first workflow's warm-prefix columns
+    and leave the others bit-stale (the plan_shared contract)."""
+    cluster = homogeneous_cluster(4)
+    state = fresh_state(cluster)
+    wfs = {}
+    for tag in ("a", "b"):
+        stages = {
+            "s0": Stage("s0", "qwen-7b", base_cost={-1: 0.1},
+                        prefix_group=f"grp-{tag}", shared_fraction=0.8),
+            "s1": Stage("s1", "qwen-7b", base_cost={-1: 0.1},
+                        prefix_group=f"grp-{tag}", shared_fraction=0.8,
+                        parents=("s0",)),
+        }
+        wfs[tag] = Workflow(wid=f"wf-{tag}", stages=stages,
+                            num_queries=4)
+    scorer = Scorer(state, CostModel(state), ScoreParams())
+    prevs = {}
+    for tag, wf in wfs.items():
+        scorer.set_frontier(wf, ["s0"])
+        prevs[tag] = scorer.score_matrix(wf, ["s0"])
+    # one completion warms BOTH groups on device 2 — both workflows'
+    # prefix columns are now stale in their cached tables
+    state.warm_prefix(2, "grp-a", "qwen-7b", 4, 0.0)
+    state.warm_prefix(2, "grp-b", "qwen-7b", 4, 0.0)
+    dirty = state.drain_dirty()
+    for tag, wf in wfs.items():
+        scorer.set_frontier(wf, ["s0"])
+        got = scorer.rescore_matrix(wf, ["s0"], prevs[tag], dirty=dirty)
+        fresh = Scorer(state, CostModel(state), ScoreParams())
+        fresh.set_frontier(wf, ["s0"])
+        want = fresh.score_matrix(wf, ["s0"])
+        assert np.array_equal(got.raw, want.raw), tag
+        assert np.array_equal(got.eft, want.eft), tag
+
+
+def test_serving_delta_matches_full_rebuild():
+    """The tentpole contract on the SHARED path: delta-rescored
+    multi-workflow serving is placement-identical to forcing a full
+    matrix rebuild every wave (use_delta=False reference)."""
+    trace = poisson_serving_trace(n_workflows=9, rate=12.0, seed=4,
+                                  num_queries=4)
+    results = {}
+    run_records = {}
+    for use_delta in (True, False):
+        state = fresh_state(homogeneous_cluster(6))
+        ex = ServingExecutor(state)
+        pol = make_policy("FATE", use_delta=use_delta)
+        results[use_delta] = ex.run(
+            poisson_serving_trace(n_workflows=9, rate=12.0, seed=4,
+                                  num_queries=4), pol)
+        run_records[use_delta] = ex.last_runs
+    fast, ref = results[True], results[False]
+    assert set(fast.stats) == set(ref.stats)
+    for wid in ref.stats:
+        assert fast.stats[wid].makespan == ref.stats[wid].makespan, wid
+        assert fast.stats[wid].p95 == ref.stats[wid].p95, wid
+    assert set(run_records[True]) == set(run_records[False])
+    for key in run_records[False]:
+        pf = run_records[True][key].placement
+        pr = run_records[False][key].placement
+        assert pf.devices == pr.devices, key
+        assert pf.shard_sizes == pr.shard_sizes, key
+    assert trace  # silence unused warning
+
+
+def test_serving_device_occupancy_no_overlap():
+    trace = poisson_serving_trace(n_workflows=8, rate=20.0, seed=2,
+                                  num_queries=4)
+    state = fresh_state(homogeneous_cluster(4))
+    ex = ServingExecutor(state)
+    pol = make_policy("FATE")
+    res = ex.run(trace, pol)
+    per_dev: dict[int, list[tuple[float, float]]] = {}
+    # re-derive intervals from the executor's run records
+    for key, run in ex_runs(ex).items():
+        for d, fin, nq in zip(run.placement.devices, run.shard_finish,
+                              run.placement.shard_sizes):
+            if nq:
+                per_dev.setdefault(d, []).append((run.start, fin))
+    for d, ivs in per_dev.items():
+        ivs.sort()
+        for (s1, f1), (s2, f2) in zip(ivs, ivs[1:]):
+            assert f1 <= s2 + 1e-6, f"device {d} overlap"
+    assert set(res.stats) == {wf.wid for _, wf in trace}
+
+
+def ex_runs(ex: ServingExecutor):
+    return ex.last_runs
