@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sched bench-sched check
+.PHONY: test test-sched bench-sched docs-check check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -11,14 +11,24 @@ test:
 test-sched:
 	$(PYTHON) -m pytest -q tests/test_executor.py tests/test_solvers.py \
 	  tests/test_workflowbench.py tests/test_score_matrix_parity.py \
-	  tests/test_delta_rescoring.py tests/test_shared_frontier.py
+	  tests/test_delta_rescoring.py tests/test_shared_frontier.py \
+	  tests/test_admission.py tests/test_preemption.py
 
 bench-sched:
-	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve
+	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
+	  --serve-slo
+
+# Docs gate: markdown link check over README.md/docs/ plus a
+# pydocstyle-equivalent docstring lint on the documented-surface
+# modules (offline container: no pydocstyle wheel, tools/docs_check.py
+# implements the same checks on ast).
+docs-check:
+	$(PYTHON) tools/docs_check.py
 
 # CI smoke gate: scheduler tests + planner-throughput regression checks
 # (sched_bench exits nonzero if the vectorized engine drops below the
 # 5x wide-frontier target, if steady-state delta rescoring drops below
-# the 2x guard — PR target 3x — or if either engine's placements
-# diverge from the reference path).
-check: test-sched bench-sched
+# the 2x guard — PR target 3x — if either engine's placements diverge
+# from the reference path, or if the --serve-slo control plane stops
+# beating unconditional admission / loses cold-solve parity) + docs.
+check: test-sched bench-sched docs-check

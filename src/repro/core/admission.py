@@ -1,0 +1,509 @@
+"""SLO-aware admission control for the serving runtime (control plane).
+
+The paper's central claim is that scheduling decisions should be
+conditioned on predicted *future* state, not the immediate queue alone
+(§1, §3.2).  PR 2's :class:`~repro.core.executor.ServingExecutor`
+still admitted every Poisson arrival unconditionally — exactly the
+"optimize immediate queue state only" failure mode under overload.
+This module adds the missing serving-time decision layer:
+
+* **Admission** — on each arrival, a cheap *future-state probe* (a
+  delta-rescored one-wave ``plan_shared`` lookahead over the merged
+  frontier, run on a throwaway planning overlay) predicts the
+  workflow's completion latency under current contention.  If the
+  prediction violates the per-workflow SLO (a configurable latency
+  multiplier over the workflow's critical-path lower bound), the
+  arrival is deferred into a bounded backlog — or rejected when the
+  backlog is full or the deadline is already unreachable.
+* **Deferral / re-admission** — on completion events the backlog is
+  re-probed oldest-feasible-first; entries whose deadline became
+  unreachable are shed (rejected) so they never consume capacity they
+  cannot convert into SLO-met goodput.
+* **Preemption trigger** — an admitted workflow whose predicted
+  latency sits within ``preempt_slack`` of its budget is flagged
+  ``preempt=True``; the executor then revokes committed-but-unissued
+  placements so the urgent DAG competes in a fresh merged solve
+  immediately instead of waiting for the next completion event.
+
+The controller never mutates the real :class:`ExecutionState`: probes
+run on copy-on-write overlays, so the dirty-set protocol that keeps
+``Scorer.rescore_matrix`` bit-identical to full rebuilds is untouched
+(see :mod:`repro.core.state`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.state import ExecutionState
+from repro.core.workflow import Workflow
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Per-workflow latency SLO and control-plane knobs.
+
+    The deadline of a workflow arriving at ``t`` is
+    ``t + latency_scale * cp_lower_bound(wf)`` — a multiple of the
+    fastest possible execution on an empty cluster, so heavy DAGs get
+    proportionally more budget than small ones.
+    """
+    latency_scale: float = 2.5      # deadline = arrival + scale * cp_lb
+    backlog_limit: int = 8          # bounded deferral queue length
+    # safety factor on predicted latency: the probe's floors ignore
+    # transfer costs and residual layer serialization, so raw
+    # predictions under-estimate under load
+    probe_margin: float = 1.5
+    # preempt when predicted * slack > budget; must be > probe_margin
+    # or the trigger window (budget/slack, budget/margin] is empty
+    preempt_slack: float = 2.5
+    admission: bool = True          # False: track SLOs, admit everything
+    preemption: bool = True         # False: never revoke commitments
+
+    def deadline(self, arrival: float, cp_lb: float) -> float:
+        """Absolute completion deadline for a workflow with critical-path
+        lower bound ``cp_lb`` that arrived at ``arrival``."""
+        return arrival + self.latency_scale * cp_lb
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    """Outcome of one admission probe.
+
+    ``action`` is ``"admit"``, ``"defer"``, or ``"reject"``;
+    ``predicted_latency`` is the probe's completion-latency estimate
+    (seconds from the decision instant); ``deadline`` is absolute sim
+    time; ``preempt`` asks the executor to revoke unissued commitments
+    so the admitted workflow is replanned against immediately.
+    """
+    action: str
+    predicted_latency: float
+    deadline: float
+    cp_lb: float
+    preempt: bool = False
+
+
+def stage_floor_costs(wf: Workflow, cluster) -> dict[str, float]:
+    """Per-stage minimum base cost over eligible devices (seconds).
+
+    State-free lower bound: ignores switches, transfers, queueing and
+    every benefit term — the fastest any single device could run the
+    stage's full query batch.
+    """
+    out: dict[str, float] = {}
+    q = wf.num_queries
+    for sid, st in wf.stages.items():
+        devs = st.eligible if st.eligible else cluster.ids()
+        out[sid] = min(st.cost_on(d) * q / cluster.devices[d].speed
+                       for d in devs)
+    return out
+
+
+def stage_effective_floors(wf: Workflow, cluster, profiles: dict,
+                           floor: Optional[dict] = None
+                           ) -> dict[str, float]:
+    """Switch-aware per-stage work floor (congestion accounting).
+
+    Base floor cost plus HALF the model's load (switch) cost whenever
+    the stage's model differs from a parent's — cross-model edges are
+    what churns residency under contention, and charging the full load
+    per edge overcounts (chains re-use residencies across devices)
+    while ignoring it lets model-alternating DAGs look 5× lighter than
+    they run.  Used by the admission probes' congestion floors; the
+    SLO deadline normalizer uses the path-based
+    :func:`critical_path_lower_bound` instead.  Pass a precomputed
+    ``floor`` (:func:`stage_floor_costs`) to avoid recomputation.
+    """
+    if floor is None:
+        floor = stage_floor_costs(wf, cluster)
+    out: dict[str, float] = {}
+    for sid, st in wf.stages.items():
+        c = floor[sid]
+        if st.parents and any(wf.stages[p].model != st.model
+                              for p in st.parents):
+            prof = profiles.get(st.model)
+            if prof is not None:
+                c += 0.5 * prof.switch_cost
+        out[sid] = c
+    return out
+
+
+def stage_tail_bounds(wf: Workflow, cluster,
+                      floor: Optional[dict] = None) -> dict[str, float]:
+    """Critical-path-to-sink lower bound per stage.
+
+    ``tails[sid]`` = the stage's own floor cost plus the longest floor
+    path through its descendants; the workflow cannot finish earlier
+    than ``start(sid) + tails[sid]`` once ``sid`` is on the critical
+    path.  State-free, so cacheable per workflow topology.  Pass a
+    precomputed ``floor`` (:func:`stage_floor_costs`) to avoid
+    recomputation.
+    """
+    if floor is None:
+        floor = stage_floor_costs(wf, cluster)
+    tails: dict[str, float] = {}
+    for sid in reversed(wf.topo_order):
+        ch = wf.stages[sid].children
+        tails[sid] = floor[sid] + max((tails[c] for c in ch), default=0.0)
+    return tails
+
+
+def critical_path_lower_bound(wf: Workflow, cluster,
+                              profiles: Optional[dict] = None,
+                              tails: Optional[dict] = None) -> float:
+    """Fastest plausible makespan of ``wf`` on an idle ``cluster``.
+
+    Longest source-to-sink path of per-stage floor costs, plus — when
+    model ``profiles`` are given — one weight-load (switch cost) per
+    distinct model along that path: even an idle cluster must activate
+    each model at least once before the chain can run on it.  Without
+    the switch term the bound is wildly optimistic for
+    model-alternating workflows (5× observed on the conflict suite),
+    which would make every deadline normalized by it unreachable.
+    This is the normalizer of every SLO deadline (:class:`SLOConfig`).
+    Pass precomputed ``tails`` (:func:`stage_tail_bounds`) to avoid
+    recomputation.
+    """
+    if tails is None:
+        tails = stage_tail_bounds(wf, cluster)
+    if not wf.stages:
+        return 0.0
+    cp = max(tails[s] for s in wf.sources())
+    if not profiles:
+        return cp
+    # walk the arg-max path and charge each distinct model's load once
+    sid = max(wf.sources(), key=lambda s: tails[s])
+    models = {wf.stages[sid].model}
+    while wf.stages[sid].children:
+        sid = max(wf.stages[sid].children, key=lambda c: tails[c])
+        models.add(wf.stages[sid].model)
+    for m in models:
+        prof = profiles.get(m)
+        if prof is not None:
+            cp += prof.switch_cost
+    return cp
+
+
+class AdmissionController:
+    """Future-state-aware admission/deferral/preemption decisions.
+
+    One controller instance serves one :meth:`ServingExecutor.run`
+    call.  It owns the bounded backlog of deferred workflows and the
+    list of rejected workflow ids; the executor owns the frontier and
+    applies the decisions (admit into the shared frontier, clear the
+    committed pool on ``preempt``).
+
+    Probing: policies that expose a ``planner`` with ``plan_shared``
+    (FATE) get the planned probe — a one-wave merged-frontier solve on
+    a throwaway overlay, delta-rescored off the planner's cached wave
+    snapshots, predicting both the candidate's completion latency and
+    the busy-time displacement it inflicts on in-flight workflows.
+    Other policies fall back to an analytic backlog/critical-path
+    estimate, so admission control composes with every baseline.
+    """
+
+    def __init__(self, slo: SLOConfig):
+        self.slo = slo
+        # (original arrival time, workflow), oldest first
+        self.backlog: list[tuple[float, Workflow]] = []
+        self.rejected: list[str] = []
+        self.deadlines: dict[str, float] = {}
+        self.n_deferrals = 0
+        self.n_probes = 0
+        self._tails: dict[str, dict[str, float]] = {}
+        self._floor: dict[str, dict[str, float]] = {}
+        self._efloor: dict[str, dict[str, float]] = {}
+        self._cp: dict[str, float] = {}
+
+    # -- cached critical-path bounds -------------------------------------
+    def tail_bounds(self, wf: Workflow,
+                    state: ExecutionState) -> dict[str, float]:
+        """Memoized :func:`stage_tail_bounds` for ``wf`` (also fills
+        the floor-cost and switch-aware critical-path caches)."""
+        t = self._tails.get(wf.wid)
+        if t is None:
+            floor = stage_floor_costs(wf, state.cluster)
+            t = stage_tail_bounds(wf, state.cluster, floor=floor)
+            self._tails[wf.wid] = t
+            self._floor[wf.wid] = floor
+            self._efloor[wf.wid] = stage_effective_floors(
+                wf, state.cluster, state.profiles, floor=floor)
+            self._cp[wf.wid] = critical_path_lower_bound(
+                wf, state.cluster, state.profiles, tails=t)
+        return t
+
+    def cp_lower_bound(self, wf: Workflow,
+                       state: ExecutionState) -> float:
+        """Memoized :func:`critical_path_lower_bound` for ``wf``
+        (switch-aware: includes one load per critical-path model)."""
+        self.tail_bounds(wf, state)
+        return self._cp[wf.wid]
+
+    def forget(self, wid: str) -> None:
+        """Release cached bounds for a finished workflow."""
+        self._tails.pop(wid, None)
+        self._floor.pop(wid, None)
+        self._efloor.pop(wid, None)
+        self._cp.pop(wid, None)
+        self.deadlines.pop(wid, None)
+
+    def remaining_floor_work(self, frontier,
+                             state: ExecutionState) -> float:
+        """Total effective-floor seconds of work still outstanding
+        across every in-flight workflow (not-yet-completed stages,
+        switch-aware per :func:`stage_effective_floors`).
+
+        Divided by the device count this is a work-conserving bound on
+        how long the cluster needs to drain its current admissions —
+        queued frontier work is invisible to per-device ``free_at``
+        (stages occupy devices only once issued), so probes must
+        account for it explicitly.
+        """
+        total = 0.0
+        for wid, wf in frontier.workflows.items():
+            self.tail_bounds(wf, state)
+            floor = self._efloor[wid]
+            done = frontier.completed[wid]
+            total += sum(c for sid, c in floor.items()
+                         if sid not in done)
+        return total
+
+    # -- probes ----------------------------------------------------------
+    def probe(self, wf: Workflow, state: ExecutionState, frontier,
+              policy, claimed: set) -> tuple[float, float]:
+        """Predict ``(completion latency, displacement)`` of admitting
+        ``wf`` now.
+
+        Latency is seconds from ``state.now`` until the candidate's
+        predicted completion; displacement is the mean extra busy time
+        per device its first-wave placements would add (the marginal
+        delay in-flight workflows absorb).  Dispatches to the planned
+        probe when the policy exposes a shared-frontier planner.
+        """
+        self.n_probes += 1
+        planner = getattr(policy, "planner", None)
+        if planner is not None and hasattr(planner, "plan_shared"):
+            return self._probe_planned(wf, state, frontier, planner,
+                                       claimed)
+        return self._probe_analytic(wf, state, frontier, claimed)
+
+    def _probe_planned(self, wf: Workflow, state: ExecutionState,
+                       frontier, planner,
+                       claimed: set) -> tuple[float, float]:
+        """One-wave lookahead through the real merged-frontier solver.
+
+        Runs ``plan_shared`` with the candidate's sources appended to
+        the current ready frontier, on a copy-on-write overlay
+        (``max_waves=1``), so the probe reuses the planner's cached
+        delta-rescoring state and costs one incremental wave — not a
+        cold solve.  The candidate's predicted completion is the max
+        over its sources of (estimated source finish on the overlay +
+        that source's critical-path tail); sources the solver deferred
+        start no earlier than the first device release.
+        """
+        from repro.core.costs import CostModel
+        from repro.core.planner import _apply_estimate
+
+        cluster = state.cluster
+        sim = state.overlay()
+        before = {d: sim.device_free(d) for d in cluster.ids()}
+        workflows = dict(frontier.workflows)
+        workflows[wf.wid] = wf
+        ready = list(frontier.ready(claimed))
+        ready += [(wf.wid, sid) for sid in wf.sources()]
+        placements = planner.plan_shared(workflows, sim, ready,
+                                         max_waves=1)
+        # plan_shared simulates on its OWN internal overlay; replay the
+        # wave's estimated effects onto this probe's overlay (same
+        # estimator, same order) so the reads below see post-placement
+        # device state rather than the pre-plan snapshot.
+        cm = CostModel(sim)
+        for p in placements:
+            _apply_estimate(workflows[p.wid], sim, p, cm)
+        tails = self.tail_bounds(wf, state)
+        floor = self._floor[wf.wid]
+        placed: dict[str, float] = {}
+        my_busy = 0.0
+        # within one solver wave the assignment is injective per device
+        # (at-most-one row per column), so a device in a candidate
+        # placement carries ONLY that placement's delta — no other
+        # workflow's busy time can be misattributed here.
+        for p in placements:
+            if p.wid != wf.wid:
+                continue
+            fin = max(sim.device_free(d) for d in p.devices)
+            placed[p.sid] = fin
+            my_busy += sum(max(0.0, sim.device_free(d) - before[d])
+                           for d in p.devices)
+        release = min(sim.device_free(d) for d in cluster.ids())
+        completion = state.now
+        for sid in wf.sources():
+            if sid in placed:
+                est = placed[sid] + (tails[sid] - floor[sid])
+            else:           # solver deferred the source: it queues
+                est = max(release, state.now) + tails[sid]
+            completion = max(completion, est)
+        n_dev = max(cluster.n, 1)
+        predicted = max(completion - state.now,
+                        self._congestion_floor(wf, state, frontier))
+        displacement = my_busy / n_dev
+        return predicted, displacement
+
+    def _congestion_floor(self, wf: Workflow, state: ExecutionState,
+                          frontier) -> float:
+        """Queued-work completion floor for candidate ``wf``.
+
+        Queued frontier work is not on any device's τ yet, so wave
+        estimates and ``backlog_seconds`` are blind to it.  Two bounds
+        bracket the truth under the merged exact solver, which is
+        neither FIFO nor strictly fair: a fair-share bound (the
+        candidate's own floor work served on its 1/k share of the
+        cluster, k = in-flight DAGs + 1) and a work-conserving drain
+        bound (everything outstanding plus the candidate, amortized
+        over all devices, as if the candidate finished last).  Their
+        mean keeps light workflows admissible under heavy mixed load
+        while still charging heavy arrivals for the queue they join.
+        """
+        n_dev = max(state.cluster.n, 1)
+        self.tail_bounds(wf, state)
+        own = sum(self._efloor[wf.wid].values())
+        k = len(frontier.workflows) + 1
+        fair = own * k / n_dev
+        drain = (self.remaining_floor_work(frontier, state)
+                 + own) / n_dev
+        return 0.5 * (fair + drain)
+
+    def _probe_analytic(self, wf: Workflow, state: ExecutionState,
+                        frontier, claimed: set) -> tuple[float, float]:
+        """Planner-free fallback probe (baseline policies).
+
+        Predicted latency = mean device backlog + critical-path lower
+        bound inflated by frontier contention (ready stages per
+        device); displacement = the candidate's total floor work
+        amortized over the cluster.
+        """
+        cluster = state.cluster
+        n_dev = max(cluster.n, 1)
+        avg_wait = state.backlog_seconds() / n_dev
+        n_ready = len(frontier.ready(claimed)) + len(wf.sources())
+        contention = max(1.0, n_ready / n_dev)
+        cp = self.cp_lower_bound(wf, state)
+        work = sum(self._floor[wf.wid].values())
+        predicted = max(avg_wait + cp * contention,
+                        self._congestion_floor(wf, state, frontier))
+        return predicted, work / n_dev
+
+    # -- decisions -------------------------------------------------------
+    def decide(self, wf: Workflow, state: ExecutionState, frontier,
+               policy, claimed: set,
+               arrival: float) -> AdmissionDecision:
+        """Pure decision (no backlog bookkeeping): admit / defer /
+        reject ``wf`` given its original ``arrival`` time."""
+        cp = self.cp_lower_bound(wf, state)
+        deadline = self.slo.deadline(arrival, cp)
+        if not self.slo.admission:
+            return AdmissionDecision("admit", cp, deadline, cp)
+        budget = deadline - state.now
+        if cp > budget + 1e-12:
+            # unreachable even alone on an idle cluster: shed the load
+            return AdmissionDecision("reject", cp, deadline, cp)
+        predicted, displacement = self.probe(wf, state, frontier,
+                                             policy, claimed)
+        fits = self.slo.probe_margin * predicted <= budget + 1e-12
+        if fits and not self._displaces_inflight(state, frontier,
+                                                 displacement):
+            preempt = (self.slo.preemption
+                       and predicted * self.slo.preempt_slack > budget)
+            return AdmissionDecision("admit", predicted, deadline, cp,
+                                     preempt=preempt)
+        return AdmissionDecision("defer", predicted, deadline, cp)
+
+    def _displaces_inflight(self, state: ExecutionState, frontier,
+                            displacement: float) -> bool:
+        """True if the candidate's displacement would push an
+        otherwise-on-track in-flight workflow past its deadline.
+
+        Workflows already predicted to miss are NOT protected — under
+        overload everything is late, and refusing all admissions for
+        the sake of already-lost deadlines would idle the cluster.
+        """
+        if displacement <= 0.0:
+            return False
+        for wid, deadline in self.deadlines.items():
+            wf = frontier.workflows.get(wid)
+            if wf is None:
+                continue
+            tails = self.tail_bounds(wf, state)
+            done = frontier.completed[wid]
+            rem = max((tails[sid] for sid in wf.topo_order
+                       if sid not in done), default=0.0)
+            without = state.now + rem
+            if without <= deadline + 1e-12 < without + displacement:
+                return True
+        return False
+
+    def _shed(self, wid: str, policy) -> None:
+        """Record a rejection and release every cache that references
+        the shed workflow — including the policy's planner/scorer
+        caches, which the admission probes populated (a rejected
+        workflow never runs, so without this a long-lived serving
+        executor leaks one score table + topology cache per shed
+        arrival)."""
+        self.rejected.append(wid)
+        self.forget(wid)
+        if hasattr(policy, "forget_workflow"):
+            policy.forget_workflow(wid)
+
+    def on_arrival(self, wf: Workflow, state: ExecutionState, frontier,
+                   policy, claimed: set) -> AdmissionDecision:
+        """Arrival-time decision with backlog bookkeeping applied:
+        deferrals land in the bounded backlog (or degrade to reject
+        when it is full); rejects are recorded."""
+        dec = self.decide(wf, state, frontier, policy, claimed,
+                          arrival=state.now)
+        if dec.action == "defer":
+            if len(self.backlog) >= self.slo.backlog_limit:
+                dec.action = "reject"
+            else:
+                self.backlog.append((state.now, wf))
+                self.n_deferrals += 1
+        if dec.action == "reject":
+            self._shed(wf.wid, policy)
+        elif dec.action == "admit":
+            self.deadlines[wf.wid] = dec.deadline
+        return dec
+
+    def readmit(self, state: ExecutionState, frontier, policy,
+                claimed: set, force: bool = False
+                ) -> list[tuple[float, Workflow, AdmissionDecision]]:
+        """Oldest-feasible-first re-admission sweep over the backlog.
+
+        Entries whose deadline became unreachable are shed (rejected);
+        the first entry whose fresh probe admits is returned (at most
+        one per call, so the caller's frontier update is visible to the
+        next sweep).  With ``force=True`` the oldest reachable entry is
+        admitted regardless of its probe — the executor uses this to
+        drain the backlog when no further completion events exist.
+        Returns ``[(original_arrival, workflow, decision)]``.
+        """
+        admitted: list[tuple[float, Workflow, AdmissionDecision]] = []
+        keep: list[tuple[float, Workflow]] = []
+        for arrival, wf in self.backlog:
+            if admitted:
+                keep.append((arrival, wf))
+                continue
+            cp = self.cp_lower_bound(wf, state)
+            deadline = self.slo.deadline(arrival, cp)
+            if state.now + cp > deadline + 1e-12:
+                self._shed(wf.wid, policy)         # expired
+                continue
+            dec = self.decide(wf, state, frontier, policy, claimed,
+                              arrival=arrival)
+            if dec.action == "admit" or force:
+                dec.action = "admit"
+                self.deadlines[wf.wid] = dec.deadline
+                admitted.append((arrival, wf, dec))
+            else:
+                keep.append((arrival, wf))
+        self.backlog = keep
+        return admitted

@@ -35,6 +35,8 @@ class _Var:
 
 
 class CpModel:
+    """Constraint model for the frontier ILP class (see module doc)."""
+
     def __init__(self) -> None:
         self._n = 0
         self._names: list[str] = []
@@ -42,6 +44,7 @@ class CpModel:
         self._implications: list[tuple[int, int]] = []   # a -> b
         self._objective: dict[int, float] = {}
         self._fixed_false: set[int] = set()
+        self._hints: dict[int, int] = {}           # solution hints
 
     def new_bool_var(self, name: str = "") -> _Var:
         v = _Var(self._n, name or f"x{self._n}")
@@ -59,7 +62,19 @@ class CpModel:
     def fix_false(self, v: _Var) -> None:
         self._fixed_false.add(v.idx)
 
+    def add_hint(self, v: _Var, value: int = 1) -> None:
+        """CP-SAT-style solution hint (``AddHint`` analogue).
+
+        Hints with value 1 are tried first by the solver's warm-start
+        pass, so a previous wave's assignment seeds the incumbent
+        before the DFS.  Hints are advisory: infeasible or dominated
+        hints are silently dropped and the returned optimum is
+        unaffected.
+        """
+        self._hints[v.idx] = int(value)
+
     def maximize(self, terms: Sequence[tuple[_Var, float]]) -> None:
+        """Set the linear objective to maximize."""
         self._objective = {v.idx: float(w) for v, w in terms}
 
 
@@ -235,21 +250,34 @@ class CpSolver:
                 else:
                     assign[x] = -1
 
-        # greedy warm-start incumbent: walk variables in bound order,
-        # taking every positive-weight feasible set-to-1 (with implied
-        # propagation).  Feasible by construction, so it seeds best_val
-        # without cutting the optimum; the DFS then prunes against it
-        # from node one instead of descending to a leaf first.
+        # greedy warm-start incumbent: walk variables in bound order —
+        # solution-hinted variables first (a previous wave's assignment,
+        # see CpModel.add_hint), then the rest — taking every
+        # positive-weight feasible set-to-1 (with implied propagation).
+        # Feasible by construction, so it seeds best_val without
+        # cutting the optimum; the DFS then prunes against it from node
+        # one instead of descending to a leaf first.
         if self.warm_start:
+            hints = model._hints
+            warm_order = order
+            if hints:
+                warm_order = ([v for v in order if hints.get(v) == 1]
+                              + [v for v in order if hints.get(v) != 1])
             warm_undos: list[list] = []
-            for v in order:
+            for v in warm_order:
                 if assign[v] != -1 or w[v] <= 0 or not feasible_one(v):
                     continue
                 u = set_one(v)
                 if u is not None:
                     warm_undos.append(u)
             if value > best_val:
-                best_val = value
+                # ε-below seeding (mirrors frontier_solver's hint
+                # incumbent): the DFS still re-finds — in its own
+                # deterministic order — any solution tying the greedy
+                # value, so warm starts and hints only prune, they
+                # never change which tied-optimal assignment is
+                # returned.
+                best_val = value - 1e-9
                 best_assign = {i: (1 if assign[i] == 1 else 0)
                                for i in range(n)}
             for u in reversed(warm_undos):

@@ -27,6 +27,7 @@ import dataclasses
 import heapq
 from typing import Optional, Protocol, Sequence
 
+from repro.core.admission import AdmissionController, SLOConfig
 from repro.core.costs import CostModel, CostParams
 from repro.core.planner import Placement
 from repro.core.state import ExecutionState
@@ -34,15 +35,40 @@ from repro.core.workflow import ModelProfile, Stage, StageKey, Workflow
 
 
 class Policy(Protocol):
+    """Scheduling policy interface: map a ready frontier to placements.
+
+    Policies may additionally implement ``plan_shared(workflows,
+    state, ready)`` (merged multi-workflow planning) and
+    ``forget_workflow(wid)`` (cache release on retirement); the serving
+    runtime dispatches on their presence.
+    """
+
     name: str
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
+        """Return committed placements for (a subset of) ``ready``."""
         ...
+
+
+def nearest_rank_p95(xs: Sequence[float],
+                     default: float = float("nan")) -> float:
+    """Nearest-rank 95th percentile of ``xs`` (``default`` if empty).
+
+    The single percentile convention shared by batch results, serving
+    stats, and the benchmark metrics — keep them in sync by calling
+    this, not by re-deriving the index.
+    """
+    s = sorted(xs)
+    if not s:
+        return default
+    idx = max(0, min(len(s) - 1, int(round(0.95 * (len(s) - 1)))))
+    return s[idx]
 
 
 @dataclasses.dataclass
 class StageRun:
+    """One issued stage execution: its placement and timing record."""
     placement: Placement
     start: float
     finish: float                       # max over shards
@@ -52,6 +78,7 @@ class StageRun:
 
 @dataclasses.dataclass
 class RunResult:
+    """Outcome of one single-workflow batch run (paper Table 1 row)."""
     wid: str
     makespan: float
     query_completion: list[float]       # per query
@@ -65,11 +92,9 @@ class RunResult:
 
     @property
     def p95(self) -> float:
-        xs = sorted(self.query_completion)
-        if not xs:
-            return self.makespan
-        idx = max(0, min(len(xs) - 1, int(round(0.95 * (len(xs) - 1)))))
-        return xs[idx]
+        """95th-percentile per-query completion time (nearest-rank)."""
+        return nearest_rank_p95(self.query_completion,
+                                default=self.makespan)
 
 
 def _greedy_fallback(state: ExecutionState, cm: CostModel, wf: Workflow,
@@ -116,6 +141,13 @@ def _issue_shards(state: ExecutionState, cm: CostModel, wf: Workflow,
 
 
 class WorkflowExecutor:
+    """Single-workflow batch runtime: one DAG owns the cluster.
+
+    Implements Algorithm 2's commit-and-advance loop over the proxy
+    cost model; see the module docstring for the issue/completion
+    machinery shared with :class:`ServingExecutor`.
+    """
+
     def __init__(self, state: ExecutionState,
                  cost_params: Optional[CostParams] = None):
         self.state = state
@@ -123,6 +155,13 @@ class WorkflowExecutor:
 
     # ------------------------------------------------------------------
     def run(self, wf: Workflow, policy: Policy) -> RunResult:
+        """Execute ``wf`` to completion under ``policy``.
+
+        Invariants (property-tested in ``tests/test_executor.py``):
+        every stage runs exactly once, dependencies are respected, and
+        per-device busy intervals never overlap.  Raises
+        ``RuntimeError`` on a stalled policy (liveness guard).
+        """
         state = self.state
         cm = self.cm
         wf.validate()
@@ -242,6 +281,8 @@ class WorkflowExecutor:
 
 
 def fresh_state(cluster, profiles=None) -> ExecutionState:
+    """Empty execution state over ``cluster`` (cold devices, t=0),
+    with the paper's default model profiles unless overridden."""
     from repro.core.workflow import DEFAULT_PROFILES
     return ExecutionState(cluster=cluster,
                           profiles=dict(profiles or DEFAULT_PROFILES))
@@ -270,6 +311,7 @@ class SharedFrontier:
         self._order: list[str] = []
 
     def admit(self, wf: Workflow) -> None:
+        """Add an in-flight workflow; its sources become ready."""
         if wf.wid in self.workflows:
             raise ValueError(f"duplicate workflow id {wf.wid}")
         wf.validate()
@@ -287,6 +329,7 @@ class SharedFrontier:
         return False
 
     def retire(self, wid: str) -> None:
+        """Drop a workflow (finished or evicted) from the frontier."""
         self.workflows.pop(wid, None)
         self.completed.pop(wid, None)
         self._order.remove(wid)
@@ -310,38 +353,72 @@ class SharedFrontier:
 
 @dataclasses.dataclass
 class WorkflowServeStats:
-    """Per-workflow serving outcome (times are absolute sim seconds)."""
+    """Per-workflow serving outcome (times are absolute sim seconds).
+
+    ``arrival`` is the ORIGINAL trace arrival even for workflows that
+    the control plane deferred, so latency (and SLO attainment)
+    includes time spent in the admission backlog.  ``deadline`` is set
+    only when the executor runs with an :class:`SLOConfig`.
+    """
     wid: str
     arrival: float
     finish: float
     query_completion: list[float]      # absolute per-query finish times
     n_stages: int
+    deadline: Optional[float] = None   # absolute SLO deadline, if any
 
     @property
     def makespan(self) -> float:
+        """End-to-end latency: completion minus original arrival."""
         return self.finish - self.arrival
 
     @property
     def latencies(self) -> list[float]:
+        """Per-query latencies relative to the original arrival."""
         return [t - self.arrival for t in self.query_completion]
 
     @property
     def p95(self) -> float:
-        xs = sorted(self.latencies)
-        if not xs:
-            return self.makespan
-        idx = max(0, min(len(xs) - 1, int(round(0.95 * (len(xs) - 1)))))
-        return xs[idx]
+        """95th-percentile per-query latency (nearest-rank)."""
+        return nearest_rank_p95(self.latencies, default=self.makespan)
+
+    @property
+    def slo_met(self) -> bool:
+        """True when the workflow finished within its deadline (always
+        True when no SLO was configured)."""
+        return self.deadline is None or self.finish <= self.deadline + 1e-9
 
 
 @dataclasses.dataclass
 class ServingResult:
-    """Outcome of one serving trace under one policy."""
+    """Outcome of one serving trace under one policy.
+
+    ``rejected`` lists workflows the admission controller shed (never
+    executed); ``deferrals``/``preemptions`` count control-plane
+    interventions.  All three stay empty/zero without an SLO config.
+    """
     stats: dict[str, WorkflowServeStats]
     horizon: float                     # first arrival -> last completion
     max_in_flight: int
     replans: int
     model_switches: int
+    rejected: list[str] = dataclasses.field(default_factory=list)
+    deferrals: int = 0
+    preemptions: int = 0
+
+    @property
+    def n_offered(self) -> int:
+        """Workflows offered by the trace: completed + rejected."""
+        return len(self.stats) + len(self.rejected)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of OFFERED workflows that completed within their
+        deadline (rejected arrivals count against attainment)."""
+        if self.n_offered == 0:
+            return float("nan")
+        met = sum(1 for s in self.stats.values() if s.slo_met)
+        return met / self.n_offered
 
     @property
     def goodput_wps(self) -> float:
@@ -349,7 +426,17 @@ class ServingResult:
         return len(self.stats) / self.horizon if self.horizon > 0 else 0.0
 
     @property
+    def goodput_slo_wps(self) -> float:
+        """SLO-met workflows per second over the busy horizon — the
+        serving objective the control plane optimizes."""
+        if self.horizon <= 0:
+            return 0.0
+        met = sum(1 for s in self.stats.values() if s.slo_met)
+        return met / self.horizon
+
+    @property
     def goodput_qps(self) -> float:
+        """Completed queries per second over the busy horizon."""
         n_q = sum(len(s.query_completion) for s in self.stats.values())
         return n_q / self.horizon if self.horizon > 0 else 0.0
 
@@ -365,14 +452,30 @@ class ServingExecutor:
     that implement ``plan_shared(workflows, state, ready)`` plan the
     merged frontier in one problem; others fall back to per-workflow
     ``plan`` calls over their slice of the frontier.
+
+    With an :class:`SLOConfig`, the SLO-aware control plane is active:
+    every arrival passes through an
+    :class:`~repro.core.admission.AdmissionController` future-state
+    probe and is admitted, deferred into a bounded backlog, or
+    rejected; the backlog is re-probed oldest-feasible-first on every
+    completion batch; and SLO-tight admissions preempt — revoke — the
+    committed-but-unissued placement pool so the urgent workflow
+    competes in a fresh merged solve immediately.  Revocation never
+    touches execution state (only ``issue()`` mutates it), so delta
+    rescoring stays bit-identical to full rebuilds across preemptions
+    (``tests/test_preemption.py``).
     """
 
     def __init__(self, state: ExecutionState,
                  cost_params: Optional[CostParams] = None,
-                 replan_on_completion: bool = True):
+                 replan_on_completion: bool = True,
+                 slo: Optional[SLOConfig] = None):
         self.state = state
         self.cm = CostModel(state, cost_params)
         self.replan_on_completion = replan_on_completion
+        self.slo = slo
+        # the last run()'s controller, exposed for tests/introspection
+        self.admission: Optional[AdmissionController] = None
         # per-(wid, sid) StageRun records of the most recent run()
         self.last_runs: dict[StageKey, StageRun] = {}
 
@@ -394,9 +497,19 @@ class ServingExecutor:
     # -- main loop -------------------------------------------------------
     def run(self, trace: Sequence[tuple[float, Workflow]],
             policy) -> ServingResult:
+        """Serve one arrival trace to completion under ``policy``.
+
+        ``trace`` is a list of ``(arrival_time, workflow)`` sorted by
+        time with unique workflow ids.  Returns the per-workflow stats
+        plus control-plane counters; per-stage :class:`StageRun`
+        records of this run are left on :attr:`last_runs`.
+        """
         state = self.state
         cm = self.cm
         frontier = SharedFrontier()
+        adm = (AdmissionController(self.slo)
+               if self.slo is not None else None)
+        self.admission = adm
         heap: list[tuple[float, int, str, object]] = []
         seq = 0
         n_total_stages = 0
@@ -409,6 +522,7 @@ class ServingExecutor:
         runs: dict[StageKey, StageRun] = {}
         wf_finish: dict[str, float] = {}     # running max stage finish
         arrivals: dict[str, float] = {}
+        deadlines: dict[str, float] = {}
         workflows_all: dict[str, Workflow] = {}
         stats: dict[str, WorkflowServeStats] = {}
         query_done: dict[str, dict[int, float]] = {}
@@ -416,6 +530,7 @@ class ServingExecutor:
         last_finish = first_arrival
         max_in_flight = 0
         replans = 0
+        preemptions = 0
         switches_before = state.model_switches
 
         def issuable(p: Placement) -> bool:
@@ -442,6 +557,31 @@ class ServingExecutor:
             heapq.heappush(heap, (fin_all, seq, "finish", key))
             seq += 1
 
+        def admit(wf: Workflow, arrival: float,
+                  deadline: Optional[float] = None) -> None:
+            nonlocal max_in_flight
+            frontier.admit(wf)
+            workflows_all[wf.wid] = wf
+            arrivals[wf.wid] = arrival
+            if deadline is not None:
+                deadlines[wf.wid] = deadline
+            max_in_flight = max(max_in_flight, len(frontier))
+
+        def claimed_keys() -> set[StageKey]:
+            return issued | {(p.wid, p.sid) for p in committed}
+
+        def preempt_commitments() -> None:
+            """Revoke committed-but-unissued placements for an
+            SLO-tight admission.  No execution state was mutated for
+            them (only ``issue()`` writes ρ/κ/τ), so the planner's
+            delta-rescoring caches need no repair — the revoked rows
+            simply reappear in the next merged solve, warm-started on
+            their previous devices via the solution hint."""
+            nonlocal preemptions
+            if committed:
+                committed.clear()
+                preemptions += 1
+
         def finish(key: StageKey) -> None:
             nonlocal last_finish
             wid, sid = key
@@ -467,10 +607,13 @@ class ServingExecutor:
                          for i in range(wf_all.num_queries)]
                 stats[wid] = WorkflowServeStats(
                     wid=wid, arrival=arrivals[wid], finish=fin_t,
-                    query_completion=qdone, n_stages=len(wf_all.stages))
+                    query_completion=qdone, n_stages=len(wf_all.stages),
+                    deadline=deadlines.get(wid))
                 last_finish = max(last_finish, fin_t)
                 if hasattr(policy, "forget_workflow"):
                     policy.forget_workflow(wid)
+                if adm is not None:
+                    adm.forget(wid)
 
         def issue_all() -> None:
             progress = True
@@ -519,6 +662,17 @@ class ServingExecutor:
                     continue           # the clock advances to next event
             # 3. advance the clock to the next event batch
             if not heap:
+                if adm is not None and adm.backlog:
+                    # no further events will trigger re-admission:
+                    # drain the backlog (shed expired entries, force
+                    # the oldest reachable one in) and keep planning
+                    for arr, wfp, dec in adm.readmit(
+                            state, frontier, policy, claimed_keys(),
+                            force=True):
+                        admit(wfp, arr, dec.deadline)
+                        if dec.preempt:
+                            preempt_commitments()
+                    continue
                 if committed or len(frontier):
                     raise RuntimeError(
                         f"serving executor deadlock ({policy.name})")
@@ -536,13 +690,34 @@ class ServingExecutor:
                         # instance retired) would silently clobber them
                         raise ValueError(
                             f"duplicate workflow id in trace: {wf.wid}")
-                    frontier.admit(wf)
-                    workflows_all[wf.wid] = wf
-                    arrivals[wf.wid] = state.now
-                    max_in_flight = max(max_in_flight, len(frontier))
+                    if adm is None:
+                        admit(wf, state.now)
+                        continue
+                    dec = adm.on_arrival(wf, state, frontier, policy,
+                                         claimed_keys())
+                    if dec.action == "admit":
+                        admit(wf, state.now, dec.deadline)
+                        if dec.preempt:
+                            # SLO-tight arrival: revoke unissued
+                            # commitments so it competes immediately
+                            preempt_commitments()
+                    # defer/reject: bookkept inside the controller
                 else:
                     finish(payload)
                     completed_any = True
+            if completed_any and adm is not None:
+                # re-admission sweep: freed capacity may now fit the
+                # oldest deferred arrivals (one per sweep so each
+                # admission's frontier update feeds the next probe)
+                while True:
+                    batch = adm.readmit(state, frontier, policy,
+                                        claimed_keys())
+                    if not batch:
+                        break
+                    for arr, wfp, dec in batch:
+                        admit(wfp, arr, dec.deadline)
+                        if dec.preempt:
+                            preempt_commitments()
             if completed_any and self.replan_on_completion and committed:
                 # revoke unissued commitments: the completed stage
                 # changed ρ/κ/ℓ/τ, so the merged frontier is re-solved
@@ -552,4 +727,7 @@ class ServingExecutor:
         return ServingResult(
             stats=stats, horizon=horizon, max_in_flight=max_in_flight,
             replans=replans,
-            model_switches=state.model_switches - switches_before)
+            model_switches=state.model_switches - switches_before,
+            rejected=list(adm.rejected) if adm is not None else [],
+            deferrals=adm.n_deferrals if adm is not None else 0,
+            preemptions=preemptions)

@@ -32,12 +32,23 @@ NEG = -1e15
 @dataclasses.dataclass
 class FrontierProblem:
     """weights[r][c]: score of placing row r = (stage, slot) on device c;
-    -inf (<= NEG) marks ineligible pairs.  rows lists (stage_key, slot)."""
+    -inf (<= NEG) marks ineligible pairs.  rows lists (stage_key, slot).
+
+    ``hint`` is an optional warm-start vector mapping row keys
+    ``(stage_key, slot)`` to device ids — typically the previous wave's
+    solution.  The solver turns it into a feasible incumbent that seeds
+    branch-and-bound pruning; it never changes the returned optimum (or
+    which optimal assignment is returned — see
+    :func:`solve_frontier_exact`).  Entries for rows or devices absent
+    from this problem are ignored, so a stale hint is always safe.
+    """
     rows: list[tuple]             # (stage_key, slot_index)
     devices: list[int]
     weights: np.ndarray           # [n_rows, n_devices]
+    hint: Optional[dict] = None   # (stage_key, slot) -> device id
 
     def slot_rows(self, stage_key) -> list[int]:
+        """Row indices belonging to ``stage_key`` (all slots)."""
         return [i for i, (s, _) in enumerate(self.rows) if s == stage_key]
 
 
@@ -58,10 +69,13 @@ def merge_problems(problems: list[FrontierProblem]) -> FrontierProblem:
         if pr.devices != devices:
             raise ValueError("merge_problems: mismatched device axes")
     rows: list[tuple] = []
+    hint: dict = {}
     for pr in problems:
         rows.extend(pr.rows)
+        if pr.hint:
+            hint.update(pr.hint)   # (wid, sid)-keyed rows never collide
     weights = np.concatenate([pr.weights for pr in problems], axis=0)
-    return FrontierProblem(rows, devices, weights)
+    return FrontierProblem(rows, devices, weights, hint=hint or None)
 
 
 @dataclasses.dataclass
@@ -126,8 +140,66 @@ def _hungarian(weights: np.ndarray, forced: set[int],
     return obj, out
 
 
+# how far below the hint incumbent's objective the pruning bound is
+# seeded: strictly positive (and > the solver's 1e-12 tie tolerance) so
+# the DFS still visits — in the same order — every node whose relaxation
+# reaches the true optimum, making warm-started placements bit-identical
+# to cold solves; large enough to actually prune dominated subtrees.
+_HINT_EPS = 1e-9
+
+
+def _hint_incumbent(problem: FrontierProblem
+                    ) -> Optional[tuple[float, dict[int, int]]]:
+    """Feasible warm-start assignment from ``problem.hint``.
+
+    Walks rows in order, accepting each hinted (row, device) pair that
+    keeps the assignment feasible: device eligible and unused, and slot
+    monotonicity (slot k only on top of an accepted slot k−1, which the
+    planner's row ordering guarantees precedes it).  Returns
+    ``(objective, {row_index: col_index})`` or None when nothing from
+    the hint is applicable.  Feasibility ⇒ the objective lower-bounds
+    the optimum, so seeding with it can never cut the optimum off.
+    """
+    hint = problem.hint or {}
+    if not hint:
+        return None
+    col_of = {d: j for j, d in enumerate(problem.devices)}
+    used: set[int] = set()
+    accepted: set[tuple] = set()         # (stage_key, slot) taken
+    out: dict[int, int] = {}
+    obj = 0.0
+    for r, (key, slot) in enumerate(problem.rows):
+        d = hint.get((key, slot))
+        if d is None:
+            continue
+        c = col_of.get(d)
+        if c is None or c in used:
+            continue
+        w = float(problem.weights[r, c])
+        if w <= NEG / 2:
+            continue
+        if slot > 0 and (key, slot - 1) not in accepted:
+            continue
+        used.add(c)
+        accepted.add((key, slot))
+        out[r] = c
+        obj += w
+    return (obj, out) if out else None
+
+
 def solve_frontier_exact(problem: FrontierProblem,
                          time_limit: float = 5.0) -> FrontierSolution:
+    """Exactly solve one frontier placement problem.
+
+    Branch-and-bound over the Hungarian relaxation (see module
+    docstring); always returns the true optimum with status
+    ``OPTIMAL`` unless ``time_limit`` is exceeded (then ``FEASIBLE``
+    with the incumbent).  When ``problem.hint`` carries a previous
+    wave's assignment, a feasible incumbent is installed ε below its
+    objective before the search, so dominated subtrees prune from node
+    one while the returned assignment stays bit-identical to an
+    unhinted (cold) solve.
+    """
     t0 = time.perf_counter()
     rows = problem.rows
     stage_slots: dict = {}
@@ -136,6 +208,14 @@ def solve_frontier_exact(problem: FrontierProblem,
 
     best_obj = -np.inf
     best_assign: dict[int, int] = {}
+    warm = _hint_incumbent(problem)
+    if warm is not None:
+        # ε-below seeding: any subtree whose relaxation cannot beat the
+        # hint's (feasible, hence ≤ optimal) objective is pruned; nodes
+        # at or above the optimum survive, so the first optimum found in
+        # DFS order — the cold solve's answer — is still the one kept.
+        best_obj = warm[0] - _HINT_EPS
+        best_assign = dict(warm[1])
     nodes = 0
     # stack of (forced_rows, banned_rows)
     stack: list[tuple[frozenset, frozenset]] = [(frozenset(), frozenset())]

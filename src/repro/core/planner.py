@@ -63,15 +63,41 @@ class SolveRecord:
 
 
 class FrontierPlanner:
+    """Commit-and-advance frontier planner (the FATE policy's core).
+
+    Wraps the scoring engine and the exact frontier solver into
+    Algorithm 2's wave loop; see the module docstring for the score
+    path taxonomy.  Switches:
+
+    * ``use_matrix`` — vectorized engine (default) vs the seed's
+      scalar reference loop;
+    * ``use_delta`` — incremental delta rescoring (default) vs a full
+      matrix rebuild every wave (the parity/benchmark reference);
+    * ``warm_start`` — carry each merged-frontier solve's assignment
+      into the next solve as a solution hint
+      (:class:`FrontierProblem.hint`).  Hints only seed
+      branch-and-bound pruning, so placements are bit-identical with
+      warm starts on or off.
+
+    Invariant: all four configurations produce identical placements on
+    identical inputs (``tests/test_score_matrix_parity.py``,
+    ``tests/test_delta_rescoring.py``, ``tests/test_preemption.py``).
+    """
+
     def __init__(self, params: Optional[ScoreParams] = None,
                  time_limit: float = 5.0, use_matrix: bool = True,
-                 use_delta: bool = True):
+                 use_delta: bool = True, warm_start: bool = True):
         self.params = params or ScoreParams()
         self.time_limit = time_limit
         self.use_matrix = use_matrix
         # use_delta=False forces a full matrix rebuild every wave — the
         # reference for incremental-vs-full parity tests and benchmarks
         self.use_delta = use_delta
+        self.warm_start = warm_start
+        # rolling ((wid, sid), slot) -> device hint fed to the next
+        # merged solve; revoked (preempted) commitments re-enter later
+        # waves with their previous devices as the warm start.
+        self._shared_hint: dict = {}
         self.solve_log: list[SolveRecord] = []
         self._scorer: Optional[Scorer] = None
         # last wave's score tables per workflow: the seed of the next
@@ -98,10 +124,14 @@ class FrontierPlanner:
         self._wave_scores[wid] = fs
 
     def forget_workflow(self, wid: str) -> None:
-        """Release cached scores/topology for a retired workflow."""
+        """Release cached scores/topology/hints for a retired workflow."""
         self._wave_scores.pop(wid, None)
         if self._scorer is not None:
             self._scorer.forget_workflow(wid)
+        if self._shared_hint:
+            self._shared_hint = {k: d for k, d in
+                                 self._shared_hint.items()
+                                 if k[0][0] != wid}
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
@@ -155,7 +185,8 @@ class FrontierPlanner:
     # ------------------------------------------------------------------
     def plan_shared(self, workflows: dict[str, Workflow],
                     state: ExecutionState,
-                    ready: Sequence[StageKey]) -> list[Placement]:
+                    ready: Sequence[StageKey],
+                    max_waves: Optional[int] = None) -> list[Placement]:
         """Commit-and-advance over the merged frontier of many DAGs.
 
         Each in-flight workflow's ready rows are scored by the same
@@ -163,7 +194,14 @@ class FrontierPlanner:
         across workflows), stacked into one ``(wid, sid)``-keyed
         assignment problem, and solved exactly — so workflows compete
         for devices inside a single wave instead of being placed
-        greedily one DAG at a time."""
+        greedily one DAG at a time.
+
+        ``max_waves`` bounds the number of solver waves — the
+        admission controller's future-state probe runs a single wave
+        (``max_waves=1``) to predict an arrival's marginal impact
+        without paying for a full plan.  ``None`` (default) plans until
+        the frontier is exhausted.
+        """
         if not ready:
             return []
         sim = state.overlay()
@@ -175,6 +213,7 @@ class FrontierPlanner:
         # per-workflow intra-session wave chains; index 0 of each chain
         # is the preserved cross-session snapshot (estimate-free)
         session: dict[str, tuple[FrontierScores, int]] = {}
+        n_waves = 0
         while remaining:
             wave = self._plan_wave_shared(workflows, sim, remaining,
                                           scorer, session)
@@ -185,6 +224,9 @@ class FrontierPlanner:
             placed = {(p.wid, p.sid) for p in wave}
             remaining = [k for k in remaining if k not in placed]
             out.extend(wave)
+            n_waves += 1
+            if max_waves is not None and n_waves >= max_waves:
+                break
         return out
 
     def _plan_wave_shared(self, workflows: dict[str, Workflow],
@@ -244,14 +286,26 @@ class FrontierPlanner:
                                                    key_of=lambda s,
                                                    w=wid: (w, s))
             if rows:
+                hint = None
+                if self.warm_start and self._shared_hint:
+                    hint = {r: self._shared_hint[r] for r in rows
+                            if r in self._shared_hint} or None
                 problems.append(FrontierProblem(
-                    rows, fs.devices, np.array(weights)))
+                    rows, fs.devices, np.array(weights), hint=hint))
         if not problems:
             return []
         problem = merge_problems(problems)
         t0 = time.perf_counter()
         sol = solve_frontier_exact(problem, self.time_limit)
         self.phase_ms["solve"] += (time.perf_counter() - t0) * 1e3
+        if self.warm_start:
+            # next wave's (and next replan's) warm start; revoked
+            # commitments reappear as rows and pick their old device
+            # hints back up.  Rebuild rather than grow without bound.
+            if len(self._shared_hint) > 8192:
+                self._shared_hint = dict(sol.assignment)
+            else:
+                self._shared_hint.update(sol.assignment)
         self.solve_log.append(SolveRecord(
             wall_time=sol.wall_time, nodes=sol.nodes, status=sol.status,
             n_rows=len(problem.rows), n_devices=len(problem.devices),

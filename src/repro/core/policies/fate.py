@@ -15,14 +15,16 @@ class FATEPolicy:
 
     def __init__(self, params: Optional[ScoreParams] = None,
                  time_limit: float = 5.0, use_matrix: bool = True,
-                 use_delta: bool = True):
+                 use_delta: bool = True, warm_start: bool = True):
         self.planner = FrontierPlanner(params, time_limit,
                                        use_matrix=use_matrix,
-                                       use_delta=use_delta)
+                                       use_delta=use_delta,
+                                       warm_start=warm_start)
         self.params = self.planner.params
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
+        """Plan one workflow's ready frontier (batch setting)."""
         return self.planner.plan(wf, state, ready)
 
     def plan_shared(self, workflows: dict[str, Workflow],
@@ -32,6 +34,7 @@ class FATEPolicy:
         return self.planner.plan_shared(workflows, state, ready)
 
     def forget_workflow(self, wid: str) -> None:
+        """Release per-workflow planner caches (workflow retired)."""
         self.planner.forget_workflow(wid)
 
     @property

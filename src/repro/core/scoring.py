@@ -56,6 +56,15 @@ from repro.core.workflow import Stage, Workflow
 
 @dataclasses.dataclass(frozen=True)
 class ScoreParams:
+    """Score-term weights λ and horizon knobs (paper Table 10 rows).
+
+    ``sibling_factor`` scales the frontier-sibling demand term; note
+    the sibling COUNT it multiplies is capped at cluster size inside
+    the scorer (see :meth:`Scorer.future_tail`) — merged serving
+    frontiers can queue dozens of same-model stages, and an unbounded
+    linear term would drown every other signal and thrash residency.
+    """
+
     lam_wait: float = 1.0          # λ_q
     lam_switch: float = 1.0        # λ_s
     lam_transfer: float = 1.0      # λ_tr
@@ -232,6 +241,20 @@ class _WaveCtx:
 
 
 class Scorer:
+    """State-aware scoring engine: S, Ψ/EFT, and their batched twins.
+
+    One scorer serves many planning sessions: per-workflow topology
+    caches (base-cost rows, tail term plans) persist across calls,
+    keyed by workflow identity + generation, and are dropped via
+    :meth:`forget_workflow` when a served workflow retires.  The
+    scalar entry points (:meth:`runtime_score`, :meth:`planner_score`,
+    :meth:`corrected_eft`) are the bit-parity reference for the
+    batched ones (:meth:`score_matrix`, :meth:`rescore_matrix`).
+    Call :meth:`set_frontier` (or :meth:`set_frontier_shared`) before
+    scoring a wave — sibling demand and device pressure are
+    frontier-wide inputs.
+    """
+
     def __init__(self, state: ExecutionState, cost_model: CostModel,
                  params: Optional[ScoreParams] = None):
         self.state = state

@@ -159,8 +159,16 @@ class ExecutionState:
         return self.free_at.get(device, 0.0)
 
     def wait_time(self, device: int, t: Optional[float] = None) -> float:
+        """Queueing delay on ``device`` at time ``t`` (default: now)."""
         t = self.now if t is None else t
         return max(0.0, self.device_free(device) - t)
+
+    def backlog_seconds(self) -> float:
+        """Total committed busy time still queued across the cluster:
+        ``Σ_d max(0, τ_d − now)``.  The admission controller's analytic
+        probe divides this by the device count to estimate how long a
+        new arrival waits before its first stage can start."""
+        return sum(self.wait_time(d) for d in self.cluster.ids())
 
     # -- planning views --------------------------------------------------
     def overlay(self) -> "PlanningOverlay":

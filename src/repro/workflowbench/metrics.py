@@ -11,6 +11,11 @@ finish − arrival, P95 is the 95th-percentile per-query latency relative
 to arrival, both normalized per instance against the baseline policy
 and geomeaned; goodput is completed workflows (and queries) per second
 of busy horizon.
+
+SLO control-plane metrics (``slo_summary``): attainment is SLO-met
+workflows over OFFERED workflows (rejected arrivals count against it);
+SLO goodput is SLO-met workflows per second of busy horizon — shedding
+load only pays off if the admitted set actually meets its deadlines.
 """
 from __future__ import annotations
 
@@ -70,7 +75,50 @@ def serving_summary(results: dict, baseline: str = "RoundRobin"
     return out
 
 
+def _pooled_p95(latencies: Sequence[float]) -> float:
+    """Nearest-rank 95th percentile of a pooled latency sample."""
+    from repro.core.executor import nearest_rank_p95
+    return nearest_rank_p95(latencies)
+
+
+def slo_summary(results: dict) -> dict[str, dict]:
+    """Aggregate ``{label: ServingResult}`` into SLO control-plane
+    metrics.
+
+    Per label: ``slo_attainment`` (SLO-met workflows / offered —
+    rejected arrivals count against it), ``goodput_slo_wps`` (SLO-met
+    workflows per second of busy horizon, the objective the control
+    plane optimizes), ``rejection_rate``, pooled per-query
+    ``p95_latency`` over completed workflows, and the deferral /
+    preemption / replan counters.
+    """
+    out: dict[str, dict] = {}
+    for label, res in results.items():
+        lat = [v for s in res.stats.values() for v in s.latencies]
+        offered = res.n_offered
+        out[label] = {
+            "n_offered": offered,
+            "n_completed": len(res.stats),
+            "n_rejected": len(res.rejected),
+            "rejection_rate": (len(res.rejected) / offered
+                               if offered else float("nan")),
+            "slo_attainment": res.slo_attainment,
+            "goodput_slo_wps": res.goodput_slo_wps,
+            "goodput_wps": res.goodput_wps,
+            "p95_latency": _pooled_p95(lat),
+            "mean_latency": (sum(lat) / len(lat) if lat
+                             else float("nan")),
+            "deferrals": res.deferrals,
+            "preemptions": res.preemptions,
+            "replans": res.replans,
+        }
+    return out
+
+
 def mechanism_rates(rows: Iterable[dict]) -> dict[str, float]:
+    """Mechanism proxies per task (Appendix C.2): cross-device edge
+    rate, estimated prefix-cache hit rate, same-model continuation
+    rate, over a set of run-row dicts."""
     rows = list(rows)
     tot_tasks = sum(r["total_tasks"] for r in rows)
     if tot_tasks == 0:

@@ -10,6 +10,7 @@ import io
 from pathlib import Path
 from typing import Optional, Sequence
 
+from repro.core.admission import SLOConfig
 from repro.core.costs import CostParams
 from repro.core.devices import Cluster, homogeneous_cluster
 from repro.core.executor import (ServingExecutor, ServingResult,
@@ -23,6 +24,8 @@ RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "workflow"
 
 @dataclasses.dataclass
 class RunRow:
+    """One (workflow, policy) batch-run record — a CSV row of the
+    Table 1 analogue, including solver statistics when available."""
     wid: str
     family: str
     policy: str
@@ -40,6 +43,7 @@ class RunRow:
     solver_all_optimal: bool = True
 
     def as_dict(self) -> dict:
+        """Flat dict of every field (CSV export order)."""
         return dataclasses.asdict(self)
 
 
@@ -47,6 +51,12 @@ def run_one(wf: Workflow, policy_name: str, cluster: Cluster, *,
             score_params: Optional[ScoreParams] = None,
             cost_params: Optional[CostParams] = None,
             policy_kwargs: Optional[dict] = None) -> RunRow:
+    """Run one workflow under one policy on a fresh state.
+
+    Honors the workflow's ``meta["preload_model"]`` (cache-dominant
+    suites start with the model resident fleet-wide).  Returns the
+    :class:`RunRow` with mechanism proxies and solver stats filled in.
+    """
     state = fresh_state(cluster)
     preload = wf.meta.get("preload_model")
     if preload:
@@ -80,6 +90,8 @@ def run_suite(workflows: Sequence[Workflow], policies: Sequence[str],
               score_params: Optional[ScoreParams] = None,
               cost_params: Optional[CostParams] = None,
               csv_name: Optional[str] = None) -> list[RunRow]:
+    """Run every (workflow × policy) pair on fresh per-run states and
+    optionally export one CSV (``results/workflow/<csv_name>``)."""
     cluster = cluster or homogeneous_cluster(8)
     rows: list[RunRow] = []
     for wf in workflows:
@@ -93,6 +105,8 @@ def run_suite(workflows: Sequence[Workflow], policies: Sequence[str],
 
 
 def export_csv(rows: Sequence[RunRow], name: str) -> Path:
+    """Write batch-run rows to ``results/workflow/<name>``; returns
+    the path."""
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / name
     with open(path, "w", newline="") as f:
@@ -108,6 +122,8 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
                 cluster: Optional[Cluster] = None, *,
                 score_params: Optional[ScoreParams] = None,
                 cost_params: Optional[CostParams] = None,
+                slo: Optional["SLOConfig"] = None,
+                policy_kwargs: Optional[dict] = None,
                 csv_name: Optional[str] = None
                 ) -> dict[str, ServingResult]:
     """Run one Poisson serving trace under every policy.
@@ -115,18 +131,29 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
     Each policy gets a fresh execution state over the same cluster and
     the same arrival trace (same workflow instances — the generators
     are deterministic, so cross-policy per-workflow ratios are
-    meaningful).  Returns ``{policy: ServingResult}``; aggregate with
-    :func:`repro.workflowbench.metrics.serving_summary`.
+    meaningful).  With ``slo`` the SLO-aware control plane (admission /
+    deferral / preemption) is active; pass
+    ``SLOConfig(admission=False, preemption=False)`` to track deadlines
+    under unconditional admission (the control-plane baseline).
+    ``policy_kwargs`` configure the FATE planner (e.g.
+    ``{"use_delta": False, "warm_start": False}`` for parity
+    references); like ``score_params`` they are applied to FATE only,
+    so mixed-policy comparisons stay valid.  Returns
+    ``{policy: ServingResult}``; aggregate with
+    :func:`repro.workflowbench.metrics.serving_summary` or
+    :func:`repro.workflowbench.metrics.slo_summary`.
     """
     cluster = cluster or homogeneous_cluster(8)
     results: dict[str, ServingResult] = {}
     for pol_name in policies:
         kwargs = {}
-        if pol_name == "FATE" and score_params is not None:
-            kwargs["params"] = score_params
+        if pol_name == "FATE":
+            kwargs.update(policy_kwargs or {})
+            if score_params is not None:
+                kwargs["params"] = score_params
         policy = make_policy(pol_name, **kwargs)
         state = fresh_state(cluster)
-        ex = ServingExecutor(state, cost_params)
+        ex = ServingExecutor(state, cost_params, slo=slo)
         results[pol_name] = ex.run(list(trace), policy)
     if csv_name:
         export_serving_csv(results, csv_name)
@@ -135,6 +162,8 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
 
 def export_serving_csv(results: dict[str, ServingResult],
                        name: str) -> Path:
+    """Write per-workflow serving stats (one row per completed
+    workflow per policy) to ``results/workflow/<name>``."""
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / name
     fields = ["policy", "wid", "arrival", "finish", "makespan", "p95",

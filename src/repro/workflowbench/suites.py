@@ -143,3 +143,20 @@ def poisson_serving_trace(n_workflows: int = 12, rate: float = 4.0,
         wf.meta.pop("preload_model", None)   # serving fleet is shared
         trace.append((t, wf))
     return trace
+
+
+def overloaded_serving_trace(n_workflows: int = 18, rate: float = 14.0,
+                             seed: int = 0, num_queries: int = 8
+                             ) -> list[tuple[float, "Workflow"]]:
+    """Deliberately overloaded Poisson trace for the SLO control plane.
+
+    Same mixed workload as :func:`poisson_serving_trace` but with an
+    arrival rate far above the cluster's service rate, so unconditional
+    admission drives queueing delay (and P95) unboundedly up while an
+    admission controller can trade rejected arrivals for SLO-met
+    goodput.  Used by ``benchmarks/sched_bench.py --serve-slo`` and
+    ``tests/test_admission.py``.
+    """
+    return poisson_serving_trace(n_workflows=n_workflows, rate=rate,
+                                 seed=seed, num_queries=num_queries,
+                                 mix="mixed")

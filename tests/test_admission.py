@@ -1,0 +1,239 @@
+"""SLO-aware admission control plane: critical-path bounds, probe
+decisions, deferral/re-admission, bounded backlog, and the end-to-end
+attainment/goodput win over unconditional admission on an overloaded
+Poisson trace (the ISSUE 3 acceptance trace)."""
+import dataclasses
+
+import pytest
+
+from repro.core.admission import (AdmissionController, SLOConfig,
+                                  critical_path_lower_bound,
+                                  stage_effective_floors,
+                                  stage_tail_bounds)
+from repro.core.devices import homogeneous_cluster
+from repro.core.executor import ServingExecutor, fresh_state
+from repro.core.policies import make_policy
+from repro.core.workflow import DEFAULT_PROFILES, Stage, Workflow
+from repro.workflowbench.metrics import slo_summary
+from repro.workflowbench.suites import (overloaded_serving_trace,
+                                        poisson_serving_trace)
+
+
+def _chain(wid: str, n: int = 3, cost: float = 0.05,
+           model: str = "qwen-7b") -> Workflow:
+    stages = {}
+    prev = ()
+    for i in range(n):
+        stages[f"s{i}"] = Stage(f"s{i}", model, base_cost={-1: cost},
+                                parents=prev)
+        prev = (f"s{i}",)
+    return Workflow(wid=wid, stages=stages, num_queries=4)
+
+
+def _diamond(wid: str) -> Workflow:
+    stages = {
+        "a": Stage("a", "qwen-7b", base_cost={-1: 0.1}),
+        "b": Stage("b", "qwen-7b", base_cost={-1: 0.3}, parents=("a",)),
+        "c": Stage("c", "llama-8b", base_cost={-1: 0.1}, parents=("a",)),
+        "d": Stage("d", "qwen-7b", base_cost={-1: 0.1},
+                   parents=("b", "c")),
+    }
+    return Workflow(wid=wid, stages=stages, num_queries=4)
+
+
+# ---------------------------------------------------------------------------
+# critical-path bounds
+# ---------------------------------------------------------------------------
+
+
+def test_stage_tail_bounds_chain():
+    wf = _chain("cp", n=3, cost=0.05)
+    cl = homogeneous_cluster(4)          # speed 1.0
+    tails = stage_tail_bounds(wf, cl)
+    # floor per stage = 0.05 * 4 queries = 0.2
+    assert tails["s2"] == pytest.approx(0.2)
+    assert tails["s1"] == pytest.approx(0.4)
+    assert tails["s0"] == pytest.approx(0.6)
+    assert critical_path_lower_bound(wf, cl) == pytest.approx(0.6)
+
+
+def test_cp_lower_bound_takes_longest_branch_and_switch_models():
+    wf = _diamond("cp2")
+    cl = homogeneous_cluster(4)
+    # longest base path a->b->d = (0.1 + 0.3 + 0.1) * 4 = 2.0
+    assert critical_path_lower_bound(wf, cl) == pytest.approx(2.0)
+    # switch-aware: the argmax path a->b->d is all qwen-7b, one load
+    with_switch = critical_path_lower_bound(wf, cl, DEFAULT_PROFILES)
+    assert with_switch == pytest.approx(
+        2.0 + DEFAULT_PROFILES["qwen-7b"].switch_cost)
+
+
+def test_effective_floors_charge_cross_model_edges():
+    wf = _diamond("eff")
+    cl = homogeneous_cluster(4)
+    eff = stage_effective_floors(wf, cl, DEFAULT_PROFILES)
+    # b inherits a's model: no churn charge
+    assert eff["b"] == pytest.approx(0.3 * 4)
+    # c switches qwen->llama: + half a llama load
+    assert eff["c"] == pytest.approx(
+        0.1 * 4 + 0.5 * DEFAULT_PROFILES["llama-8b"].switch_cost)
+    # d joins b (same model) and c (different): churn charge applies
+    assert eff["d"] == pytest.approx(
+        0.1 * 4 + 0.5 * DEFAULT_PROFILES["qwen-7b"].switch_cost)
+
+
+# ---------------------------------------------------------------------------
+# decisions
+# ---------------------------------------------------------------------------
+
+
+def test_idle_cluster_admits_single_arrival():
+    trace = [(0.0, _chain("solo", n=3))]
+    ex = ServingExecutor(fresh_state(homogeneous_cluster(4)),
+                         slo=SLOConfig())
+    res = ex.run(trace, make_policy("FATE"))
+    assert set(res.stats) == {"solo"}
+    assert not res.rejected
+    assert res.stats["solo"].deadline is not None
+    assert res.stats["solo"].slo_met
+    assert res.slo_attainment == pytest.approx(1.0)
+
+
+def test_admission_works_with_planner_free_baseline():
+    """The analytic probe path: baselines without plan_shared still get
+    admission control (and the run completes)."""
+    trace = overloaded_serving_trace(n_workflows=10, rate=14.0, seed=0,
+                                     num_queries=4)
+    ex = ServingExecutor(fresh_state(homogeneous_cluster(4)),
+                         slo=SLOConfig())
+    res = ex.run(trace, make_policy("RoundRobin"))
+    assert res.n_offered == 10
+    assert len(res.stats) + len(res.rejected) == 10
+    assert len(res.rejected) > 0          # overload sheds something
+
+
+def test_unconditional_mode_matches_plain_executor():
+    """admission=False must reproduce the plain executor run exactly
+    (same stats), only annotating deadlines on top."""
+    trace = poisson_serving_trace(n_workflows=8, rate=8.0, seed=1,
+                                  num_queries=4)
+    plain = ServingExecutor(fresh_state(homogeneous_cluster(6)))
+    res_p = plain.run(list(trace), make_policy("FATE"))
+    tracked = ServingExecutor(
+        fresh_state(homogeneous_cluster(6)),
+        slo=SLOConfig(admission=False, preemption=False))
+    res_t = tracked.run(list(trace), make_policy("FATE"))
+    assert set(res_p.stats) == set(res_t.stats)
+    for wid in res_p.stats:
+        assert res_p.stats[wid].makespan == res_t.stats[wid].makespan
+        assert res_p.stats[wid].p95 == res_t.stats[wid].p95
+    assert not res_t.rejected and res_t.preemptions == 0
+    assert all(s.deadline is not None for s in res_t.stats.values())
+
+
+def test_bounded_backlog_degrades_defer_to_reject():
+    """backlog_limit=0: nothing can be parked, every unfit arrival is
+    shed immediately and deferrals stay zero."""
+    trace = overloaded_serving_trace(n_workflows=12, rate=14.0, seed=0,
+                                     num_queries=8)
+    ex = ServingExecutor(fresh_state(homogeneous_cluster(6)),
+                         slo=SLOConfig(backlog_limit=0))
+    res = ex.run(trace, make_policy("FATE"))
+    assert res.deferrals == 0
+    assert len(res.rejected) > 0
+    assert len(res.stats) + len(res.rejected) == 12
+
+
+def test_deferred_workflow_keeps_original_arrival():
+    """A deferred-then-readmitted workflow's stats must account latency
+    from the ORIGINAL arrival (deferral time is not free)."""
+    cl = homogeneous_cluster(2)
+    heavy = _chain("heavy", n=6, cost=0.6)      # occupies the cluster
+    light = _chain("light", n=2, cost=0.05)
+    # light arrives into full contention with a deadline generous
+    # enough to survive deferral until heavy drains
+    slo = SLOConfig(latency_scale=30.0, probe_margin=3.0,
+                    preempt_slack=40.0)
+    trace = [(0.0, heavy), (0.05, light)]
+    ex = ServingExecutor(fresh_state(cl), slo=slo)
+    res = ex.run(trace, make_policy("FATE"))
+    assert set(res.stats) == {"heavy", "light"}
+    assert res.stats["light"].arrival == pytest.approx(0.05)
+    if res.deferrals:
+        # deferral happened: completion must still respect causality
+        assert res.stats["light"].finish > 0.05
+
+
+def test_expired_backlog_entries_are_shed():
+    """Backlog entries whose deadline becomes unreachable are rejected
+    at the next re-admission sweep rather than admitted hopelessly."""
+    trace = overloaded_serving_trace(n_workflows=18, rate=14.0, seed=0,
+                                     num_queries=8)
+    ex = ServingExecutor(fresh_state(homogeneous_cluster(6)),
+                         slo=SLOConfig())
+    res = ex.run(trace, make_policy("FATE"))
+    assert res.deferrals > 0
+    assert len(res.rejected) > 0
+    # every offered workflow is accounted exactly once
+    assert len(res.stats) + len(res.rejected) == 18
+    assert ex.admission is not None and not ex.admission.backlog
+
+
+def test_controller_probe_counts_and_caches():
+    ctl = AdmissionController(SLOConfig())
+    wf = _diamond("probe")
+    state = fresh_state(homogeneous_cluster(4))
+    t1 = ctl.tail_bounds(wf, state)
+    assert ctl.tail_bounds(wf, state) is t1          # memoized
+    assert ctl.cp_lower_bound(wf, state) > 0
+    ctl.forget("probe")
+    assert "probe" not in ctl._tails
+
+
+# ---------------------------------------------------------------------------
+# acceptance: overloaded trace, control plane vs unconditional
+# ---------------------------------------------------------------------------
+
+
+def test_slo_control_plane_beats_unconditional_admission():
+    """ISSUE 3 acceptance: on an overloaded Poisson trace the control
+    plane achieves strictly better SLO attainment AND SLO goodput than
+    unconditional admission, with a nonzero rejection rate."""
+    trace = overloaded_serving_trace(n_workflows=18, rate=14.0, seed=0,
+                                     num_queries=8)
+    cl = homogeneous_cluster(6)
+    results = {}
+    for label, slo in (
+            ("uncond", SLOConfig(admission=False, preemption=False)),
+            ("ctrl", SLOConfig())):
+        ex = ServingExecutor(fresh_state(cl), slo=slo)
+        results[label] = ex.run(list(trace), make_policy("FATE"))
+    summ = slo_summary(results)
+    u, c = summ["uncond"], summ["ctrl"]
+    assert c["slo_attainment"] > u["slo_attainment"]
+    assert c["goodput_slo_wps"] > u["goodput_slo_wps"]
+    assert c["rejection_rate"] > 0
+    assert u["rejection_rate"] == 0
+    # shedding load must also pay off in tail latency of the served set
+    assert c["p95_latency"] < u["p95_latency"]
+
+
+def test_slo_summary_fields_finite():
+    trace = overloaded_serving_trace(n_workflows=12, rate=14.0, seed=0,
+                                     num_queries=8)
+    ex = ServingExecutor(fresh_state(homogeneous_cluster(6)),
+                         slo=SLOConfig())
+    res = ex.run(trace, make_policy("FATE"))
+    row = slo_summary({"ctrl": res})["ctrl"]
+    for key in ("slo_attainment", "goodput_slo_wps", "rejection_rate",
+                "p95_latency", "mean_latency"):
+        assert row[key] == row[key], key          # not NaN
+    assert row["n_offered"] == 12
+    assert 0.0 <= row["slo_attainment"] <= 1.0
+
+
+def test_slo_config_deadline_scaling():
+    slo = SLOConfig(latency_scale=2.0)
+    assert slo.deadline(arrival=3.0, cp_lb=5.0) == pytest.approx(13.0)
+    frozen = dataclasses.replace(slo, admission=False)
+    assert not frozen.admission and frozen.latency_scale == 2.0

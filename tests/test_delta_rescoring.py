@@ -183,6 +183,44 @@ def test_overlay_creation_cannot_starve_delta_rescoring():
         == [(p.sid, p.devices, p.shard_sizes) for p in ref]
 
 
+def test_rescore_after_revocation_matches_full_build():
+    """Preemption regression (ISSUE 3): revoking committed-but-unissued
+    placements must leave delta rescoring bit-identical to a
+    from-scratch ``score_matrix`` build.  Commitments only ever touched
+    a planning overlay, so the base state's dirty-set bookkeeping must
+    be unaffected by planning + revocation — even when real completions
+    mutate the base state between the commit and the revoked replan."""
+    rng = random.Random(23)
+    cluster = homogeneous_cluster(5)
+    wf = _random_workflow(rng, 16, "revoke")
+    state = fresh_state(cluster)
+    params = ScoreParams(horizon=4)
+    scorer = Scorer(state, CostModel(state), params)
+    ready = _ready(wf, set())
+    scorer.set_frontier(wf, ready)
+    prev = scorer.score_matrix(wf, ready)
+    for step in range(6):
+        # plan (commit estimates onto an overlay) ... then REVOKE: the
+        # overlay is dropped, nothing of it may leak into base scores
+        pol = make_policy("FATE")
+        committed = pol.plan(wf, state, list(ready))
+        assert committed                   # something was committed
+        del committed                      # preemption: never issued
+        # a real completion mutates base state between replans
+        _mutate(rng, state, cluster.n)
+        d = rng.randrange(cluster.n)
+        state.set_free_at(d, state.now + 0.05)
+        state.set_resident(d, wf.stages[ready[0]].model)
+        scorer.set_frontier(wf, ready)
+        prev = scorer.rescore_matrix(wf, ready, prev)
+        fresh = Scorer(state, CostModel(state), params)
+        fresh.set_frontier(wf, ready)
+        full = fresh.score_matrix(wf, ready)
+        for name in ("raw", "eft", "base", "wait"):
+            assert np.array_equal(getattr(prev, name),
+                                  getattr(full, name)), (step, name)
+
+
 # ---------------------------------------------------------------------------
 # cache invalidation (generation counters)
 # ---------------------------------------------------------------------------

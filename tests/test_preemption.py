@@ -1,0 +1,163 @@
+"""Preemption of committed-but-unissued shards + warm-started merged
+solves: the control plane's interventions must never change WHAT is
+placed — only when planning happens and how fast the solver converges.
+Parity is the tentpole contract: preemption + warm-start + delta
+rescoring is bit-identical to cold full-rebuild solves."""
+import numpy as np
+import pytest
+
+from repro.core.admission import SLOConfig
+from repro.core.devices import homogeneous_cluster
+from repro.core.executor import ServingExecutor, fresh_state
+from repro.core.frontier_solver import (NEG, FrontierProblem,
+                                        merge_problems,
+                                        solve_frontier_exact)
+from repro.core.policies import make_policy
+from repro.workflowbench.suites import (overloaded_serving_trace,
+                                        poisson_serving_trace)
+
+
+def _run(trace, cluster, slo=None, **policy_kwargs):
+    ex = ServingExecutor(fresh_state(cluster), slo=slo)
+    res = ex.run(list(trace), make_policy("FATE", **policy_kwargs))
+    return res, ex.last_runs
+
+
+def _placements(runs):
+    return {k: (r.placement.devices, r.placement.shard_sizes)
+            for k, r in runs.items()}
+
+
+# ---------------------------------------------------------------------------
+# preemption engages and preserves outcomes
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_engages_on_overloaded_trace():
+    trace = overloaded_serving_trace(n_workflows=18, rate=14.0, seed=0,
+                                     num_queries=8)
+    res, _ = _run(trace, homogeneous_cluster(6), slo=SLOConfig())
+    assert res.preemptions > 0
+
+
+def test_preemption_disabled_never_revokes():
+    trace = overloaded_serving_trace(n_workflows=18, rate=14.0, seed=0,
+                                     num_queries=8)
+    res, _ = _run(trace, homogeneous_cluster(6),
+                  slo=SLOConfig(preemption=False))
+    assert res.preemptions == 0
+
+
+def test_preempted_slo_run_parity_delta_vs_cold():
+    """The acceptance parity: the controlled run (admission + deferral
+    + preemption + warm-started delta-rescored solves) is bit-identical
+    — same admissions, same rejections, same placements, same
+    makespans — to the cold reference (full rebuild, no warm start)."""
+    trace = overloaded_serving_trace(n_workflows=18, rate=14.0, seed=0,
+                                     num_queries=8)
+    cl = homogeneous_cluster(6)
+    fast, fast_runs = _run(trace, cl, slo=SLOConfig())
+    ref, ref_runs = _run(trace, cl, slo=SLOConfig(),
+                         use_delta=False, warm_start=False)
+    assert set(fast.stats) == set(ref.stats)
+    assert fast.rejected == ref.rejected
+    assert fast.preemptions == ref.preemptions
+    assert fast.deferrals == ref.deferrals
+    assert _placements(fast_runs) == _placements(ref_runs)
+    for wid in ref.stats:
+        assert fast.stats[wid].makespan == ref.stats[wid].makespan, wid
+        assert fast.stats[wid].p95 == ref.stats[wid].p95, wid
+
+
+def test_warm_start_parity_on_existing_serving_trace():
+    """Warm-started merged solves on the pre-existing (non-SLO) parity
+    trace: placements bit-identical with warm_start on and off."""
+    trace = poisson_serving_trace(n_workflows=9, rate=12.0, seed=4,
+                                  num_queries=4)
+    cl = homogeneous_cluster(6)
+    warm, warm_runs = _run(trace, cl)
+    cold, cold_runs = _run(trace, cl, warm_start=False)
+    assert set(warm.stats) == set(cold.stats)
+    assert _placements(warm_runs) == _placements(cold_runs)
+    for wid in cold.stats:
+        assert warm.stats[wid].makespan == cold.stats[wid].makespan
+
+
+# ---------------------------------------------------------------------------
+# solver-level hint behaviour
+# ---------------------------------------------------------------------------
+
+
+def _toy_problem(hint=None):
+    rows = [(("w", "a"), 0), (("w", "b"), 0), (("w", "c"), 0)]
+    weights = np.array([[5.0, 1.0, 0.5],
+                        [4.0, 3.0, 0.5],
+                        [2.0, 1.5, 1.0]])
+    return FrontierProblem(rows, [0, 1, 2], weights, hint=hint)
+
+
+def test_hinted_solve_matches_cold_solve():
+    cold = solve_frontier_exact(_toy_problem())
+    hinted = solve_frontier_exact(_toy_problem(
+        hint={(("w", "a"), 0): 0, (("w", "b"), 0): 1,
+              (("w", "c"), 0): 2}))
+    assert hinted.assignment == cold.assignment
+    assert hinted.objective == pytest.approx(cold.objective)
+    assert hinted.status == "OPTIMAL"
+
+
+def test_stale_or_infeasible_hints_are_ignored():
+    # device 9 doesn't exist; row key ("w","z") doesn't exist; both
+    # rows hinted onto device 0 collide — the second is dropped
+    hinted = solve_frontier_exact(_toy_problem(
+        hint={(("w", "a"), 0): 9, (("w", "z"), 0): 0,
+              (("w", "b"), 0): 0, (("w", "c"), 0): 0}))
+    cold = solve_frontier_exact(_toy_problem())
+    assert hinted.assignment == cold.assignment
+    assert hinted.objective == pytest.approx(cold.objective)
+
+
+def test_hint_respects_slot_monotonicity_and_eligibility():
+    rows = [(("w", "a"), 0), (("w", "a"), 1)]
+    weights = np.array([[3.0, NEG], [1.0, 2.0]])
+    # slot 1 hinted without slot 0: incumbent must skip it; NEG entry
+    # (ineligible device) hinted for slot 0 must be skipped too
+    pr = FrontierProblem(rows, [0, 1], weights,
+                         hint={(("w", "a"), 0): 1, (("w", "a"), 1): 1})
+    sol = solve_frontier_exact(pr)
+    ref = solve_frontier_exact(FrontierProblem(rows, [0, 1],
+                                               weights.copy()))
+    assert sol.assignment == ref.assignment
+    assert sol.objective == pytest.approx(ref.objective)
+
+
+def test_merge_problems_carries_hints():
+    a = _toy_problem(hint={(("w", "a"), 0): 0})
+    rows_b = [(("v", "x"), 0)]
+    b = FrontierProblem(rows_b, [0, 1, 2],
+                        np.array([[1.0, 2.0, 3.0]]),
+                        hint={(("v", "x"), 0): 2})
+    merged = merge_problems([a, b])
+    assert merged.hint == {(("w", "a"), 0): 0, (("v", "x"), 0): 2}
+    sol = solve_frontier_exact(merged)
+    cold = solve_frontier_exact(
+        FrontierProblem(merged.rows, merged.devices,
+                        merged.weights.copy()))
+    assert sol.assignment == cold.assignment
+
+
+def test_cpsat_hint_preserves_optimum():
+    from repro.core.cpsat import CpModel, CpSolver
+    m = CpModel()
+    vs = [m.new_bool_var() for _ in range(4)]
+    m.add_at_most_one([vs[0], vs[1]])
+    m.add_at_most_one([vs[2], vs[3]])
+    m.maximize([(vs[0], 2.0), (vs[1], 3.0), (vs[2], 1.0),
+                (vs[3], 4.0)])
+    ref = CpSolver().solve(m)
+    # hint the WRONG (dominated) vars: optimum must be unaffected
+    m.add_hint(vs[0], 1)
+    m.add_hint(vs[2], 1)
+    hinted = CpSolver().solve(m)
+    assert hinted.objective == pytest.approx(ref.objective) == 7.0
+    assert hinted.values[1] == 1 and hinted.values[3] == 1
