@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sched bench-sched docs-check check
+.PHONY: test test-sched bench-sched calibrate docs-check check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -16,7 +16,13 @@ test-sched:
 
 bench-sched:
 	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
-	  --serve-slo
+	  --serve-slo --calibrate
+
+# Cost-model calibration gate (fit round-trip, >=2x probe-error
+# reduction vs hand-set constants, fixed-profile score-path parity);
+# writes CALIBRATION_profile.json next to BENCH_sched.json.
+calibrate:
+	$(PYTHON) -m benchmarks.sched_bench --quick --calibrate
 
 # Docs gate: markdown link check over README.md/docs/ plus a
 # pydocstyle-equivalent docstring lint on the documented-surface
@@ -29,6 +35,8 @@ docs-check:
 # (sched_bench exits nonzero if the vectorized engine drops below the
 # 5x wide-frontier target, if steady-state delta rescoring drops below
 # the 2x guard — PR target 3x — if either engine's placements diverge
-# from the reference path, or if the --serve-slo control plane stops
-# beating unconditional admission / loses cold-solve parity) + docs.
+# from the reference path, if the --serve-slo control plane stops
+# beating unconditional admission / loses cold-solve parity, or if the
+# --calibrate loop stops recovering coefficients / cutting probe error
+# >= 2x / holding fixed-profile parity) + docs.
 check: test-sched bench-sched docs-check

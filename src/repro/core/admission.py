@@ -29,12 +29,26 @@ The controller never mutates the real :class:`ExecutionState`: probes
 run on copy-on-write overlays, so the dirty-set protocol that keeps
 ``Scorer.rescore_matrix`` bit-identical to full rebuilds is untouched
 (see :mod:`repro.core.state`).
+
+Probe-margin correction (``SLOConfig.online_margin``): the raw probe
+under-estimates latency under load, so its prediction is inflated by a
+safety margin before the SLO comparison.  The margin is either the
+hand-set ``probe_margin`` constant or — when ``online_margin`` is on —
+a live per-model-family :class:`~repro.core.calibration.ProbeCorrector`
+estimate: the serving executor reports every workflow completion back
+via :meth:`AdmissionController.record_completion`, the corrector folds
+the observed/predicted latency ratio into its EWMA, and every later
+admission probe and deferral re-probe uses the corrected margin.  All
+predicted-vs-observed pairs are kept on ``probe_log`` for the
+``sched_bench --calibrate`` gate
+(:func:`repro.workflowbench.metrics.probe_error_summary`).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Sequence
 
+from repro.core.calibration import ProbeCorrector
 from repro.core.state import ExecutionState
 from repro.core.workflow import Workflow
 
@@ -52,13 +66,21 @@ class SLOConfig:
     backlog_limit: int = 8          # bounded deferral queue length
     # safety factor on predicted latency: the probe's floors ignore
     # transfer costs and residual layer serialization, so raw
-    # predictions under-estimate under load
+    # predictions under-estimate under load.  With online_margin this
+    # constant is only the corrector's PRIOR: the effective margin is
+    # learned per model family from observed completions.
     probe_margin: float = 1.5
     # preempt when predicted * slack > budget; must be > probe_margin
     # or the trigger window (budget/slack, budget/margin] is empty
     preempt_slack: float = 2.5
     admission: bool = True          # False: track SLOs, admit everything
     preemption: bool = True         # False: never revoke commitments
+    # online predicted-vs-observed probe correction (EWMA residual
+    # tracker per model family, see repro.core.calibration); the
+    # corrector starts at probe_margin so an un-warmed controller is
+    # identical to the static one
+    online_margin: bool = False
+    margin_alpha: float = 0.4       # EWMA step of the ratio tracker
 
     def deadline(self, arrival: float, cp_lb: float) -> float:
         """Absolute completion deadline for a workflow with critical-path
@@ -72,7 +94,9 @@ class AdmissionDecision:
 
     ``action`` is ``"admit"``, ``"defer"``, or ``"reject"``;
     ``predicted_latency`` is the probe's completion-latency estimate
-    (seconds from the decision instant); ``deadline`` is absolute sim
+    (seconds from the decision instant, BEFORE the safety margin);
+    ``margin`` is the multiplicative safety margin the SLO comparison
+    used (hand-set or corrector-supplied); ``deadline`` is absolute sim
     time; ``preempt`` asks the executor to revoke unissued commitments
     so the admitted workflow is replanned against immediately.
     """
@@ -81,6 +105,32 @@ class AdmissionDecision:
     deadline: float
     cp_lb: float
     preempt: bool = False
+    margin: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeRecord:
+    """One admitted workflow's probe prediction vs serving reality.
+
+    ``predicted`` is the raw probe estimate at the (final) admit
+    decision, ``margin`` the multiplicative safety factor applied to
+    it, and ``observed`` the measured completion latency from that
+    decision instant — the evidence stream behind the online probe
+    correction and the ``--calibrate`` benchmark gate.
+    """
+    wid: str
+    family: str
+    predicted: float
+    margin: float
+    observed: float
+    decided_at: float
+    finished_at: float
+
+    @property
+    def abs_error(self) -> float:
+        """``|margin · predicted − observed|`` seconds — the gap the
+        online corrector shrinks."""
+        return abs(self.margin * self.predicted - self.observed)
 
 
 def stage_floor_costs(wf: Workflow, cluster) -> dict[str, float]:
@@ -202,18 +252,31 @@ class AdmissionController:
     estimate, so admission control composes with every baseline.
     """
 
-    def __init__(self, slo: SLOConfig):
+    def __init__(self, slo: SLOConfig,
+                 corrector: Optional[ProbeCorrector] = None):
         self.slo = slo
+        # online probe-margin correction: explicit corrector wins;
+        # otherwise slo.online_margin builds one primed with the
+        # hand-set margin (None = static probe_margin forever)
+        if corrector is None and slo.online_margin:
+            corrector = ProbeCorrector(prior=slo.probe_margin,
+                                       alpha=slo.margin_alpha)
+        self.corrector = corrector
         # (original arrival time, workflow), oldest first
         self.backlog: list[tuple[float, Workflow]] = []
         self.rejected: list[str] = []
         self.deadlines: dict[str, float] = {}
         self.n_deferrals = 0
         self.n_probes = 0
+        # admitted-but-unfinished probe predictions awaiting their
+        # observed completion latency, and the completed-pair log
+        self.pending: dict[str, tuple[float, float, str, float]] = {}
+        self.probe_log: list[ProbeRecord] = []
         self._tails: dict[str, dict[str, float]] = {}
         self._floor: dict[str, dict[str, float]] = {}
         self._efloor: dict[str, dict[str, float]] = {}
         self._cp: dict[str, float] = {}
+        self._family: dict[str, str] = {}
 
     # -- cached critical-path bounds -------------------------------------
     def tail_bounds(self, wf: Workflow,
@@ -245,13 +308,96 @@ class AdmissionController:
         self._floor.pop(wid, None)
         self._efloor.pop(wid, None)
         self._cp.pop(wid, None)
+        self._family.pop(wid, None)
         self.deadlines.pop(wid, None)
+        self.pending.pop(wid, None)
+
+    # -- probe-margin correction -----------------------------------------
+    def probe_family(self, wf: Workflow,
+                     state: ExecutionState) -> str:
+        """Corrector key of a workflow: its model-family composition.
+
+        The sorted set of model families its stages span (e.g.
+        ``"qwen"`` for a single-family DAG, ``"llama+qwen"`` for an
+        alternating one) — distinct compositions have systematically
+        different probe residuals (a multi-family DAG churns residency,
+        a single-family one queues behind warm devices), so folding
+        them into one EWMA would let one workload's ratio poison the
+        other's margin.  Memoized per workflow id.
+        """
+        fam = self._family.get(wf.wid)
+        if fam is None:
+            fams = set()
+            for st in wf.stages.values():
+                prof = state.profiles.get(st.model)
+                fams.add(prof.family if prof is not None else "generic")
+            fam = "+".join(sorted(fams)) or "generic"
+            self._family[wf.wid] = fam
+        return fam
+
+    def probe_margin(self, wf: Workflow, state: ExecutionState) -> float:
+        """Live multiplicative safety margin for one workflow's probe:
+        the corrector's per-family EWMA estimate when online correction
+        is active, else the hand-set ``SLOConfig.probe_margin``."""
+        if self.corrector is None:
+            return self.slo.probe_margin
+        return self.corrector.margin(self.probe_family(wf, state))
+
+    def _note_admit(self, wf: Workflow, state: ExecutionState,
+                    dec: "AdmissionDecision") -> None:
+        """Bookkeeping for a (re-)admission: deadline registration plus
+        the pending predicted-latency record the completion observer
+        will close out."""
+        self.deadlines[wf.wid] = dec.deadline
+        self.pending[wf.wid] = (state.now, dec.predicted_latency,
+                                self.probe_family(wf, state), dec.margin)
+
+    def record_completion(self, wid: str, finish_t: float) -> None:
+        """Close the probe loop for one completed workflow: log the
+        predicted-vs-observed pair and feed the corrector's EWMA (the
+        serving executor calls this on every workflow completion)."""
+        p = self.pending.pop(wid, None)
+        if p is None:
+            return
+        decided_at, predicted, family, margin = p
+        observed = max(0.0, finish_t - decided_at)
+        self.probe_log.append(ProbeRecord(
+            wid=wid, family=family, predicted=predicted, margin=margin,
+            observed=observed, decided_at=decided_at,
+            finished_at=finish_t))
+        if self.corrector is not None:
+            self.corrector.observe(family, predicted, observed)
+
+    def activation_work(self, wf: Workflow, state: ExecutionState,
+                        done=frozenset()) -> float:
+        """One-time model-activation work of a workflow's remaining
+        stages: half a weight-load per DISTINCT model still to run.
+
+        The per-stage effective floors charge switch cost only on
+        cross-model edges, so a single-model DAG looks switch-free to
+        the congestion accounting even though every admitted DAG must
+        activate its models at least once somewhere — under a deep
+        merged queue that blind spot made predicted latency FLAT in
+        queue depth while observed latency climbed with it (the probe
+        ratio drifted ~1.6→2.6 across one overloaded burst).  Half a
+        load mirrors the effective-floor convention: chains reuse
+        residencies across devices, so charging full loads overcounts.
+        """
+        models = {st.model for sid, st in wf.stages.items()
+                  if sid not in done}
+        out = 0.0
+        for m in models:
+            prof = state.profiles.get(m)
+            if prof is not None:
+                out += 0.5 * prof.switch_cost
+        return out
 
     def remaining_floor_work(self, frontier,
                              state: ExecutionState) -> float:
         """Total effective-floor seconds of work still outstanding
         across every in-flight workflow (not-yet-completed stages,
-        switch-aware per :func:`stage_effective_floors`).
+        switch-aware per :func:`stage_effective_floors`, plus each
+        DAG's one-time :meth:`activation_work`).
 
         Divided by the device count this is a work-conserving bound on
         how long the cluster needs to drain its current admissions —
@@ -266,6 +412,7 @@ class AdmissionController:
             done = frontier.completed[wid]
             total += sum(c for sid, c in floor.items()
                          if sid not in done)
+            total += self.activation_work(wf, state, done)
         return total
 
     # -- probes ----------------------------------------------------------
@@ -315,9 +462,10 @@ class AdmissionController:
                                          max_waves=1)
         # plan_shared simulates on its OWN internal overlay; replay the
         # wave's estimated effects onto this probe's overlay (same
-        # estimator, same order) so the reads below see post-placement
-        # device state rather than the pre-plan snapshot.
-        cm = CostModel(sim)
+        # estimator — including the planner's calibrated cost params —
+        # same order) so the reads below see post-placement device
+        # state rather than the pre-plan snapshot.
+        cm = CostModel(sim, getattr(planner, "cost_params", None))
         for p in placements:
             _apply_estimate(workflows[p.wid], sim, p, cm)
         tails = self.tail_bounds(wf, state)
@@ -366,7 +514,8 @@ class AdmissionController:
         """
         n_dev = max(state.cluster.n, 1)
         self.tail_bounds(wf, state)
-        own = sum(self._efloor[wf.wid].values())
+        own = (sum(self._efloor[wf.wid].values())
+               + self.activation_work(wf, state))
         k = len(frontier.workflows) + 1
         fair = own * k / n_dev
         drain = (self.remaining_floor_work(frontier, state)
@@ -398,7 +547,14 @@ class AdmissionController:
                policy, claimed: set,
                arrival: float) -> AdmissionDecision:
         """Pure decision (no backlog bookkeeping): admit / defer /
-        reject ``wf`` given its original ``arrival`` time."""
+        reject ``wf`` given its original ``arrival`` time.
+
+        The SLO comparison inflates the raw probe prediction by
+        :meth:`probe_margin` — the hand-set constant, or the
+        corrector's live per-family estimate when online correction is
+        active — so deferral re-probes automatically track the
+        corrected margin too.
+        """
         cp = self.cp_lower_bound(wf, state)
         deadline = self.slo.deadline(arrival, cp)
         if not self.slo.admission:
@@ -409,14 +565,16 @@ class AdmissionController:
             return AdmissionDecision("reject", cp, deadline, cp)
         predicted, displacement = self.probe(wf, state, frontier,
                                              policy, claimed)
-        fits = self.slo.probe_margin * predicted <= budget + 1e-12
+        margin = self.probe_margin(wf, state)
+        fits = margin * predicted <= budget + 1e-12
         if fits and not self._displaces_inflight(state, frontier,
                                                  displacement):
             preempt = (self.slo.preemption
                        and predicted * self.slo.preempt_slack > budget)
             return AdmissionDecision("admit", predicted, deadline, cp,
-                                     preempt=preempt)
-        return AdmissionDecision("defer", predicted, deadline, cp)
+                                     preempt=preempt, margin=margin)
+        return AdmissionDecision("defer", predicted, deadline, cp,
+                                 margin=margin)
 
     def _displaces_inflight(self, state: ExecutionState, frontier,
                             displacement: float) -> bool:
@@ -470,7 +628,7 @@ class AdmissionController:
         if dec.action == "reject":
             self._shed(wf.wid, policy)
         elif dec.action == "admit":
-            self.deadlines[wf.wid] = dec.deadline
+            self._note_admit(wf, state, dec)
         return dec
 
     def readmit(self, state: ExecutionState, frontier, policy,
@@ -501,7 +659,7 @@ class AdmissionController:
                               arrival=arrival)
             if dec.action == "admit" or force:
                 dec.action = "admit"
-                self.deadlines[wf.wid] = dec.deadline
+                self._note_admit(wf, state, dec)
                 admitted.append((arrival, wf, dec))
             else:
                 keep.append((arrival, wf))

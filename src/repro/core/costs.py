@@ -6,6 +6,14 @@
 This estimator is the single measurement layer feeding both the planner
 score Ψ and the runtime scheduling score S — it is not a third
 objective (paper §3.5).
+
+Constants come from two places, both replaceable by a fitted
+:class:`~repro.core.calibration.CalibrationProfile` (see
+``docs/COSTMODEL.md``): per-model switch/prefill/decode coefficients
+live on ``ExecutionState.profiles`` (:class:`ModelProfile`), and the
+global correction-term scales live on :class:`CostParams` — a loaded
+profile supplies both via ``model_profiles()`` / ``cost_params()``
+instead of the hand-set defaults.
 """
 from __future__ import annotations
 
@@ -38,7 +46,16 @@ def cluster_arrays(cluster: Cluster) -> tuple[np.ndarray, np.ndarray]:
 
 @dataclasses.dataclass(frozen=True)
 class CostParams:
-    """Calibration of the correction terms (perturbed in Table 11)."""
+    """Global scales of the correction terms (perturbed in Table 11).
+
+    Hand-set defaults; a fitted
+    :class:`~repro.core.calibration.CalibrationProfile` lowers its
+    observation-weighted transfer and prefix-saving fits onto this
+    object via ``cost_params()``.  Pass the result everywhere a
+    ``CostParams`` is accepted (executors, :class:`CostModel`,
+    ``FrontierPlanner``) so planner and runtime price with one set of
+    constants.
+    """
     switch_scale: float = 1.0
     transfer_scale: float = 1.0
     prefix_scale: float = 1.0
@@ -49,6 +66,9 @@ class CostParams:
 
 @dataclasses.dataclass
 class CostBreakdown:
+    """Additive decomposition of one ĉ(v,d,s) estimate — the paper's
+    §3.5 terms, kept separate so Ψ/EFT assembly can weight them
+    individually."""
     base: float
     switch: float
     transfer: float
@@ -58,19 +78,48 @@ class CostBreakdown:
 
     @property
     def total(self) -> float:
+        """ĉ(v,d,s): base + penalties − benefits."""
         return (self.base + self.switch + self.transfer
                 - self.prefix_benefit - self.locality_benefit
                 - self.parallel_benefit)
 
 
 class CostModel:
+    """State-conditional cost estimator ĉ(v,d,s) over one
+    :class:`ExecutionState` view.
+
+    Reads per-model constants from ``state.profiles`` and the global
+    correction scales from ``params`` — so loading a calibration
+    profile into both (see :mod:`repro.core.calibration`) recalibrates
+    every consumer (scorer, planner waves, executor durations,
+    admission floors) at once.  Stateless apart from those references:
+    rebinding ``state`` repoints all component methods.
+
+    ``profiles`` overrides the per-model constants WITHOUT touching the
+    shared state — the calibration benchmark uses this to emulate
+    ground-truth hardware whose real coefficients diverge from what the
+    scheduler believes (executor durations priced from the override,
+    planner/probes from ``state.profiles``).
+    """
+
     def __init__(self, state: ExecutionState,
-                 params: Optional[CostParams] = None):
+                 params: Optional[CostParams] = None,
+                 profiles: Optional[dict] = None):
         self.state = state
         self.p = params or CostParams()
+        self.profiles_override = profiles
+
+    def model_profile(self, model: str):
+        """Per-model constants this estimator prices with: the
+        explicit override when set, else the shared state's profiles."""
+        if self.profiles_override is not None:
+            return self.profiles_override[model]
+        return self.state.profiles[model]
 
     # -- components ------------------------------------------------------
     def base_cost(self, stage: Stage, device: int, queries: int) -> float:
+        """c_base(v,d): the stage's device-profile cost × queries,
+        scaled by the device's speed multiplier."""
         dev = self.state.cluster.devices[device]
         return stage.cost_on(device) * queries / dev.speed
 
@@ -78,7 +127,7 @@ class CostModel:
         """κ_switch(m(v), d) if m(v) not resident on d, else 0."""
         if self.state.is_resident(stage.model, device):
             return 0.0
-        prof = self.state.profiles[stage.model]
+        prof = self.model_profile(stage.model)
         return prof.switch_cost * self.p.switch_scale
 
     def transfer_cost(self, wf: Workflow, stage: Stage, device: int,
@@ -104,6 +153,8 @@ class CostModel:
 
     def prefix_benefit(self, stage: Stage, device: int,
                        queries: int) -> float:
+        """Δ_prefix: prefill time saved by warm shared-prefix state on
+        the device (0 when the stage's group/model has no overlap)."""
         ov = self.state.prefix_overlap(stage, device, queries)
         if ov <= 0.0:
             return 0.0
@@ -115,6 +166,9 @@ class CostModel:
 
     def locality_benefit(self, wf: Workflow, stage: Stage, device: int,
                          queries: int) -> float:
+        """B_colo: activation-locality side benefit, proportional to
+        the fraction of parents whose output already sits on the
+        device."""
         if not stage.parents:
             return 0.0
         frac = (self.state.parent_on_device(wf.wid, stage, device)
@@ -148,6 +202,9 @@ class CostModel:
     # -- composite ĉ ------------------------------------------------------
     def breakdown(self, wf: Workflow, stage: Stage, device: int,
                   queries: int) -> CostBreakdown:
+        """Full per-term :class:`CostBreakdown` of placing the stage's
+        query batch on one device (parallel benefit is a multi-device
+        property and stays 0 here)."""
         return CostBreakdown(
             base=self.base_cost(stage, device, queries),
             switch=self.switch_cost(stage, device),
@@ -160,6 +217,7 @@ class CostModel:
 
     def effective_cost(self, wf: Workflow, stage: Stage, device: int,
                        queries: int) -> float:
+        """Scalar ĉ(v,d,s) — :meth:`breakdown` collapsed to its total."""
         return self.breakdown(wf, stage, device, queries).total
 
 
@@ -172,6 +230,8 @@ def _shard_size(queries: int, speeds: list[float], i: int,
 
 
 def shard_partition(queries: int, speeds: list[float]) -> list[int]:
+    """Speed-proportional shard sizes for a query batch (sums to
+    ``queries``; deterministic, so placements are reproducible)."""
     tot = sum(speeds)
     return [_shard_size(queries, speeds, i, tot)
             for i in range(len(speeds))]

@@ -149,9 +149,14 @@ class WorkflowExecutor:
     """
 
     def __init__(self, state: ExecutionState,
-                 cost_params: Optional[CostParams] = None):
+                 cost_params: Optional[CostParams] = None,
+                 world_profiles: Optional[dict] = None):
         self.state = state
-        self.cm = CostModel(state, cost_params)
+        # world_profiles: ground-truth per-model constants the emulated
+        # hardware follows when they diverge from what the scheduler
+        # believes (state.profiles) — the calibration benchmark's
+        # mis-belief harness; None means world == belief
+        self.cm = CostModel(state, cost_params, profiles=world_profiles)
 
     # ------------------------------------------------------------------
     def run(self, wf: Workflow, policy: Policy) -> RunResult:
@@ -469,11 +474,20 @@ class ServingExecutor:
     def __init__(self, state: ExecutionState,
                  cost_params: Optional[CostParams] = None,
                  replan_on_completion: bool = True,
-                 slo: Optional[SLOConfig] = None):
+                 slo: Optional[SLOConfig] = None,
+                 world_profiles: Optional[dict] = None,
+                 probe_corrector=None):
         self.state = state
-        self.cm = CostModel(state, cost_params)
+        # world != belief harness; see WorkflowExecutor.__init__
+        self.cm = CostModel(state, cost_params, profiles=world_profiles)
         self.replan_on_completion = replan_on_completion
         self.slo = slo
+        # long-lived ProbeCorrector shared across run() calls: each run
+        # builds a fresh AdmissionController around it, so the learned
+        # per-family probe margins survive trace boundaries (a
+        # calibration run warm-starts production traffic) while still
+        # updating online on every completion
+        self.probe_corrector = probe_corrector
         # the last run()'s controller, exposed for tests/introspection
         self.admission: Optional[AdmissionController] = None
         # per-(wid, sid) StageRun records of the most recent run()
@@ -507,7 +521,8 @@ class ServingExecutor:
         state = self.state
         cm = self.cm
         frontier = SharedFrontier()
-        adm = (AdmissionController(self.slo)
+        adm = (AdmissionController(self.slo,
+                                   corrector=self.probe_corrector)
                if self.slo is not None else None)
         self.admission = adm
         heap: list[tuple[float, int, str, object]] = []
@@ -613,6 +628,10 @@ class ServingExecutor:
                 if hasattr(policy, "forget_workflow"):
                     policy.forget_workflow(wid)
                 if adm is not None:
+                    # close the probe loop (predicted vs observed
+                    # latency -> EWMA margin corrector) before the
+                    # controller drops its per-workflow records
+                    adm.record_completion(wid, fin_t)
                     adm.forget(wid)
 
         def issue_all() -> None:

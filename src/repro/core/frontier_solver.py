@@ -80,6 +80,9 @@ def merge_problems(problems: list[FrontierProblem]) -> FrontierProblem:
 
 @dataclasses.dataclass
 class FrontierSolution:
+    """Result of one exact frontier solve: the optimal (or incumbent,
+    on timeout) ``(stage_key, slot) -> device`` assignment plus solver
+    statistics for the Table 12 analogue."""
     status: str
     objective: float
     assignment: dict[tuple, int]  # (stage_key, slot) -> device id

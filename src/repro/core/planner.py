@@ -31,7 +31,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.costs import CostModel, shard_partition
+from repro.core.costs import CostModel, CostParams, shard_partition
 from repro.core.frontier_solver import (NEG, FrontierProblem,
                                         FrontierSolution, merge_problems,
                                         solve_frontier_exact)
@@ -86,8 +86,14 @@ class FrontierPlanner:
 
     def __init__(self, params: Optional[ScoreParams] = None,
                  time_limit: float = 5.0, use_matrix: bool = True,
-                 use_delta: bool = True, warm_start: bool = True):
+                 use_delta: bool = True, warm_start: bool = True,
+                 cost_params: Optional[CostParams] = None):
         self.params = params or ScoreParams()
+        # cost-model calibration of every CostModel this planner builds
+        # (both score paths and the commit-and-advance estimator) —
+        # None keeps the hand-set defaults; a CalibrationProfile's
+        # cost_params() goes here when a profile is loaded
+        self.cost_params = cost_params
         self.time_limit = time_limit
         self.use_matrix = use_matrix
         # use_delta=False forces a full matrix rebuild every wave — the
@@ -112,7 +118,8 @@ class FrontierPlanner:
 
     def _get_scorer(self, sim: ExecutionState) -> Scorer:
         if self._scorer is None:
-            self._scorer = Scorer(sim, CostModel(sim), self.params)
+            self._scorer = Scorer(sim, CostModel(sim, self.cost_params),
+                                  self.params)
         else:
             self._scorer.rebind(sim)
         return self._scorer
@@ -172,7 +179,8 @@ class FrontierPlanner:
                 wave = self._plan_wave(wf, sim, remaining)
             if not wave:
                 break
-            apply_cm = cm if cm is not None else CostModel(sim)
+            apply_cm = cm if cm is not None \
+                else CostModel(sim, self.cost_params)
             for p in wave:
                 _apply_estimate(wf, sim, p, apply_cm)
             placed = {p.sid for p in wave}
@@ -389,7 +397,7 @@ class FrontierPlanner:
         """One CP-SAT wave over the current ready frontier."""
         if not ready:
             return []
-        cm = CostModel(state)
+        cm = CostModel(state, self.cost_params)
         scorer = Scorer(state, cm, self.params)
         scorer.set_frontier(wf, ready)
         q = wf.num_queries

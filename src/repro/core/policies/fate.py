@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
+from repro.core.costs import CostParams
 from repro.core.planner import FrontierPlanner, Placement
 from repro.core.scoring import ScoreParams
 from repro.core.state import ExecutionState
@@ -15,11 +16,13 @@ class FATEPolicy:
 
     def __init__(self, params: Optional[ScoreParams] = None,
                  time_limit: float = 5.0, use_matrix: bool = True,
-                 use_delta: bool = True, warm_start: bool = True):
+                 use_delta: bool = True, warm_start: bool = True,
+                 cost_params: Optional[CostParams] = None):
         self.planner = FrontierPlanner(params, time_limit,
                                        use_matrix=use_matrix,
                                        use_delta=use_delta,
-                                       warm_start=warm_start)
+                                       warm_start=warm_start,
+                                       cost_params=cost_params)
         self.params = self.planner.params
 
     def plan(self, wf: Workflow, state: ExecutionState,

@@ -38,6 +38,13 @@ invalidated — rows of models whose residency footprint or frontier
 sibling count changed, newly-ready rows, prefix columns whose warm
 state moved — and reuses every other cached component bit-identically.
 See the dirty-set protocol in :mod:`repro.core.state`.
+
+Every model-level constant the scorer folds (switch costs in the
+switch/tail/bonus terms) is read from ``state.profiles``, and every
+global scale from the cost model's ``CostParams`` — so a loaded
+:class:`~repro.core.calibration.CalibrationProfile` recalibrates both
+score paths identically, and parity (matrix vs scalar, delta vs full)
+holds under ANY fixed profile (``tests/test_calibration.py``).
 """
 from __future__ import annotations
 

@@ -18,10 +18,12 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.calibration import CalibrationProfile, StageObservation
 from repro.core.costs import CostParams
 from repro.core.planner import Placement
 from repro.core.state import ExecutionState
-from repro.core.workflow import ModelProfile, Stage, Workflow
+from repro.core.workflow import (DEFAULT_PROFILES, ModelProfile, Stage,
+                                 Workflow)
 from repro.models.families import build_model
 
 
@@ -30,13 +32,17 @@ def calibrated_switch_sleep(profile: ModelProfile,
                             time_scale: float = 1.0) -> float:
     """Emulated HBM weight-swap duration for one model switch.
 
-    Reconciles this engine's wall-clock with the proxy cost model
-    (ROADMAP calibration note): the scheduler prices a switch at
-    ``profile.switch_cost * CostParams.switch_scale`` proxy seconds
-    (see :meth:`repro.core.costs.CostModel.switch_cost`), so the
-    emulated sleep uses the SAME constants, shrunk by ``time_scale``
-    (tiny test models run orders of magnitude faster than the 7–14B
-    profiles the proxy costs describe; 1.0 means real-time parity).
+    The scheduler prices a switch at ``profile.switch_cost *
+    CostParams.switch_scale`` proxy seconds (see
+    :meth:`repro.core.costs.CostModel.switch_cost`); the emulated sleep
+    uses the SAME constants, shrunk by ``time_scale`` (tiny test models
+    run orders of magnitude faster than the 7–14B profiles the proxy
+    costs describe; 1.0 means real-time parity).  With a loaded
+    :class:`~repro.core.calibration.CalibrationProfile` both sides read
+    one source of truth — the engine derives ``profile`` from the
+    calibration's ``model_profiles()`` and asserts at profile-load time
+    that the planner's execution state carries identical constants
+    (:meth:`ServingEngine.run_workflow`).
     """
     p = cost_params or CostParams()
     return profile.switch_cost * p.switch_scale * time_scale
@@ -84,11 +90,12 @@ class VirtualDevice:
         A residency switch drops incompatible prefix caches and — in a
         real deployment — swaps HBM weights; the swap is emulated by
         ``switch_sleep`` seconds so measured τ reflects switch cost.
-        INTENTIONAL divergence from ``core/costs.py``: the default
-        sleep is 0 (tests must stay fast), so out of the box the
-        scheduler's proxy switch cost is NOT mirrored in measured wall
-        time; calibration runs pass
-        :func:`calibrated_switch_sleep`-derived values instead.
+        The default sleep is 0 (tests must stay fast); calibration and
+        measurement runs pass :func:`calibrated_switch_sleep`-derived
+        values, which read the same
+        :class:`~repro.core.calibration.CalibrationProfile` constants
+        the planner prices, so there is no engine/planner constant
+        divergence to reconcile.
         """
         if self.resident == bundle.name:
             return False
@@ -102,12 +109,23 @@ class VirtualDevice:
 
 @dataclasses.dataclass
 class StageResult:
+    """One executed stage: outputs, wall time, and the calibration
+    features the cost-model fitter consumes (tokens in/out, residency
+    switches, warm-prefix coverage — see
+    :meth:`ServingEngine.observations`)."""
     sid: str
     device_ids: tuple[int, ...]
     tokens_out: jax.Array           # [num_queries, gen_len]
     wall_s: float
     switched: bool
     prefix_hit: bool
+    # calibration features (measure -> fit -> profile loop)
+    model: str = ""
+    queries: int = 0
+    prompt_tokens: int = 0          # per query
+    output_tokens: int = 0          # per query
+    switches: int = 0               # residency switches across shards
+    prefix_fraction: float = 0.0    # fraction of queries with warm hit
 
 
 class ServingEngine:
@@ -115,23 +133,41 @@ class ServingEngine:
 
     ``switch_sleep`` (seconds) emulates the HBM weight swap uniformly;
     alternatively ``switch_time_scale`` derives a per-model sleep from
-    the proxy profiles via :func:`calibrated_switch_sleep`, keeping
+    the model profiles via :func:`calibrated_switch_sleep`, keeping
     measured τ consistent with the costs the scheduler planned
-    against.  Both default to off (fast tests) — see
-    :meth:`VirtualDevice.ensure_resident` for the documented
-    divergence.
+    against.  Both default to off (fast tests).
+
+    ``calibration`` loads a
+    :class:`~repro.core.calibration.CalibrationProfile` as the single
+    source of truth for those profiles: the per-model sleeps derive
+    from its fitted switch costs, and :meth:`run_workflow` asserts the
+    execution state's (planner-side) profiles carry the same constants
+    — the engine/planner cost divergence the pre-calibration code
+    documented as a TODO is now a load-time error instead.
+
+    Every executed stage is appended to ``log`` with its calibration
+    features; :meth:`observations` converts the log into the
+    :func:`repro.core.calibration.fit_profile` input format, closing
+    the measure → fit → profile loop.
     """
 
     def __init__(self, models: dict[str, ModelBundle], n_devices: int,
                  *, gen_len: int = 8, prompt_len: int = 32,
                  switch_sleep: float = 0.0,
-                 switch_time_scale: float = 0.0):
+                 switch_time_scale: float = 0.0,
+                 calibration: Optional[CalibrationProfile] = None):
         self.models = models
         self.devices = [VirtualDevice(i) for i in range(n_devices)]
         self.gen_len = gen_len
         self.prompt_len = prompt_len
         self.switch_sleep = switch_sleep
         self.switch_time_scale = switch_time_scale
+        self.calibration = calibration
+        # per-model profiles the emulated sleeps derive from: the
+        # loaded calibration's fit, or the hand-set defaults
+        self._profiles = (calibration.model_profiles()
+                          if calibration is not None
+                          else dict(DEFAULT_PROFILES))
         self.log: list[StageResult] = []
 
     def _switch_sleep_for(self, bundle: ModelBundle) -> float:
@@ -139,12 +175,34 @@ class ServingEngine:
         if self.switch_sleep:
             return self.switch_sleep
         if self.switch_time_scale:
-            from repro.core.workflow import DEFAULT_PROFILES
-            prof = DEFAULT_PROFILES.get(bundle.name)
+            prof = self._profiles.get(bundle.name)
             if prof is not None:
                 return calibrated_switch_sleep(
                     prof, time_scale=self.switch_time_scale)
         return 0.0
+
+    def observations(self) -> list[StageObservation]:
+        """Calibration observations for every logged stage execution.
+
+        The engine runs each shard on its own virtual device without
+        cross-device tensor movement, so ``transfer_ktokens`` is zero —
+        the fitter marks the transfer coefficient as defaulted rather
+        than fitting it from a feature that never varies.
+        """
+        out: list[StageObservation] = []
+        for r in self.log:
+            prof = self._profiles.get(r.model)
+            out.append(StageObservation(
+                model=r.model,
+                family=prof.family if prof is not None else "generic",
+                queries=r.queries,
+                prompt_tokens=float(r.prompt_tokens),
+                output_tokens=float(r.output_tokens),
+                switches=r.switches,
+                prefix_fraction=r.prefix_fraction,
+                transfer_ktokens=0.0,
+                wall_s=r.wall_s))
+        return out
 
     def run_stage(self, wf: Workflow, stage: Stage,
                   placement: Placement,
@@ -152,16 +210,17 @@ class ServingEngine:
         """prompts: [num_queries, prompt_len] int32 token ids."""
         bundle = self.models[stage.model]
         t0 = time.perf_counter()
-        switched = False
-        prefix_hit = False
+        n_switches = 0
+        hit_queries = 0
         outs = []
         q0 = 0
         for did, nq in zip(placement.devices, placement.shard_sizes):
             if nq == 0:
                 continue
             dev = self.devices[did]
-            switched |= dev.ensure_resident(bundle,
-                                            self._switch_sleep_for(bundle))
+            if dev.ensure_resident(bundle,
+                                   self._switch_sleep_for(bundle)):
+                n_switches += 1
             shard = prompts[q0: q0 + nq]
             q0 += nq
             cache_key = (stage.prefix_group, stage.model, nq)
@@ -172,9 +231,9 @@ class ServingEngine:
             # tiny-model substrate doesn't model.  (The seed fetched
             # the cache object here and never used it; that dead read
             # is removed.)
-            prefix_hit |= (stage.cache_reuse
-                           and stage.prefix_group is not None
-                           and cache_key in dev.prefix_caches)
+            if (stage.cache_reuse and stage.prefix_group is not None
+                    and cache_key in dev.prefix_caches):
+                hit_queries += nq
             max_len = self.prompt_len + self.gen_len
             model = bundle._model
             fresh = model.init_cache(nq, max_len)
@@ -192,15 +251,29 @@ class ServingEngine:
             outs.append(jnp.concatenate(gen, axis=1))
         tokens = jnp.concatenate(outs, axis=0) if outs else \
             jnp.zeros((0, self.gen_len), jnp.int32)
-        res = StageResult(stage.sid, placement.devices, tokens,
-                          time.perf_counter() - t0, switched, prefix_hit)
+        n_q = int(tokens.shape[0])
+        res = StageResult(
+            stage.sid, placement.devices, tokens,
+            time.perf_counter() - t0, n_switches > 0, hit_queries > 0,
+            model=stage.model, queries=n_q,
+            prompt_tokens=self.prompt_len, output_tokens=self.gen_len,
+            switches=n_switches,
+            prefix_fraction=hit_queries / n_q if n_q else 0.0)
         self.log.append(res)
         return res
 
     def run_workflow(self, wf: Workflow, policy, state: ExecutionState,
                      prompts: jax.Array) -> dict[str, StageResult]:
         """Execute the full DAG: plan with the policy, run stages on
-        real devices in dependency order, update real execution state."""
+        real devices in dependency order, update real execution state.
+
+        With a loaded calibration profile the execution state the
+        policy plans against must carry the SAME constants the engine
+        emulates — asserted here, at profile-load time, so engine and
+        planner can never silently diverge.
+        """
+        if self.calibration is not None:
+            self.calibration.assert_consistent(state.profiles)
         results: dict[str, StageResult] = {}
         completed: set[str] = set()
         t_start = time.perf_counter()

@@ -115,6 +115,41 @@ def slo_summary(results: dict) -> dict[str, dict]:
     return out
 
 
+def _median(xs: Sequence[float]) -> float:
+    """``statistics.median`` with NaN (not ValueError) on empty input —
+    the robust center the probe-error gate compares, insensitive to the
+    one-off tail blowups an overloaded trace produces."""
+    import statistics
+    return statistics.median(xs) if xs else float("nan")
+
+
+def probe_error_summary(records: Sequence) -> dict[str, float]:
+    """Aggregate an admission controller's ``probe_log``
+    (:class:`repro.core.admission.ProbeRecord` list) into
+    predicted-vs-observed probe accuracy metrics.
+
+    ``median_abs_err`` / ``mean_abs_err`` are over
+    ``|margin · predicted − observed|`` seconds — the quantity the
+    online EWMA correction shrinks and the ``sched_bench --calibrate``
+    gate compares against the hand-set-margin baseline.
+    ``median_ratio`` is the raw ``observed / predicted`` ratio (what a
+    perfectly-converged margin would equal); ``mean_margin`` the
+    margins actually applied.
+    """
+    errs = [r.abs_error for r in records]
+    ratios = [r.observed / r.predicted for r in records
+              if r.predicted > 1e-9]
+    return {
+        "n": len(errs),
+        "median_abs_err": _median(errs),
+        "mean_abs_err": (sum(errs) / len(errs) if errs
+                         else float("nan")),
+        "median_ratio": _median(ratios),
+        "mean_margin": (sum(r.margin for r in records) / len(records)
+                        if records else float("nan")),
+    }
+
+
 def mechanism_rates(rows: Iterable[dict]) -> dict[str, float]:
     """Mechanism proxies per task (Appendix C.2): cross-device edge
     rate, estimated prefix-cache hit rate, same-model continuation

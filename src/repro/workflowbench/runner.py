@@ -11,6 +11,7 @@ from pathlib import Path
 from typing import Optional, Sequence
 
 from repro.core.admission import SLOConfig
+from repro.core.calibration import CalibrationProfile
 from repro.core.costs import CostParams
 from repro.core.devices import Cluster, homogeneous_cluster
 from repro.core.executor import (ServingExecutor, ServingResult,
@@ -47,17 +48,36 @@ class RunRow:
         return dataclasses.asdict(self)
 
 
+def _load_calibration(calibration: Optional[CalibrationProfile],
+                      cost_params: Optional[CostParams]
+                      ) -> tuple[Optional[dict], Optional[CostParams]]:
+    """Lower a calibration profile onto runner inputs: the per-model
+    profiles dict for ``fresh_state`` and the calibrated
+    :class:`CostParams` (the explicit ``cost_params`` argument is the
+    base the profile's scales are applied over)."""
+    if calibration is None:
+        return None, cost_params
+    return (calibration.model_profiles(),
+            calibration.cost_params(cost_params))
+
+
 def run_one(wf: Workflow, policy_name: str, cluster: Cluster, *,
             score_params: Optional[ScoreParams] = None,
             cost_params: Optional[CostParams] = None,
+            calibration: Optional[CalibrationProfile] = None,
             policy_kwargs: Optional[dict] = None) -> RunRow:
     """Run one workflow under one policy on a fresh state.
 
     Honors the workflow's ``meta["preload_model"]`` (cache-dominant
-    suites start with the model resident fleet-wide).  Returns the
-    :class:`RunRow` with mechanism proxies and solver stats filled in.
+    suites start with the model resident fleet-wide).  With a
+    ``calibration`` profile, the execution state's model profiles, the
+    executor's cost params, and the FATE planner's cost params all load
+    the profile's fitted constants (single source of truth).  Returns
+    the :class:`RunRow` with mechanism proxies and solver stats filled
+    in.
     """
-    state = fresh_state(cluster)
+    profiles, cost_params = _load_calibration(calibration, cost_params)
+    state = fresh_state(cluster, profiles=profiles)
     preload = wf.meta.get("preload_model")
     if preload:
         for d in cluster.ids():
@@ -65,6 +85,8 @@ def run_one(wf: Workflow, policy_name: str, cluster: Cluster, *,
     kwargs = dict(policy_kwargs or {})
     if policy_name == "FATE" and score_params is not None:
         kwargs["params"] = score_params
+    if policy_name == "FATE" and calibration is not None:
+        kwargs.setdefault("cost_params", cost_params)
     policy = make_policy(policy_name, **kwargs)
     ex = WorkflowExecutor(state, cost_params)
     res = ex.run(wf, policy)
@@ -89,6 +111,7 @@ def run_suite(workflows: Sequence[Workflow], policies: Sequence[str],
               cluster: Optional[Cluster] = None, *,
               score_params: Optional[ScoreParams] = None,
               cost_params: Optional[CostParams] = None,
+              calibration: Optional[CalibrationProfile] = None,
               csv_name: Optional[str] = None) -> list[RunRow]:
     """Run every (workflow × policy) pair on fresh per-run states and
     optionally export one CSV (``results/workflow/<csv_name>``)."""
@@ -98,7 +121,8 @@ def run_suite(workflows: Sequence[Workflow], policies: Sequence[str],
         for pol in policies:
             rows.append(run_one(wf, pol, cluster,
                                 score_params=score_params,
-                                cost_params=cost_params))
+                                cost_params=cost_params,
+                                calibration=calibration))
     if csv_name:
         export_csv(rows, csv_name)
     return rows
@@ -122,6 +146,7 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
                 cluster: Optional[Cluster] = None, *,
                 score_params: Optional[ScoreParams] = None,
                 cost_params: Optional[CostParams] = None,
+                calibration: Optional[CalibrationProfile] = None,
                 slo: Optional["SLOConfig"] = None,
                 policy_kwargs: Optional[dict] = None,
                 csv_name: Optional[str] = None
@@ -134,7 +159,11 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
     meaningful).  With ``slo`` the SLO-aware control plane (admission /
     deferral / preemption) is active; pass
     ``SLOConfig(admission=False, preemption=False)`` to track deadlines
-    under unconditional admission (the control-plane baseline).
+    under unconditional admission (the control-plane baseline), and
+    ``SLOConfig(online_margin=True)`` to learn the probe margin online
+    from observed completions instead of the hand-set constant.  With
+    ``calibration``, every state/executor/planner constant loads the
+    profile's fit (see :mod:`repro.core.calibration`).
     ``policy_kwargs`` configure the FATE planner (e.g.
     ``{"use_delta": False, "warm_start": False}`` for parity
     references); like ``score_params`` they are applied to FATE only,
@@ -144,6 +173,7 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
     :func:`repro.workflowbench.metrics.slo_summary`.
     """
     cluster = cluster or homogeneous_cluster(8)
+    profiles, cost_params = _load_calibration(calibration, cost_params)
     results: dict[str, ServingResult] = {}
     for pol_name in policies:
         kwargs = {}
@@ -151,8 +181,10 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
             kwargs.update(policy_kwargs or {})
             if score_params is not None:
                 kwargs["params"] = score_params
+            if calibration is not None:
+                kwargs.setdefault("cost_params", cost_params)
         policy = make_policy(pol_name, **kwargs)
-        state = fresh_state(cluster)
+        state = fresh_state(cluster, profiles=profiles)
         ex = ServingExecutor(state, cost_params, slo=slo)
         results[pol_name] = ex.run(list(trace), policy)
     if csv_name:

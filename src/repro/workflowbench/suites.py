@@ -145,6 +145,42 @@ def poisson_serving_trace(n_workflows: int = 12, rate: float = 4.0,
     return trace
 
 
+def drifting_serving_trace(n_workflows: int = 24, rate_start: float = 2.0,
+                           rate_end: float = 16.0, seed: int = 0,
+                           num_queries: int = 8
+                           ) -> list[tuple[float, "Workflow"]]:
+    """Poisson trace whose arrival rate ramps linearly from
+    ``rate_start`` to ``rate_end`` over the trace.
+
+    As load climbs, queueing delay — and with it the true
+    observed/predicted probe ratio — drifts upward, so a static probe
+    margin is wrong at one end of the trace no matter its value.  The
+    regime the online EWMA probe correction is built for
+    (``tests/test_calibration.py`` gates convergence on it).
+    Deterministic in ``seed``; same mixed workload as
+    :func:`poisson_serving_trace`.
+    """
+    import random
+
+    rng = random.Random(seed)
+    trace: list[tuple[float, Workflow]] = []
+    t = 0.0
+    for i in range(n_workflows):
+        frac = i / max(n_workflows - 1, 1)
+        rate = rate_start + (rate_end - rate_start) * frac
+        t += rng.expovariate(rate)
+        ratio = RATIOS[i % len(RATIOS)]
+        if i % 2 == 0:
+            wf = prefix_suite_instance(ratio, i, num_queries)
+            wf.wid = f"drift-prefix-{i:03d}"
+        else:
+            wf = conflict_suite_instance(ratio, i, num_queries)
+            wf.wid = f"drift-conflict-{i:03d}"
+        wf.meta.pop("preload_model", None)
+        trace.append((t, wf))
+    return trace
+
+
 def overloaded_serving_trace(n_workflows: int = 18, rate: float = 14.0,
                              seed: int = 0, num_queries: int = 8
                              ) -> list[tuple[float, "Workflow"]]:

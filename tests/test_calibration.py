@@ -1,0 +1,326 @@
+"""Calibration subsystem: fit round-trip, profile load parity, and the
+online probe-error correction loop (measure -> fit -> profile ->
+score/probe)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import calibration as C
+from repro.core.admission import AdmissionController, SLOConfig
+from repro.core.costs import CostModel, CostParams
+from repro.core.devices import heterogeneous_cluster, homogeneous_cluster
+from repro.core.executor import ServingExecutor, fresh_state
+from repro.core.planner import FrontierPlanner
+from repro.core.policies import make_policy
+from repro.core.scoring import ScoreParams, Scorer
+from repro.core.workflow import DEFAULT_PROFILES, Stage, Workflow
+from repro.workflowbench.metrics import probe_error_summary
+from repro.workflowbench.suites import (drifting_serving_trace,
+                                        overloaded_serving_trace)
+
+
+def _truth():
+    return C.CalibrationProfile.hand_set().perturbed(
+        switch_mul=0.45, prefill_mul=1.3, decode_mul=0.8,
+        transfer_mul=1.4, prefix_saving=0.75, base=0.001)
+
+
+# ---------------------------------------------------------------------------
+# fit round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_exact_coefficients_noiseless():
+    truth = _truth()
+    obs = C.synthetic_trace(truth, 420, seed=3, noise=0.0,
+                            time_scale=0.05)
+    fitted = C.fit_profile(obs, time_scale=0.05)
+    errs = C.coefficient_errors(fitted, truth)
+    assert errs, "no identifiable coefficients compared"
+    assert max(errs.values()) < 1e-6
+
+
+def test_fit_recovers_coefficients_under_noise():
+    truth = _truth()
+    obs = C.synthetic_trace(truth, 600, seed=1, noise=0.01,
+                            time_scale=0.05)
+    fitted = C.fit_profile(obs, time_scale=0.05)
+    errs = {k: v for k, v in C.coefficient_errors(fitted, truth).items()
+            if not k.endswith(".base")}
+    assert max(errs.values()) < 0.15
+
+
+def test_fit_unidentifiable_columns_fall_back_to_handset():
+    truth = _truth()
+    obs = [dataclasses.replace(o, switches=0, transfer_ktokens=0.0,
+                               wall_s=0.0)
+           for o in C.synthetic_trace(truth, 300, seed=5)]
+    obs = [dataclasses.replace(o, wall_s=truth.predict(o)) for o in obs]
+    fitted = C.fit_profile(obs)
+    hand = C.CalibrationProfile.hand_set()
+    for fam, stats in fitted.fit_stats.items():
+        assert "switch" in stats["defaulted"]
+        assert "transfer" in stats["defaulted"]
+        assert fitted.families[fam].switch == \
+            pytest.approx(hand.families[fam].switch)
+        assert fitted.families[fam].transfer == \
+            pytest.approx(hand.families[fam].transfer)
+
+
+def test_fit_flags_collinear_token_columns_from_fixed_lengths():
+    """An engine-style trace with FIXED prompt/output lengths makes the
+    base/prefill/decode columns proportional; the fit must refuse to
+    split the combined rate arbitrarily and keep hand-set values for
+    the dropped coefficients, with explicit provenance."""
+    truth = _truth()
+    obs = []
+    for o in C.synthetic_trace(truth, 240, seed=9):
+        o = dataclasses.replace(o, prompt_tokens=512.0,
+                                output_tokens=64.0, speed=1.0,
+                                wall_s=0.0)
+        obs.append(dataclasses.replace(o, wall_s=truth.predict(o)))
+    fitted = C.fit_profile(obs)
+    hand = C.CalibrationProfile.hand_set()
+    for fam, stats in fitted.fit_stats.items():
+        assert set(stats["collinear"]) == {"prefill", "decode"}
+        assert {"prefill", "decode"} <= set(stats["defaulted"])
+        # dropped coefficients fall back to hand-set, so
+        # model_profiles() cannot distort prefill/decode pricing
+        assert fitted.families[fam].prefill == \
+            pytest.approx(hand.families[fam].prefill)
+        assert fitted.families[fam].decode == \
+            pytest.approx(hand.families[fam].decode)
+        # switch stays identifiable (binary column, independent of q)
+        assert "switch" not in stats["defaulted"]
+        assert fitted.families[fam].switch == \
+            pytest.approx(truth.families[fam].switch, rel=1e-6)
+
+
+def test_handset_profile_is_identity():
+    hand = C.CalibrationProfile.hand_set()
+    assert hand.model_profiles() == dict(DEFAULT_PROFILES)
+    assert hand.cost_params() == CostParams()
+
+
+def test_profile_json_roundtrip(tmp_path):
+    truth = _truth()
+    path = truth.save(tmp_path / "profile.json")
+    loaded = C.CalibrationProfile.load(path)
+    assert dict(loaded.families) == dict(truth.families)
+    assert loaded.source == truth.source
+    assert loaded.version == C.PROFILE_VERSION
+
+
+def test_profile_rejects_unknown_version():
+    doc = json.loads(C.CalibrationProfile.hand_set().to_json())
+    doc["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        C.CalibrationProfile.from_json(json.dumps(doc))
+
+
+def test_assert_consistent_detects_divergence():
+    truth = _truth()
+    truth.assert_consistent(truth.model_profiles())   # no raise
+    with pytest.raises(ValueError, match="calibration mismatch"):
+        truth.assert_consistent(dict(DEFAULT_PROFILES))
+
+
+# ---------------------------------------------------------------------------
+# fixed-profile parity: loading a profile never breaks bit-identical
+# placements across score paths
+# ---------------------------------------------------------------------------
+
+
+def _parity_workflow():
+    stages = {}
+    for i in range(8):
+        stages[f"in{i}"] = Stage(f"in{i}",
+                                 ["qwen-7b", "llama-8b"][i % 2],
+                                 base_cost={-1: 0.05},
+                                 output_tokens=256.0)
+        stages[f"w{i}"] = Stage(
+            f"w{i}", ["llama-8b", "qwen-14b", "deepseek-7b"][i % 3],
+            max_shards=2, base_cost={-1: 0.1 + 0.01 * i},
+            prefix_group=f"g{i % 3}", shared_fraction=0.5,
+            output_tokens=384.0, parents=(f"in{i}",))
+        stages[f"c{i}"] = Stage(
+            f"c{i}", ["qwen-7b", "llama-3b"][i % 2],
+            base_cost={-1: 0.08}, prefix_group=f"g{i % 3}",
+            output_tokens=256.0, parents=(f"w{i}",))
+    return Workflow(wid="calib-parity", stages=stages, num_queries=8)
+
+
+def _warmed(cluster, profiles):
+    wf = _parity_workflow()
+    state = fresh_state(cluster, profiles=profiles)
+    for i in range(8):
+        d = i % cluster.n
+        state.output_loc[(wf.wid, f"in{i}")] = (d,)
+        state.completed.add((wf.wid, f"in{i}"))
+        state.residency[d] = ["qwen-7b", "llama-8b"][i % 2]
+        state.warm_prefix(d, f"g{i % 3}", "llama-8b", 4, 0.0)
+    return wf, state
+
+
+def test_fixed_profile_placement_parity():
+    profile = _truth()
+    profiles = profile.model_profiles()
+    cparams = profile.cost_params()
+    cluster = heterogeneous_cluster(6)
+    ready = [f"w{i}" for i in range(8)]
+    keys = []
+    for kwargs in ({"use_matrix": True, "use_delta": True},
+                   {"use_matrix": True, "use_delta": False},
+                   {"use_matrix": False}):
+        wf, state = _warmed(cluster, profiles)
+        planner = FrontierPlanner(ScoreParams(horizon=3),
+                                  cost_params=cparams, **kwargs)
+        key = []
+        for _ in range(2):   # second plan exercises cross-session delta
+            ps = planner.plan(wf, state, list(ready))
+            key.append([(p.sid, p.devices, p.shard_sizes) for p in ps])
+        keys.append(key)
+    assert keys[0] == keys[1] == keys[2]
+
+
+def test_fixed_profile_rescore_matrix_parity():
+    """score_matrix vs rescore_matrix stay bit-identical under a fixed
+    profile while completion-like events mutate the state."""
+    profile = _truth()
+    profiles = profile.model_profiles()
+    cparams = profile.cost_params()
+    cluster = heterogeneous_cluster(6)
+    wf, state = _warmed(cluster, profiles)
+    ready = [f"w{i}" for i in range(8)]
+    params = ScoreParams(horizon=3)
+    sc = Scorer(state, CostModel(state, cparams), params)
+    sc.set_frontier(wf, ready)
+    prev = sc.score_matrix(wf, ready)
+    rng = np.random.default_rng(0)
+    for step in range(12):
+        d = int(rng.integers(cluster.n))
+        state.now += float(rng.uniform(0.01, 0.1))
+        state.set_free_at(d, state.now + 0.08)
+        state.set_resident(d, ["qwen-7b", "llama-8b", "qwen-14b"][step % 3])
+        state.warm_prefix(d, f"g{step % 3}", "llama-8b", 4, state.now)
+        sc.set_frontier(wf, ready)
+        prev = sc.rescore_matrix(wf, ready, prev)
+        sc2 = Scorer(state, CostModel(state, cparams), params)
+        sc2.set_frontier(wf, ready)
+        full = sc2.score_matrix(wf, ready)
+        for name in ("raw", "eft", "base", "wait"):
+            assert np.array_equal(getattr(prev, name),
+                                  getattr(full, name)), name
+
+
+# ---------------------------------------------------------------------------
+# online probe correction
+# ---------------------------------------------------------------------------
+
+
+def test_probe_corrector_tracks_drifting_ratio():
+    corr = C.ProbeCorrector(prior=1.5, alpha=0.4)
+    assert corr.margin("qwen") == pytest.approx(1.5)   # un-warmed
+    # ratio drifts 1.2 -> 3.0; the EWMA must follow it
+    for i in range(40):
+        ratio = 1.2 + 1.8 * i / 39
+        corr.observe("qwen", 10.0, 10.0 * ratio)
+    assert corr.margin("qwen") == pytest.approx(3.0, rel=0.15)
+    # other families are independent
+    assert corr.margin("llama") == pytest.approx(1.5)
+
+
+def test_probe_corrector_clips_pathological_ratios():
+    corr = C.ProbeCorrector(prior=1.5, alpha=1.0, max_margin=4.0)
+    corr.observe("f", 1e-12, 100.0)          # no ratio: ignored
+    assert corr.margin("f") == pytest.approx(1.5)
+    corr.observe("f", 0.01, 1e9)             # clipped at max_margin
+    assert corr.margin("f") == pytest.approx(4.0)
+
+
+def test_online_margin_learns_on_drifting_trace():
+    """End to end: with online correction the controller's margins move
+    off the prior and cut the probe error vs the static margin on a
+    trace whose load (hence latency ratio) drifts upward."""
+    trace = drifting_serving_trace(n_workflows=20, rate_start=2.0,
+                                   rate_end=16.0, seed=0, num_queries=8)
+    cluster = homogeneous_cluster(6)
+
+    def leg(slo, corrector=None):
+        ex = ServingExecutor(fresh_state(cluster), slo=slo,
+                             probe_corrector=corrector)
+        ex.run(list(trace), make_policy("FATE"))
+        return ex.admission
+
+    adm_static = leg(SLOConfig())
+    corr = C.ProbeCorrector(prior=1.5, alpha=0.4)
+    adm_online = None
+    for _ in range(2):     # calibration pass + evaluation pass
+        adm_online = leg(SLOConfig(online_margin=True), corr)
+    assert corr.n_obs, "corrector never saw a completion"
+    assert any(abs(m - 1.5) > 1e-6 for m in corr.margins.values())
+    s_static = probe_error_summary(adm_static.probe_log)
+    s_online = probe_error_summary(adm_online.probe_log)
+    assert s_online["n"] > 0 and s_static["n"] > 0
+    assert s_online["median_abs_err"] <= s_static["median_abs_err"]
+
+
+def test_record_completion_updates_corrector_and_log():
+    slo = SLOConfig(online_margin=True)
+    adm = AdmissionController(slo)
+    trace = overloaded_serving_trace(n_workflows=4, rate=8.0, seed=2,
+                                     num_queries=4)
+    wf = trace[0][1]
+    state = fresh_state(homogeneous_cluster(4))
+    fam = adm.probe_family(wf, state)
+    adm.pending[wf.wid] = (1.0, 5.0, fam, 1.5)
+    adm.record_completion(wf.wid, 16.0)
+    assert len(adm.probe_log) == 1
+    rec = adm.probe_log[0]
+    assert rec.observed == pytest.approx(15.0)
+    assert rec.abs_error == pytest.approx(abs(1.5 * 5.0 - 15.0))
+    assert adm.corrector.n_obs[fam] == 1
+    # ratio 3.0 replaces the un-warmed prior outright
+    assert adm.corrector.margin(fam) == pytest.approx(3.0)
+    # idempotent: the pending record is consumed
+    adm.record_completion(wf.wid, 99.0)
+    assert len(adm.probe_log) == 1
+
+
+def test_probe_family_keying_separates_compositions():
+    adm = AdmissionController(SLOConfig())
+    state = fresh_state(homogeneous_cluster(4))
+    trace = overloaded_serving_trace(n_workflows=4, rate=8.0, seed=0,
+                                     num_queries=4)
+    fams = {adm.probe_family(wf, state) for _, wf in trace}
+    assert "qwen" in fams                  # single-family prefix DAGs
+    assert any("+" in f for f in fams)     # multi-family conflict DAGs
+
+
+# ---------------------------------------------------------------------------
+# world-vs-belief harness
+# ---------------------------------------------------------------------------
+
+
+def test_world_profiles_diverge_executor_from_belief():
+    """The executor prices real durations from world_profiles while the
+    scheduler's state keeps its believed constants — the mis-belief
+    harness behind the --calibrate probe gate."""
+    truth = _truth()
+    trace = overloaded_serving_trace(n_workflows=6, rate=8.0, seed=0,
+                                     num_queries=4)
+    cluster = homogeneous_cluster(4)
+
+    def run(world_profiles):
+        ex = ServingExecutor(fresh_state(cluster),
+                             world_profiles=world_profiles)
+        return ex.run(list(trace), make_policy("FATE"))
+
+    res_belief = run(None)
+    res_world = run(truth.model_profiles())
+    # truth switches are ~2x cheaper, so real makespans must shrink
+    mean_b = sum(s.makespan for s in res_belief.stats.values()) / 6
+    mean_w = sum(s.makespan for s in res_world.stats.values()) / 6
+    assert mean_w < mean_b

@@ -69,6 +69,46 @@ def test_serving_residency_switch_counted(bundles):
     assert switched >= 2
 
 
+def test_serving_emits_calibration_observations(bundles):
+    wf = _workflow()
+    engine = ServingEngine(bundles, n_devices=2, gen_len=4,
+                           prompt_len=8)
+    state = fresh_state(homogeneous_cluster(2))
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (4, 8), 0, 256)
+    engine.run_workflow(wf, make_policy("FATE"), state, prompts)
+    obs = engine.observations()
+    assert len(obs) == len(engine.log) == len(wf.stages)
+    for o in obs:
+        assert o.queries == 4
+        assert o.prompt_tokens == 8 and o.output_tokens == 4
+        assert o.wall_s > 0.0
+        assert o.family in {"qwen", "llama"}
+        assert o.transfer_ktokens == 0.0
+    # the single-model prefix chain re-runs on a warm group at least
+    # once, so some observation carries a nonzero hit fraction
+    assert sum(o.switches for o in obs) >= 1
+
+
+def test_serving_engine_asserts_profile_consistency(bundles):
+    from repro.core.calibration import CalibrationProfile
+
+    profile = CalibrationProfile.hand_set().perturbed(switch_mul=0.5)
+    wf = _workflow()
+    engine = ServingEngine(bundles, n_devices=2, gen_len=2,
+                           prompt_len=8, calibration=profile)
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (4, 8), 0, 256)
+    # state still carries the hand-set constants -> load-time error
+    state = fresh_state(homogeneous_cluster(2))
+    with pytest.raises(ValueError, match="calibration mismatch"):
+        engine.run_workflow(wf, make_policy("FATE"), state, prompts)
+    # loading the SAME profile into the state reconciles them
+    state = fresh_state(homogeneous_cluster(2),
+                        profiles=profile.model_profiles())
+    results = engine.run_workflow(wf, make_policy("FATE"), state,
+                                  prompts)
+    assert set(results) == set(wf.stages)
+
+
 def test_serving_deterministic_outputs(bundles):
     wf = _workflow()
     prompts = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0, 256)

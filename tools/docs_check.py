@@ -6,9 +6,11 @@ the equivalent gate implemented on ``ast``:
 1. **Markdown link check** — every relative link/image target in
    ``README.md`` and ``docs/*.md`` must exist on disk (http(s) and
    mailto links are skipped; ``#fragment`` suffixes are stripped).
-2. **Docstring lint** over the four documented-surface modules
+2. **Docstring lint** over the documented-surface modules
    (``core/scoring.py``, ``core/planner.py``, ``core/executor.py``,
-   ``workflowbench/runner.py``): the module itself and every PUBLIC
+   ``core/costs.py``, ``core/admission.py``, ``core/calibration.py``,
+   ``core/frontier_solver.py``, ``workflowbench/runner.py``): the
+   module itself and every PUBLIC
    class, function, method, and property (name not starting with
    ``_``) must carry a docstring whose first paragraph (summary) ends
    with ``.``, ``:``, ``?`` or ``!`` (pydocstyle D1xx presence + a
@@ -31,6 +33,10 @@ DOCSTRING_MODULES = [
     "src/repro/core/scoring.py",
     "src/repro/core/planner.py",
     "src/repro/core/executor.py",
+    "src/repro/core/costs.py",
+    "src/repro/core/admission.py",
+    "src/repro/core/calibration.py",
+    "src/repro/core/frontier_solver.py",
     "src/repro/workflowbench/runner.py",
 ]
 
