@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sched bench-sched calibrate docs-check check
+.PHONY: test test-sched bench-sched calibrate docs-check \
+  deprecated-check check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -12,7 +13,8 @@ test-sched:
 	$(PYTHON) -m pytest -q tests/test_executor.py tests/test_solvers.py \
 	  tests/test_workflowbench.py tests/test_score_matrix_parity.py \
 	  tests/test_delta_rescoring.py tests/test_shared_frontier.py \
-	  tests/test_admission.py tests/test_preemption.py
+	  tests/test_admission.py tests/test_preemption.py \
+	  tests/test_scheduler_api.py
 
 bench-sched:
 	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
@@ -31,6 +33,12 @@ calibrate:
 docs-check:
 	$(PYTHON) tools/docs_check.py
 
+# Deprecated-surface gate: fails if any in-repo caller still uses the
+# policy_kwargs path outside the back-compat wrappers / parity tests
+# (the typed SchedulerConfig is the supported surface).
+deprecated-check:
+	$(PYTHON) tools/check_deprecated.py
+
 # CI smoke gate: scheduler tests + planner-throughput regression checks
 # (sched_bench exits nonzero if the vectorized engine drops below the
 # 5x wide-frontier target, if steady-state delta rescoring drops below
@@ -38,5 +46,6 @@ docs-check:
 # from the reference path, if the --serve-slo control plane stops
 # beating unconditional admission / loses cold-solve parity, or if the
 # --calibrate loop stops recovering coefficients / cutting probe error
-# >= 2x / holding fixed-profile parity) + docs.
-check: test-sched bench-sched docs-check
+# >= 2x / holding fixed-profile parity) + docs + the
+# deprecated-surface gate.
+check: test-sched bench-sched docs-check deprecated-check

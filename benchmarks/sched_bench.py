@@ -14,6 +14,7 @@ bit-identical placements, and writes a ``BENCH_sched.json`` trajectory.
     PYTHONPATH=src python -m benchmarks.sched_bench --serve    # serving mode
     PYTHONPATH=src python -m benchmarks.sched_bench --serve-slo  # SLO plane
     PYTHONPATH=src python -m benchmarks.sched_bench --calibrate  # cost model
+    PYTHONPATH=src python -m benchmarks.sched_bench --config SCHED_config.json
 
 Gates (enforced by exit code, used by ``make check`` / CI):
   * wide-frontier (32 ready × 16 devices, horizon 4) matrix vs scalar
@@ -26,7 +27,10 @@ Gates (enforced by exit code, used by ``make check`` / CI):
     plane (admission + deferral + preemption + warm-started merged
     solves) achieves STRICTLY better SLO attainment and SLO goodput
     than unconditional admission, with nonzero rejections/preemptions
-    and placements bit-identical to a cold-solve reference;
+    and placements bit-identical to a cold-solve reference; every leg
+    runs through the event-driven ``Scheduler`` API and the
+    controlled leg's ``SchedulerConfig`` is archived as
+    ``SCHED_config.json`` (replayable via ``--config``);
   * ``--calibrate``: the cost-model calibration loop (see
     ``run_calibrate``) — the fit recovers a synthetic truth's
     coefficients within 15%, the calibrated profile + online probe
@@ -288,15 +292,36 @@ def run_profile(width: int = 32, n_devices: int = 16,
     }
 
 
+def _run_from_config(trace, cluster, config, *, world_profiles=None,
+                     world_cost_params=None, probe_corrector=None):
+    """Run one serving trace through the event-driven Scheduler API:
+    submit every arrival, drain, return ``(result, scheduler)``."""
+    from repro.core.scheduler import Scheduler
+
+    sched = Scheduler(cluster, config, world_profiles=world_profiles,
+                      world_cost_params=world_cost_params,
+                      probe_corrector=probe_corrector)
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    res = sched.drain()
+    return res, sched
+
+
 def run_serve_slo(n_workflows: int = 18, rate: float = 14.0,
-                  n_devices: int = 6, seed: int = 0) -> dict:
+                  n_devices: int = 6, seed: int = 0,
+                  config_out=None) -> dict:
     """SLO control-plane benchmark on an overloaded Poisson trace.
 
-    Runs the same trace three ways under FATE: unconditional admission
-    (deadlines tracked, control plane off), the SLO-aware control
-    plane (admission + deferral + preemption + warm-started solves),
-    and a cold-solve parity reference of the controlled run
-    (``use_delta=False, warm_start=False``).
+    Runs the same trace three ways under FATE — each leg expressed as
+    a :class:`~repro.core.scheduler.SchedulerConfig` and driven
+    through the event-driven ``Scheduler`` API: unconditional
+    admission (deadlines tracked, control plane off), the SLO-aware
+    control plane (admission + deferral + preemption + warm-started
+    solves), and a cold-solve parity reference of the controlled run
+    (``use_delta=False, warm_start=False``).  The controlled leg's
+    config is serialized to ``config_out`` (CI uploads it next to
+    ``BENCH_sched.json``), so the gated run is reproducible via
+    ``sched_bench --config``.
 
     Gates (exit-code enforced when ``--serve-slo`` is passed):
       * controlled SLO attainment and SLO goodput STRICTLY better than
@@ -307,23 +332,27 @@ def run_serve_slo(n_workflows: int = 18, rate: float = 14.0,
         reference (warm starts and delta rescoring are pure speedups).
     """
     from repro.core.admission import SLOConfig
-    from repro.core.executor import ServingExecutor
-    from repro.core.policies import make_policy
+    from repro.core.scheduler import SchedulerConfig
     from repro.workflowbench.metrics import slo_summary
     from repro.workflowbench.suites import overloaded_serving_trace
 
     trace = overloaded_serving_trace(n_workflows=n_workflows, rate=rate,
                                      seed=seed, num_queries=8)
     cluster = homogeneous_cluster(n_devices)
+    ctrl_cfg = SchedulerConfig(policy="FATE", slo=SLOConfig())
+    if config_out is not None:
+        ctrl_cfg.save(config_out)
 
-    def _run(slo, **policy_kwargs):
-        ex = ServingExecutor(fresh_state(cluster), slo=slo)
-        res = ex.run(list(trace), make_policy("FATE", **policy_kwargs))
-        return res, ex.last_runs
+    def _run(config):
+        res, sched = _run_from_config(trace, cluster, config)
+        return res, sched.runs
 
-    uncond, _ = _run(SLOConfig(admission=False, preemption=False))
-    ctrl, ctrl_runs = _run(SLOConfig())
-    ref, ref_runs = _run(SLOConfig(), use_delta=False, warm_start=False)
+    uncond, _ = _run(SchedulerConfig(
+        policy="FATE", slo=SLOConfig(admission=False, preemption=False)))
+    ctrl, ctrl_runs = _run(ctrl_cfg)
+    ref, ref_runs = _run(SchedulerConfig(
+        policy="FATE", slo=SLOConfig(), use_delta=False,
+        warm_start=False))
 
     identical = (set(ctrl.stats) == set(ref.stats)
                  and ctrl.rejected == ref.rejected
@@ -416,8 +445,7 @@ def run_calibrate(n_workflows: int = 18, rate: float = 14.0,
     """
     from repro.core import calibration as C
     from repro.core.admission import SLOConfig
-    from repro.core.executor import ServingExecutor, fresh_state
-    from repro.core.policies import make_policy
+    from repro.core.scheduler import SchedulerConfig
     from repro.workflowbench.metrics import probe_error_summary
     from repro.workflowbench.suites import overloaded_serving_trace
 
@@ -442,21 +470,22 @@ def run_calibrate(n_workflows: int = 18, rate: float = 14.0,
     world_profiles = truth.model_profiles()
     world_params = truth.cost_params()
 
-    def _leg(belief_profiles, belief_params, slo, corrector):
-        state = fresh_state(cluster, profiles=belief_profiles)
-        ex = ServingExecutor(state, world_params, slo=slo,
-                             world_profiles=world_profiles,
-                             probe_corrector=corrector)
-        res = ex.run(list(trace),
-                     make_policy("FATE", cost_params=belief_params))
-        return res, ex.admission
+    def _leg(belief_calibration, slo, corrector):
+        # the scheduler's BELIEF is one SchedulerConfig (profiles +
+        # cost params lowered from the embedded calibration profile);
+        # the emulated hardware follows the TRUE constants
+        config = SchedulerConfig(policy="FATE", slo=slo,
+                                 calibration=belief_calibration)
+        res, sched = _run_from_config(
+            trace, cluster, config, world_profiles=world_profiles,
+            world_cost_params=world_params, probe_corrector=corrector)
+        return res, sched.admission
 
-    res_hand, adm_hand = _leg(None, None, SLOConfig(), None)
+    res_hand, adm_hand = _leg(None, SLOConfig(), None)
     corrector = C.ProbeCorrector(prior=SLOConfig().probe_margin)
     for _ in range(2):    # pass 1 warm-starts the corrector, pass 2 is
         res_cal, adm_cal = _leg(           # the gated evaluation run
-            fitted.model_profiles(), fitted.cost_params(),
-            SLOConfig(online_margin=True), corrector)
+            fitted, SLOConfig(online_margin=True), corrector)
     hand = probe_error_summary(adm_hand.probe_log)
     cal = probe_error_summary(adm_cal.probe_log)
     if hand["n"] == 0 or cal["n"] == 0:
@@ -515,6 +544,55 @@ def run_serve(n_workflows: int = 12, rate: float = 6.0,
     }
 
 
+def run_from_config_file(config_path: str, out: Path,
+                         n_workflows: int = 18, rate: float = 14.0,
+                         n_devices: int = 6, seed: int = 0) -> dict:
+    """Replay the overloaded serving gate from a serialized
+    :class:`~repro.core.scheduler.SchedulerConfig` artifact.
+
+    Loads the config (``sched_bench --config``), drives the
+    event-driven ``Scheduler`` over the standard overloaded n=18
+    trace, prints the serving outcome, and appends a
+    ``config_run`` section to the report JSON — so any gated run CI
+    archived (``SCHED_config.json``) reproduces bit-identically from
+    its artifact alone.
+    """
+    from repro.core.scheduler import SchedulerConfig, SchedulerEvent
+    from repro.workflowbench.suites import overloaded_serving_trace
+
+    config = SchedulerConfig.load(config_path)
+    trace = overloaded_serving_trace(n_workflows=n_workflows, rate=rate,
+                                     seed=seed, num_queries=8)
+    res, sched = _run_from_config(trace, homogeneous_cluster(n_devices),
+                                  config)
+    by_type: dict[str, int] = {}
+    for ev in sched.events:
+        by_type[type(ev).__name__] = by_type.get(type(ev).__name__, 0) + 1
+    row = {
+        "config": str(config_path),
+        "policy": config.policy,
+        "n_offered": res.n_offered,
+        "n_completed": len(res.stats),
+        "n_rejected": len(res.rejected),
+        "deferrals": res.deferrals,
+        "preemptions": res.preemptions,
+        "slo_attainment": res.slo_attainment,
+        "goodput_slo_wps": res.goodput_slo_wps,
+        "events": by_type,
+    }
+    report = {"benchmark": "sched_bench", "unix_time": time.time(),
+              "config_run": row, "pass": True}
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"config run [{config_path}]: policy={config.policy} "
+          f"completed={row['n_completed']}/{row['n_offered']} "
+          f"rejected={row['n_rejected']} "
+          f"attainment={row['slo_attainment']:.3f} "
+          f"slo-goodput={row['goodput_slo_wps']:.3f} wf/s")
+    print("config run events: " + "  ".join(
+        f"{k}={v}" for k, v in sorted(by_type.items())))
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -532,8 +610,23 @@ def main() -> None:
                          "round-trip, >=2x probe-error reduction vs "
                          "hand-set constants, fixed-profile parity); "
                          "writes CALIBRATION_profile.json")
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="run the overloaded serving trace from a "
+                         "serialized SchedulerConfig JSON (e.g. the "
+                         "SCHED_config.json artifact of a gated run) "
+                         "and report its serving metrics")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_sched.json"))
     args = ap.parse_args()
+
+    if args.config:
+        # a replay must not clobber the tracked full-gate trajectory:
+        # unless --out was given explicitly, write the stub report to
+        # its own file next to BENCH_sched.json
+        out = Path(args.out)
+        if args.out == ap.get_default("out"):
+            out = out.parent / "BENCH_config_run.json"
+        run_from_config_file(args.config, out)
+        return
 
     if args.quick:
         grid = [WIDE]
@@ -599,8 +692,12 @@ def main() -> None:
                   f"goodput={row['goodput_wps']:.2f} wf/s")
     if args.serve_slo:
         # fixed trace size: the preemption-engagement gate needs the
-        # n=18 burst (the n=12 prefix never gets SLO-tight enough)
-        slo = run_serve_slo()
+        # n=18 burst (the n=12 prefix never gets SLO-tight enough);
+        # the controlled leg's SchedulerConfig is archived next to the
+        # report so the gated run is reproducible via --config
+        config_path = Path(args.out).parent / "SCHED_config.json"
+        slo = run_serve_slo(config_out=config_path)
+        report["scheduler_config"] = str(config_path)
         report["serving_slo"] = slo
         for mode, row in slo["policies"].items():
             print(f"serve-slo: {mode:14s} "

@@ -1,164 +1,75 @@
-"""Commit-and-advance workflow executor (paper Algorithm 2).
+"""Back-compat executor adapters over the event-driven scheduler core.
 
-A discrete-event runtime over the proxy cost model (the paper's own
-evaluation substrate, Appendix C.1): policies commit Placements into a
-committed action pool; the executor issues dependency-ready actions as
-their devices free, updates the execution state (ρ, κ, ℓ, τ) on
-completion, and invokes the policy again when the pool has no feasible
-ready action.
-
-Per-query completion times are tracked through shard partitions so P95
-query latency is measurable (queries in different shards of the sink
-stage finish at different times).
-
-Two runtimes share the issue/completion machinery:
+The commit-and-advance runtime (paper Algorithm 2) lives in
+:mod:`repro.core.scheduler` — one event loop, one issue/completion
+machinery, one typed event stream.  This module keeps the historical
+entry points as thin adapters over it:
 
 * :class:`WorkflowExecutor` — the paper's single-workflow batch
-  setting: one DAG owns the cluster until it drains.
+  setting: one DAG owns the cluster until it drains (the scheduler
+  core's ``batch=True`` semantics: per-workflow ``plan()`` dispatch,
+  unconditional greedy fallback, persistent commit pool, one
+  completion per clock advance);
 * :class:`ServingExecutor` — the serving setting: workflows arrive
-  over time (e.g. from a Poisson trace), a :class:`SharedFrontier`
-  merges the ready sets of every in-flight DAG, and the policy replans
-  the merged frontier on every completion, so cross-workflow contention
-  for residency/prefix state is decided by one placement problem.
+  over time (e.g. from a Poisson trace), a
+  :class:`~repro.core.scheduler.SharedFrontier` merges the ready sets
+  of every in-flight DAG, and the policy replans the merged frontier
+  on every completion.
+
+Both adapters produce bit-identical placements to the pre-refactor
+monolithic loops (``tests/test_scheduler_api.py``).  The former
+residents of this module (:class:`Policy`, :class:`SharedFrontier`,
+:class:`StageRun`, :class:`RunResult`, :class:`WorkflowServeStats`,
+:class:`ServingResult`, ``nearest_rank_p95``, ``fresh_state``) are
+re-exported from their new homes so existing imports keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Optional, Protocol, Sequence
+from typing import Optional, Sequence
 
-from repro.core.admission import AdmissionController, SLOConfig
+from repro.core.admission import SLOConfig
 from repro.core.costs import CostModel, CostParams
-from repro.core.planner import Placement
+from repro.core.planner import Placement                        # noqa: F401
+from repro.core.policies.base import Policy                     # noqa: F401
+from repro.core.scheduler import (RunResult, Scheduler,         # noqa: F401
+                                  SchedulerConfig, ServingResult,
+                                  SharedFrontier, StageRun,
+                                  WorkflowServeStats,
+                                  _greedy_fallback, _issue_shards,
+                                  fresh_state, nearest_rank_p95)
 from repro.core.state import ExecutionState
-from repro.core.workflow import ModelProfile, Stage, StageKey, Workflow
+from repro.core.workflow import StageKey, Workflow
 
-
-class Policy(Protocol):
-    """Scheduling policy interface: map a ready frontier to placements.
-
-    Policies may additionally implement ``plan_shared(workflows,
-    state, ready)`` (merged multi-workflow planning) and
-    ``forget_workflow(wid)`` (cache release on retirement); the serving
-    runtime dispatches on their presence.
-    """
-
-    name: str
-
-    def plan(self, wf: Workflow, state: ExecutionState,
-             ready: list[str]) -> list[Placement]:
-        """Return committed placements for (a subset of) ``ready``."""
-        ...
-
-
-def nearest_rank_p95(xs: Sequence[float],
-                     default: float = float("nan")) -> float:
-    """Nearest-rank 95th percentile of ``xs`` (``default`` if empty).
-
-    The single percentile convention shared by batch results, serving
-    stats, and the benchmark metrics — keep them in sync by calling
-    this, not by re-deriving the index.
-    """
-    s = sorted(xs)
-    if not s:
-        return default
-    idx = max(0, min(len(s) - 1, int(round(0.95 * (len(s) - 1)))))
-    return s[idx]
-
-
-@dataclasses.dataclass
-class StageRun:
-    """One issued stage execution: its placement and timing record."""
-    placement: Placement
-    start: float
-    finish: float                       # max over shards
-    shard_finish: tuple[float, ...]
-    switched: tuple[bool, ...]
-
-
-@dataclasses.dataclass
-class RunResult:
-    """Outcome of one single-workflow batch run (paper Table 1 row)."""
-    wid: str
-    makespan: float
-    query_completion: list[float]       # per query
-    stage_runs: dict[str, StageRun]
-    # mechanism proxies (Appendix C.2), per workflow
-    cross_device_edges: int
-    prefix_hits_est: float
-    same_model_continuations: float
-    total_tasks: int
-    model_switches: int
-
-    @property
-    def p95(self) -> float:
-        """95th-percentile per-query completion time (nearest-rank)."""
-        return nearest_rank_p95(self.query_completion,
-                                default=self.makespan)
-
-
-def _greedy_fallback(state: ExecutionState, cm: CostModel, wf: Workflow,
-                     sid: str) -> Placement:
-    """Liveness fallback shared by both runtimes: place one ready stage
-    on the device minimizing state-corrected cost plus queueing."""
-    st = wf.stages[sid]
-    devs = list(st.eligible) if st.eligible else state.cluster.ids()
-    best = min(devs, key=lambda d: (
-        cm.effective_cost(wf, st, d, wf.num_queries)
-        + state.wait_time(d)))
-    return Placement(wf.wid, sid, (best,), (wf.num_queries,))
-
-
-def _issue_shards(state: ExecutionState, cm: CostModel, wf: Workflow,
-                  st: Stage, p: Placement
-                  ) -> tuple[list[float], list[bool]]:
-    """Start one placement's shards: per-device state-corrected duration
-    (base + switch + transfer − prefix − locality, plus coordination
-    overhead when sharded), applied to (ρ, κ, τ) through the dirty-set
-    mutators.  The single duration model shared by both runtimes."""
-    shard_fin: list[float] = []
-    switched: list[bool] = []
-    for d, nq in zip(p.devices, p.shard_sizes):
-        was_resident = state.is_resident(st.model, d)
-        t0 = max(state.now, state.device_free(d))
-        dur = cm.base_cost(st, d, nq)
-        dur += cm.switch_cost(st, d)
-        dur += cm.transfer_cost(wf, st, d, nq)
-        dur -= cm.prefix_benefit(st, d, nq)
-        dur -= cm.locality_benefit(wf, st, d, nq)
-        if len(p.devices) > 1:
-            dur += (cm.base_cost(st, d, wf.num_queries)
-                    * cm.p.shard_overhead)
-        dur = max(dur, 1e-6)
-        fin = t0 + dur
-        state.set_free_at(d, fin)
-        state.set_resident(d, st.model)
-        if st.keep_cache:
-            state.warm_prefix(d, st.prefix_group, st.model, nq, fin)
-        shard_fin.append(fin)
-        switched.append(not was_resident)
-    return shard_fin, switched
+__all__ = [
+    "Policy", "RunResult", "ServingExecutor", "ServingResult",
+    "SharedFrontier", "StageRun", "WorkflowExecutor",
+    "WorkflowServeStats", "fresh_state", "nearest_rank_p95",
+]
 
 
 class WorkflowExecutor:
     """Single-workflow batch runtime: one DAG owns the cluster.
 
-    Implements Algorithm 2's commit-and-advance loop over the proxy
-    cost model; see the module docstring for the issue/completion
-    machinery shared with :class:`ServingExecutor`.
+    A thin adapter: each :meth:`run` builds a batch-mode
+    :class:`~repro.core.scheduler.Scheduler` around this executor's
+    execution state, submits the workflow, drains it, and returns the
+    single-workflow :class:`RunResult` view.  The last scheduler (with
+    its event stream) is kept on :attr:`scheduler`.
     """
 
     def __init__(self, state: ExecutionState,
                  cost_params: Optional[CostParams] = None,
                  world_profiles: Optional[dict] = None):
         self.state = state
+        self.cost_params = cost_params
         # world_profiles: ground-truth per-model constants the emulated
         # hardware follows when they diverge from what the scheduler
         # believes (state.profiles) — the calibration benchmark's
         # mis-belief harness; None means world == belief
+        self.world_profiles = world_profiles
         self.cm = CostModel(state, cost_params, profiles=world_profiles)
+        self.scheduler: Optional[Scheduler] = None
 
-    # ------------------------------------------------------------------
     def run(self, wf: Workflow, policy: Policy) -> RunResult:
         """Execute ``wf`` to completion under ``policy``.
 
@@ -167,308 +78,31 @@ class WorkflowExecutor:
         per-device busy intervals never overlap.  Raises
         ``RuntimeError`` on a stalled policy (liveness guard).
         """
-        state = self.state
-        cm = self.cm
         wf.validate()
-        n_stages = len(wf.stages)
-        committed: list[Placement] = []
-        issued: set[str] = set()
-        completed: set[str] = set()
-        finish_heap: list[tuple[float, str]] = []
-        runs: dict[str, StageRun] = {}
-        query_done: dict[int, float] = {}
-        edge_cross = 0
-        prefix_hits = 0.0
-        same_model = 0.0
-        switches_before = state.model_switches
-
-        def ready_uncommitted() -> list[str]:
-            in_pool = {p.sid for p in committed}
-            return [sid for sid in wf.topo_order
-                    if sid not in completed and sid not in issued
-                    and sid not in in_pool
-                    and all(p in completed
-                            for p in wf.stages[sid].parents)]
-
-        def issuable(p: Placement) -> bool:
-            st = wf.stages[p.sid]
-            if any(par not in completed for par in st.parents):
-                return False
-            return all(state.device_free(d) <= state.now + 1e-12
-                       for d in p.devices)
-
-        def issue(p: Placement) -> None:
-            nonlocal edge_cross, prefix_hits, same_model
-            st = wf.stages[p.sid]
-            primary = p.devices[0]
-            # mechanism proxies (measured at issue, before state update)
-            for par in st.parents:
-                locs = state.output_loc.get((wf.wid, par), ())
-                if locs and primary not in locs:
-                    edge_cross += 1
-            ov = state.prefix_overlap(st, primary, wf.num_queries)
-            prefix_hits += ov
-            res_frac = sum(
-                1 for d in p.devices if state.is_resident(st.model, d)
-            ) / len(p.devices)
-            same_model += res_frac
-
-            shard_fin, switched = _issue_shards(state, cm, wf, st, p)
-            fin_all = max(shard_fin)
-            runs[p.sid] = StageRun(p, state.now, fin_all,
-                                   tuple(shard_fin), tuple(switched))
-            issued.add(p.sid)
-            heapq.heappush(finish_heap, (fin_all, p.sid))
-
-        # main loop -----------------------------------------------------
-        guard = 0
-        while len(completed) < n_stages:
-            guard += 1
-            if guard > 40 * n_stages + 1000:
-                raise RuntimeError(
-                    f"{wf.wid}: executor stalled ({policy.name})")
-            # 1. issue every committed action that can start now
-            progress = True
-            while progress:
-                progress = False
-                for p in list(committed):
-                    if p.sid in issued or p.sid in completed:
-                        committed.remove(p)
-                        continue
-                    if issuable(p):
-                        committed.remove(p)
-                        issue(p)
-                        progress = True
-            # 2. plan if the pool has no feasible ready action
-            ready = ready_uncommitted()
-            pool_feasible = any(
-                all(par in completed for par in wf.stages[p.sid].parents)
-                for p in committed)
-            if ready and not pool_feasible:
-                new = policy.plan(wf, state, ready)
-                if not new:
-                    # liveness fallback: greedily place the single best
-                    # ready stage by state-corrected cost
-                    new = [_greedy_fallback(state, cm, wf, ready[0])]
-                committed.extend(new)
-                continue
-            # 3. advance time to the next completion
-            if finish_heap:
-                t, sid = heapq.heappop(finish_heap)
-                state.now = max(state.now, t)
-                completed.add(sid)
-                state.completed.add((wf.wid, sid))
-                st = wf.stages[sid]
-                run = runs[sid]
-                state.output_loc[(wf.wid, sid)] = run.placement.devices
-                # per-query completion at sink stages
-                if not st.children:
-                    qid = 0
-                    for dfin, nq in zip(run.shard_finish,
-                                        run.placement.shard_sizes):
-                        for _ in range(nq):
-                            query_done[qid] = max(
-                                query_done.get(qid, 0.0), dfin)
-                            qid += 1
-            elif not committed and not ready_uncommitted():
-                raise RuntimeError(f"{wf.wid}: deadlock ({policy.name})")
-
-        makespan = max((r.finish for r in runs.values()), default=0.0)
-        qdone = [query_done.get(i, makespan)
-                 for i in range(wf.num_queries)]
-        return RunResult(
-            wid=wf.wid, makespan=makespan, query_completion=qdone,
-            stage_runs=runs, cross_device_edges=edge_cross,
-            prefix_hits_est=prefix_hits,
-            same_model_continuations=same_model,
-            total_tasks=n_stages,
-            model_switches=state.model_switches - switches_before)
-
-
-def fresh_state(cluster, profiles=None) -> ExecutionState:
-    """Empty execution state over ``cluster`` (cold devices, t=0),
-    with the paper's default model profiles unless overridden."""
-    from repro.core.workflow import DEFAULT_PROFILES
-    return ExecutionState(cluster=cluster,
-                          profiles=dict(profiles or DEFAULT_PROFILES))
-
-
-# ---------------------------------------------------------------------------
-# multi-workflow serving
-# ---------------------------------------------------------------------------
-
-
-class SharedFrontier:
-    """Merged ready frontier across in-flight workflow DAGs.
-
-    Tracks, per admitted workflow, which stages have completed and
-    exposes one ``(wid, sid)``-keyed ready list spanning every active
-    DAG — the planning unit of the serving setting.  Workflows are
-    iterated in admission order and stages in topological order, so the
-    merged list is deterministic; the planner (not this container)
-    decides how cross-workflow contention is resolved.  A workflow is
-    retired automatically once its last stage completes.
-    """
-
-    def __init__(self) -> None:
-        self.workflows: dict[str, Workflow] = {}
-        self.completed: dict[str, set[str]] = {}
-        self._order: list[str] = []
-
-    def admit(self, wf: Workflow) -> None:
-        """Add an in-flight workflow; its sources become ready."""
-        if wf.wid in self.workflows:
-            raise ValueError(f"duplicate workflow id {wf.wid}")
-        wf.validate()
-        self.workflows[wf.wid] = wf
-        self.completed[wf.wid] = set()
-        self._order.append(wf.wid)
-
-    def complete(self, wid: str, sid: str) -> bool:
-        """Record a stage completion; True if the workflow finished."""
-        done = self.completed[wid]
-        done.add(sid)
-        if len(done) == len(self.workflows[wid].stages):
-            self.retire(wid)
-            return True
-        return False
-
-    def retire(self, wid: str) -> None:
-        """Drop a workflow (finished or evicted) from the frontier."""
-        self.workflows.pop(wid, None)
-        self.completed.pop(wid, None)
-        self._order.remove(wid)
-
-    def ready(self, exclude: set[StageKey]) -> list[StageKey]:
-        """Merged dependency-ready, not-yet-claimed stage keys."""
-        out: list[StageKey] = []
-        for wid in self._order:
-            wf = self.workflows[wid]
-            done = self.completed[wid]
-            for sid in wf.topo_order:
-                if sid in done or (wid, sid) in exclude:
-                    continue
-                if all(p in done for p in wf.stages[sid].parents):
-                    out.append((wid, sid))
-        return out
-
-    def __len__(self) -> int:
-        return len(self.workflows)
-
-
-@dataclasses.dataclass
-class WorkflowServeStats:
-    """Per-workflow serving outcome (times are absolute sim seconds).
-
-    ``arrival`` is the ORIGINAL trace arrival even for workflows that
-    the control plane deferred, so latency (and SLO attainment)
-    includes time spent in the admission backlog.  ``deadline`` is set
-    only when the executor runs with an :class:`SLOConfig`.
-    """
-    wid: str
-    arrival: float
-    finish: float
-    query_completion: list[float]      # absolute per-query finish times
-    n_stages: int
-    deadline: Optional[float] = None   # absolute SLO deadline, if any
-
-    @property
-    def makespan(self) -> float:
-        """End-to-end latency: completion minus original arrival."""
-        return self.finish - self.arrival
-
-    @property
-    def latencies(self) -> list[float]:
-        """Per-query latencies relative to the original arrival."""
-        return [t - self.arrival for t in self.query_completion]
-
-    @property
-    def p95(self) -> float:
-        """95th-percentile per-query latency (nearest-rank)."""
-        return nearest_rank_p95(self.latencies, default=self.makespan)
-
-    @property
-    def slo_met(self) -> bool:
-        """True when the workflow finished within its deadline (always
-        True when no SLO was configured)."""
-        return self.deadline is None or self.finish <= self.deadline + 1e-9
-
-
-@dataclasses.dataclass
-class ServingResult:
-    """Outcome of one serving trace under one policy.
-
-    ``rejected`` lists workflows the admission controller shed (never
-    executed); ``deferrals``/``preemptions`` count control-plane
-    interventions.  All three stay empty/zero without an SLO config.
-    """
-    stats: dict[str, WorkflowServeStats]
-    horizon: float                     # first arrival -> last completion
-    max_in_flight: int
-    replans: int
-    model_switches: int
-    rejected: list[str] = dataclasses.field(default_factory=list)
-    deferrals: int = 0
-    preemptions: int = 0
-
-    @property
-    def n_offered(self) -> int:
-        """Workflows offered by the trace: completed + rejected."""
-        return len(self.stats) + len(self.rejected)
-
-    @property
-    def slo_attainment(self) -> float:
-        """Fraction of OFFERED workflows that completed within their
-        deadline (rejected arrivals count against attainment)."""
-        if self.n_offered == 0:
-            return float("nan")
-        met = sum(1 for s in self.stats.values() if s.slo_met)
-        return met / self.n_offered
-
-    @property
-    def goodput_wps(self) -> float:
-        """Completed workflows per second over the busy horizon."""
-        return len(self.stats) / self.horizon if self.horizon > 0 else 0.0
-
-    @property
-    def goodput_slo_wps(self) -> float:
-        """SLO-met workflows per second over the busy horizon — the
-        serving objective the control plane optimizes."""
-        if self.horizon <= 0:
-            return 0.0
-        met = sum(1 for s in self.stats.values() if s.slo_met)
-        return met / self.horizon
-
-    @property
-    def goodput_qps(self) -> float:
-        """Completed queries per second over the busy horizon."""
-        n_q = sum(len(s.query_completion) for s in self.stats.values())
-        return n_q / self.horizon if self.horizon > 0 else 0.0
+        sched = Scheduler(
+            config=SchedulerConfig(cost=self.cost_params),
+            state=self.state, policy=policy,
+            world_profiles=self.world_profiles, batch=True)
+        self.scheduler = sched
+        self.cm = sched.cm      # the model actually pricing this run
+        sched.submit(wf, at=self.state.now)
+        sched.drain()
+        return sched.batch_result(wf.wid)
 
 
 class ServingExecutor:
     """Event-driven multi-workflow runtime over the proxy cost model.
 
-    Admits workflows from an arrival trace, keeps a
-    :class:`SharedFrontier` of every in-flight DAG, and replans on
-    every completion event: unissued commitments are revoked and the
-    merged frontier is re-solved against the freshest execution state
-    (the serving analogue of Algorithm 2's replan trigger).  Policies
-    that implement ``plan_shared(workflows, state, ready)`` plan the
-    merged frontier in one problem; others fall back to per-workflow
-    ``plan`` calls over their slice of the frontier.
-
-    With an :class:`SLOConfig`, the SLO-aware control plane is active:
-    every arrival passes through an
-    :class:`~repro.core.admission.AdmissionController` future-state
-    probe and is admitted, deferred into a bounded backlog, or
-    rejected; the backlog is re-probed oldest-feasible-first on every
-    completion batch; and SLO-tight admissions preempt — revoke — the
-    committed-but-unissued placement pool so the urgent workflow
-    competes in a fresh merged solve immediately.  Revocation never
-    touches execution state (only ``issue()`` mutates it), so delta
-    rescoring stays bit-identical to full rebuilds across preemptions
-    (``tests/test_preemption.py``).
+    A thin adapter: each :meth:`run` builds a
+    :class:`~repro.core.scheduler.Scheduler` around this executor's
+    execution state, submits the whole arrival trace, and drains it.
+    With an :class:`SLOConfig`, the SLO-aware control plane
+    (admission / deferral / preemption, see
+    :mod:`repro.core.admission`) is active inside the core.  The
+    long-lived ``probe_corrector`` is shared across :meth:`run` calls
+    so learned per-family probe margins survive trace boundaries (a
+    calibration run warm-starts production traffic) while still
+    updating online on every completion.
     """
 
     def __init__(self, state: ExecutionState,
@@ -480,35 +114,17 @@ class ServingExecutor:
         self.state = state
         # world != belief harness; see WorkflowExecutor.__init__
         self.cm = CostModel(state, cost_params, profiles=world_profiles)
+        self.cost_params = cost_params
         self.replan_on_completion = replan_on_completion
         self.slo = slo
-        # long-lived ProbeCorrector shared across run() calls: each run
-        # builds a fresh AdmissionController around it, so the learned
-        # per-family probe margins survive trace boundaries (a
-        # calibration run warm-starts production traffic) while still
-        # updating online on every completion
+        self.world_profiles = world_profiles
         self.probe_corrector = probe_corrector
-        # the last run()'s controller, exposed for tests/introspection
-        self.admission: Optional[AdmissionController] = None
+        # the last run()'s controller/scheduler, for tests/introspection
+        self.admission = None
+        self.scheduler: Optional[Scheduler] = None
         # per-(wid, sid) StageRun records of the most recent run()
         self.last_runs: dict[StageKey, StageRun] = {}
 
-    # -- policy dispatch -------------------------------------------------
-    def _plan(self, policy, frontier: SharedFrontier,
-              ready: list[StageKey]) -> list[Placement]:
-        if hasattr(policy, "plan_shared"):
-            return policy.plan_shared(frontier.workflows, self.state,
-                                      ready)
-        out: list[Placement] = []
-        by_wid: dict[str, list[str]] = {}
-        for wid, sid in ready:
-            by_wid.setdefault(wid, []).append(sid)
-        for wid, sids in by_wid.items():
-            out.extend(policy.plan(frontier.workflows[wid], self.state,
-                                   sids))
-        return out
-
-    # -- main loop -------------------------------------------------------
     def run(self, trace: Sequence[tuple[float, Workflow]],
             policy) -> ServingResult:
         """Serve one arrival trace to completion under ``policy``.
@@ -518,235 +134,18 @@ class ServingExecutor:
         plus control-plane counters; per-stage :class:`StageRun`
         records of this run are left on :attr:`last_runs`.
         """
-        state = self.state
-        cm = self.cm
-        frontier = SharedFrontier()
-        adm = (AdmissionController(self.slo,
-                                   corrector=self.probe_corrector)
-               if self.slo is not None else None)
-        self.admission = adm
-        heap: list[tuple[float, int, str, object]] = []
-        seq = 0
-        n_total_stages = 0
+        sched = Scheduler(
+            config=SchedulerConfig(
+                cost=self.cost_params, slo=self.slo,
+                replan_on_completion=self.replan_on_completion),
+            state=self.state, policy=policy,
+            world_profiles=self.world_profiles,
+            probe_corrector=self.probe_corrector)
+        self.scheduler = sched
+        self.cm = sched.cm      # the model actually pricing this run
         for t, wf in trace:
-            heapq.heappush(heap, (t, seq, "arrive", wf))
-            seq += 1
-            n_total_stages += len(wf.stages)
-        committed: list[Placement] = []
-        issued: set[StageKey] = set()
-        runs: dict[StageKey, StageRun] = {}
-        wf_finish: dict[str, float] = {}     # running max stage finish
-        arrivals: dict[str, float] = {}
-        deadlines: dict[str, float] = {}
-        workflows_all: dict[str, Workflow] = {}
-        stats: dict[str, WorkflowServeStats] = {}
-        query_done: dict[str, dict[int, float]] = {}
-        first_arrival = trace[0][0] if trace else 0.0
-        last_finish = first_arrival
-        max_in_flight = 0
-        replans = 0
-        preemptions = 0
-        switches_before = state.model_switches
-
-        def issuable(p: Placement) -> bool:
-            done = frontier.completed.get(p.wid)
-            if done is None:
-                return False
-            st_ = frontier.workflows[p.wid].stages[p.sid]
-            if any(par not in done for par in st_.parents):
-                return False
-            return all(state.device_free(d) <= state.now + 1e-12
-                       for d in p.devices)
-
-        def issue(p: Placement) -> None:
-            wf = frontier.workflows[p.wid]
-            st = wf.stages[p.sid]
-            shard_fin, switched = _issue_shards(state, cm, wf, st, p)
-            fin_all = max(shard_fin)
-            key = (p.wid, p.sid)
-            runs[key] = StageRun(p, state.now, fin_all,
-                                 tuple(shard_fin), tuple(switched))
-            wf_finish[p.wid] = max(wf_finish.get(p.wid, 0.0), fin_all)
-            issued.add(key)
-            nonlocal seq
-            heapq.heappush(heap, (fin_all, seq, "finish", key))
-            seq += 1
-
-        def admit(wf: Workflow, arrival: float,
-                  deadline: Optional[float] = None) -> None:
-            nonlocal max_in_flight
-            frontier.admit(wf)
-            workflows_all[wf.wid] = wf
-            arrivals[wf.wid] = arrival
-            if deadline is not None:
-                deadlines[wf.wid] = deadline
-            max_in_flight = max(max_in_flight, len(frontier))
-
-        def claimed_keys() -> set[StageKey]:
-            return issued | {(p.wid, p.sid) for p in committed}
-
-        def preempt_commitments() -> None:
-            """Revoke committed-but-unissued placements for an
-            SLO-tight admission.  No execution state was mutated for
-            them (only ``issue()`` writes ρ/κ/τ), so the planner's
-            delta-rescoring caches need no repair — the revoked rows
-            simply reappear in the next merged solve, warm-started on
-            their previous devices via the solution hint."""
-            nonlocal preemptions
-            if committed:
-                committed.clear()
-                preemptions += 1
-
-        def finish(key: StageKey) -> None:
-            nonlocal last_finish
-            wid, sid = key
-            wf = frontier.workflows[wid]
-            st = wf.stages[sid]
-            run = runs[key]
-            state.output_loc[(wid, sid)] = run.placement.devices
-            state.completed.add((wid, sid))
-            if not st.children:          # sink: per-query completion
-                qd = query_done.setdefault(wid, {})
-                qid = 0
-                for dfin, nq in zip(run.shard_finish,
-                                    run.placement.shard_sizes):
-                    for _ in range(nq):
-                        qd[qid] = max(qd.get(qid, 0.0), dfin)
-                        qid += 1
-            issued.discard(key)
-            if frontier.complete(wid, sid):
-                wf_all = workflows_all[wid]
-                qd = query_done.get(wid, {})
-                fin_t = wf_finish.get(wid, state.now)
-                qdone = [qd.get(i, fin_t)
-                         for i in range(wf_all.num_queries)]
-                stats[wid] = WorkflowServeStats(
-                    wid=wid, arrival=arrivals[wid], finish=fin_t,
-                    query_completion=qdone, n_stages=len(wf_all.stages),
-                    deadline=deadlines.get(wid))
-                last_finish = max(last_finish, fin_t)
-                if hasattr(policy, "forget_workflow"):
-                    policy.forget_workflow(wid)
-                if adm is not None:
-                    # close the probe loop (predicted vs observed
-                    # latency -> EWMA margin corrector) before the
-                    # controller drops its per-workflow records
-                    adm.record_completion(wid, fin_t)
-                    adm.forget(wid)
-
-        def issue_all() -> None:
-            progress = True
-            while progress:
-                progress = False
-                for p in list(committed):
-                    key = (p.wid, p.sid)
-                    if key in issued or p.wid not in frontier.workflows \
-                            or p.sid in frontier.completed[p.wid]:
-                        committed.remove(p)
-                        continue
-                    if issuable(p):
-                        committed.remove(p)
-                        issue(p)
-                        progress = True
-
-        guard = 0
-        guard_limit = 60 * max(n_total_stages, 1) + 1000
-        while True:
-            guard += 1
-            if guard > guard_limit:
-                raise RuntimeError(
-                    f"serving executor stalled ({policy.name})")
-            # 1. issue everything issuable at the current time
-            issue_all()
-            # 2. plan when claimed actions cannot cover the frontier
-            claimed = issued | {(p.wid, p.sid) for p in committed}
-            ready = frontier.ready(claimed)
-            pool_feasible = any(
-                all(par in frontier.completed[p.wid]
-                    for par in frontier.workflows[p.wid]
-                    .stages[p.sid].parents)
-                for p in committed if p.wid in frontier.workflows)
-            if ready and not pool_feasible:
-                new = self._plan(policy, frontier, ready)
-                replans += 1
-                if not new and not issued:
-                    # liveness fallback: greedily place the single best
-                    # ready stage by state-corrected cost
-                    wid, sid = ready[0]
-                    new = [_greedy_fallback(
-                        state, cm, frontier.workflows[wid], sid)]
-                if new:
-                    committed.extend(new)
-                    issue_all()        # start the fresh plan NOW, before
-                    continue           # the clock advances to next event
-            # 3. advance the clock to the next event batch
-            if not heap:
-                if adm is not None and adm.backlog:
-                    # no further events will trigger re-admission:
-                    # drain the backlog (shed expired entries, force
-                    # the oldest reachable one in) and keep planning
-                    for arr, wfp, dec in adm.readmit(
-                            state, frontier, policy, claimed_keys(),
-                            force=True):
-                        admit(wfp, arr, dec.deadline)
-                        if dec.preempt:
-                            preempt_commitments()
-                    continue
-                if committed or len(frontier):
-                    raise RuntimeError(
-                        f"serving executor deadlock ({policy.name})")
-                break
-            t = heap[0][0]
-            state.now = max(state.now, t)
-            completed_any = False
-            while heap and heap[0][0] <= t + 1e-12:
-                _, _, kind, payload = heapq.heappop(heap)
-                if kind == "arrive":
-                    wf = payload
-                    if wf.wid in workflows_all:
-                        # stats/arrivals are keyed by wid for the whole
-                        # trace, so a reused wid (even after the first
-                        # instance retired) would silently clobber them
-                        raise ValueError(
-                            f"duplicate workflow id in trace: {wf.wid}")
-                    if adm is None:
-                        admit(wf, state.now)
-                        continue
-                    dec = adm.on_arrival(wf, state, frontier, policy,
-                                         claimed_keys())
-                    if dec.action == "admit":
-                        admit(wf, state.now, dec.deadline)
-                        if dec.preempt:
-                            # SLO-tight arrival: revoke unissued
-                            # commitments so it competes immediately
-                            preempt_commitments()
-                    # defer/reject: bookkept inside the controller
-                else:
-                    finish(payload)
-                    completed_any = True
-            if completed_any and adm is not None:
-                # re-admission sweep: freed capacity may now fit the
-                # oldest deferred arrivals (one per sweep so each
-                # admission's frontier update feeds the next probe)
-                while True:
-                    batch = adm.readmit(state, frontier, policy,
-                                        claimed_keys())
-                    if not batch:
-                        break
-                    for arr, wfp, dec in batch:
-                        admit(wfp, arr, dec.deadline)
-                        if dec.preempt:
-                            preempt_commitments()
-            if completed_any and self.replan_on_completion and committed:
-                # revoke unissued commitments: the completed stage
-                # changed ρ/κ/ℓ/τ, so the merged frontier is re-solved
-                committed.clear()
-        horizon = max(last_finish - first_arrival, 0.0)
-        self.last_runs = runs
-        return ServingResult(
-            stats=stats, horizon=horizon, max_in_flight=max_in_flight,
-            replans=replans,
-            model_switches=state.model_switches - switches_before,
-            rejected=list(adm.rejected) if adm is not None else [],
-            deferrals=adm.n_deferrals if adm is not None else 0,
-            preemptions=preemptions)
+            sched.submit(wf, at=t)
+        res = sched.drain()
+        self.admission = sched.admission
+        self.last_runs = sched.runs
+        return res

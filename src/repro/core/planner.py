@@ -87,8 +87,13 @@ class FrontierPlanner:
     def __init__(self, params: Optional[ScoreParams] = None,
                  time_limit: float = 5.0, use_matrix: bool = True,
                  use_delta: bool = True, warm_start: bool = True,
-                 cost_params: Optional[CostParams] = None):
+                 cost_params: Optional[CostParams] = None,
+                 max_waves: Optional[int] = None):
         self.params = params or ScoreParams()
+        # default wave cap of plan_shared (None = plan until the merged
+        # frontier is exhausted); per-call max_waves overrides it — the
+        # admission probe always passes 1 regardless of this default
+        self.max_waves = max_waves
         # cost-model calibration of every CostModel this planner builds
         # (both score paths and the commit-and-advance estimator) —
         # None keeps the hand-set defaults; a CalibrationProfile's
@@ -207,9 +212,12 @@ class FrontierPlanner:
         ``max_waves`` bounds the number of solver waves — the
         admission controller's future-state probe runs a single wave
         (``max_waves=1``) to predict an arrival's marginal impact
-        without paying for a full plan.  ``None`` (default) plans until
-        the frontier is exhausted.
+        without paying for a full plan.  ``None`` (default) falls back
+        to the planner-level ``max_waves`` (itself ``None`` = plan
+        until the frontier is exhausted).
         """
+        if max_waves is None:
+            max_waves = self.max_waves
         if not ready:
             return []
         sim = state.overlay()

@@ -18,6 +18,7 @@ from typing import Optional
 
 from repro.core.costs import CostModel
 from repro.core.planner import Placement
+from repro.core.policies.base import BasePolicy, register_policy
 from repro.core.state import ExecutionState
 from repro.core.workflow import Stage, Workflow
 
@@ -27,7 +28,10 @@ from repro.core.workflow import Stage, Workflow
 # ---------------------------------------------------------------------------
 
 
-class RoundRobinPolicy:
+@register_policy("RoundRobin")
+class RoundRobinPolicy(BasePolicy):
+    """State-blind round-robin placement over eligible devices."""
+
     name = "RoundRobin"
 
     def __init__(self) -> None:
@@ -35,6 +39,7 @@ class RoundRobinPolicy:
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
+        """Place each ready stage on the next eligible device."""
         out = []
         devices = state.cluster.ids()
         for sid in ready:
@@ -51,7 +56,11 @@ class RoundRobinPolicy:
 # ---------------------------------------------------------------------------
 
 
-class HEFTPolicy:
+@register_policy("HEFT")
+class HEFTPolicy(BasePolicy):
+    """Upward-rank list scheduling with residency/transfer-aware
+    earliest-finish placement (classic HEFT in the common runtime)."""
+
     name = "HEFT"
 
     def __init__(self) -> None:
@@ -82,6 +91,7 @@ class HEFTPolicy:
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
+        """Place ready stages in decreasing upward rank at EFT."""
         cm = CostModel(state)
         rank = self._upward_ranks(wf, state)
         q = wf.num_queries
@@ -112,11 +122,16 @@ class HEFTPolicy:
 # ---------------------------------------------------------------------------
 
 
-class HelixPolicy:
+@register_policy("Helix")
+class HelixPolicy(BasePolicy):
+    """Heterogeneity-aware earliest-finish placement, heaviest
+    stages first (Helix-style baseline)."""
+
     name = "Helix"
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
+        """Place ready stages heaviest-first at earliest finish."""
         cm = CostModel(state)
         q = wf.num_queries
         out = []
@@ -149,11 +164,16 @@ class HelixPolicy:
 # ---------------------------------------------------------------------------
 
 
-class KVFlowPolicy:
+@register_policy("KVFlow")
+class KVFlowPolicy(BasePolicy):
+    """Future-reuse-aware cache priority + greedy device scoring
+    (KVFlow-style baseline)."""
+
     name = "KVFlow"
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
+        """Place ready stages by cache-reuse priority and score."""
         cm = CostModel(state)
         q = wf.num_queries
         out = []
@@ -216,7 +236,8 @@ class _BeamState:
     cost: float
 
 
-class HaloPolicy:
+@register_policy("Halo")
+class HaloPolicy(BasePolicy):
     """Beam search over stage→device assignments in topological order.
 
     Residency is "coarse": a single average switch penalty, applied when
@@ -274,6 +295,7 @@ class HaloPolicy:
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
+        """Place ready stages per the cached beam-search plan."""
         plan = self._search(wf, state)
         return [Placement(wf.wid, sid, (plan[sid],), (wf.num_queries,))
                 for sid in ready]

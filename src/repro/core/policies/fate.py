@@ -2,28 +2,55 @@
 horizon-aware state-conditional scoring (the paper's method)."""
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
 
 from repro.core.costs import CostParams
 from repro.core.planner import FrontierPlanner, Placement
+from repro.core.policies.base import BasePolicy, register_policy
 from repro.core.scoring import ScoreParams
 from repro.core.state import ExecutionState
 from repro.core.workflow import StageKey, Workflow
 
+if TYPE_CHECKING:                                   # pragma: no cover
+    from repro.core.scheduler import SchedulerConfig
 
-class FATEPolicy:
+
+@register_policy("FATE")
+class FATEPolicy(BasePolicy):
+    """The paper's future-state-aware policy: a thin lifecycle shell
+    around :class:`~repro.core.planner.FrontierPlanner` (scoring
+    engine + exact frontier solver)."""
+
     name = "FATE"
 
     def __init__(self, params: Optional[ScoreParams] = None,
                  time_limit: float = 5.0, use_matrix: bool = True,
                  use_delta: bool = True, warm_start: bool = True,
-                 cost_params: Optional[CostParams] = None):
+                 cost_params: Optional[CostParams] = None,
+                 max_waves: Optional[int] = None):
         self.planner = FrontierPlanner(params, time_limit,
                                        use_matrix=use_matrix,
                                        use_delta=use_delta,
                                        warm_start=warm_start,
-                                       cost_params=cost_params)
+                                       cost_params=cost_params,
+                                       max_waves=max_waves)
         self.params = self.planner.params
+
+    @classmethod
+    def from_config(cls, config: "SchedulerConfig",
+                    cost_params: Optional[CostParams] = None
+                    ) -> "FATEPolicy":
+        """Thread the typed ``SchedulerConfig`` knobs (score params,
+        planner switches, calibration-lowered cost params) into the
+        planner; ``policy_kwargs`` entries override config fields so
+        the deprecated kwarg path keeps its old meaning."""
+        kwargs = dict(
+            params=config.score, time_limit=config.time_limit,
+            use_matrix=config.use_matrix, use_delta=config.use_delta,
+            warm_start=config.warm_start, max_waves=config.max_waves,
+            cost_params=cost_params)
+        kwargs.update(config.policy_kwargs)
+        return cls(**kwargs)
 
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
@@ -42,8 +69,10 @@ class FATEPolicy:
 
     @property
     def phase_ms(self):
+        """Planner per-phase wall-time accumulators (benchmarks)."""
         return self.planner.phase_ms
 
     @property
     def solve_log(self):
+        """Per-solve :class:`~repro.core.planner.SolveRecord` list."""
         return self.planner.solve_log

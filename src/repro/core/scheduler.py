@@ -1,0 +1,1152 @@
+"""Unified event-driven scheduler core: typed config, explicit
+lifecycle, and a first-class event stream.
+
+This module is the single runtime behind both execution settings:
+
+* :class:`Scheduler` — the event core.  Workflows are ``submit()``-ed
+  (immediately or at a future arrival time), the clock advances one
+  event batch per ``step()`` (or ``run_until(t)`` / ``drain()``), and
+  every control-plane and data-plane transition is emitted as a typed,
+  replayable event (:class:`ArrivalEvent` → :class:`AdmittedEvent` /
+  :class:`DeferredEvent` / :class:`RejectedEvent`,
+  :class:`PlacementEvent` → :class:`IssueEvent` →
+  :class:`CompletionEvent`, plus :class:`PreemptionEvent`) consumable
+  via iteration (:meth:`Scheduler.stream`) or
+  :meth:`Scheduler.on` subscriptions.
+* :class:`SchedulerConfig` — one frozen, JSON-round-trippable object
+  collapsing every knob that used to be threaded per-call through the
+  executors and ``workflowbench.runner`` (score params, SLO config,
+  cost params, an embedded calibration profile, planner switches).
+  ``SchedulerConfig.from_json(cfg.to_json()) == cfg``, so any run is
+  reproducible from a single artifact (CI archives the config used
+  for the gated benchmark runs).
+
+The commit-and-advance mechanics (paper Algorithm 2) are unchanged:
+policies commit :class:`~repro.core.planner.Placement`s into a pool,
+the core issues dependency-ready actions as devices free, updates
+(ρ, κ, ℓ, τ) on completion, and replans when the pool cannot cover
+the ready frontier.  :class:`~repro.core.executor.WorkflowExecutor`
+and :class:`~repro.core.executor.ServingExecutor` are now thin
+adapters over this loop; the ``batch`` flag reproduces the
+single-workflow batch runtime's exact semantics (per-workflow
+``plan()`` dispatch, unconditional greedy fallback, persistent commit
+pool, one completion per clock advance) so placements stay
+bit-identical to the historical executors in both settings.
+
+Per-query completion times are tracked through shard partitions so
+P95 query latency is measurable (queries in different shards of the
+sink stage finish at different times).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+from pathlib import Path
+from typing import Callable, Iterator, Mapping, Optional, Sequence
+
+from repro.core.admission import AdmissionController, SLOConfig
+from repro.core.calibration import CalibrationProfile
+from repro.core.costs import CostModel, CostParams
+from repro.core.planner import Placement
+from repro.core.scoring import ScoreParams
+from repro.core.state import ExecutionState
+from repro.core.workflow import Stage, StageKey, Workflow
+
+#: Schema version of :meth:`SchedulerConfig.to_json` documents.
+CONFIG_VERSION = 1
+
+
+def nearest_rank_p95(xs: Sequence[float],
+                     default: float = float("nan")) -> float:
+    """Nearest-rank 95th percentile of ``xs`` (``default`` if empty).
+
+    The single percentile convention shared by batch results, serving
+    stats, and the benchmark metrics — keep them in sync by calling
+    this, not by re-deriving the index.
+    """
+    s = sorted(xs)
+    if not s:
+        return default
+    idx = max(0, min(len(s) - 1, int(round(0.95 * (len(s) - 1)))))
+    return s[idx]
+
+
+def fresh_state(cluster, profiles=None) -> ExecutionState:
+    """Empty execution state over ``cluster`` (cold devices, t=0),
+    with the paper's default model profiles unless overridden."""
+    from repro.core.workflow import DEFAULT_PROFILES
+    return ExecutionState(cluster=cluster,
+                          profiles=dict(profiles or DEFAULT_PROFILES))
+
+
+# ---------------------------------------------------------------------------
+# typed configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Complete, serializable configuration of one scheduler run.
+
+    Collapses the knobs that used to be scattered across
+    ``make_policy(**policy_kwargs)``, the two executor constructors,
+    and the ``run_one``/``run_suite``/``run_serving`` signatures into
+    one frozen object:
+
+    * ``policy`` — registered policy name
+      (:data:`repro.core.policies.POLICY_REGISTRY`);
+    * ``policy_kwargs`` — extra constructor overrides for the policy
+      (kept for back-compat and for policy-specific knobs like Halo's
+      ``beam_width``; entries override the typed fields below);
+    * ``score`` — :class:`~repro.core.scoring.ScoreParams` (λ weights,
+      horizon, margin);
+    * ``cost`` — :class:`~repro.core.costs.CostParams` global scales
+      (``None`` = hand-set defaults);
+    * ``slo`` — :class:`~repro.core.admission.SLOConfig`; ``None``
+      disables the admission/deferral/preemption control plane;
+    * ``calibration`` — an embedded
+      :class:`~repro.core.calibration.CalibrationProfile`; when set,
+      the execution state's model profiles AND the effective cost
+      params are lowered from it (single source of truth), exactly as
+      the runner's ``calibration=`` argument did;
+    * ``time_limit`` / ``use_matrix`` / ``use_delta`` / ``warm_start``
+      / ``max_waves`` — planner switches (see
+      :class:`~repro.core.planner.FrontierPlanner`);
+    * ``replan_on_completion`` — revoke unissued commitments on every
+      completion batch (the serving replan trigger).
+
+    ``to_json``/``from_json`` round-trip the whole object — including
+    the embedded calibration profile — so a benchmark gate can be
+    reproduced from a single JSON artifact
+    (``benchmarks/sched_bench.py --config``).
+    """
+
+    policy: str = "FATE"
+    policy_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    score: ScoreParams = ScoreParams()
+    cost: Optional[CostParams] = None
+    slo: Optional[SLOConfig] = None
+    calibration: Optional[CalibrationProfile] = None
+    time_limit: float = 5.0
+    use_matrix: bool = True
+    use_delta: bool = True
+    warm_start: bool = True
+    max_waves: Optional[int] = None
+    replan_on_completion: bool = True
+
+    # -- lowering --------------------------------------------------------
+    def effective_cost_params(self) -> Optional[CostParams]:
+        """The :class:`CostParams` every consumer should price with:
+        ``cost`` with the calibration profile's fitted scales applied
+        over it when a profile is embedded, else ``cost`` verbatim."""
+        if self.calibration is None:
+            return self.cost
+        return self.calibration.cost_params(self.cost)
+
+    def model_profiles(self) -> Optional[dict]:
+        """Per-model profile dict for ``fresh_state`` (``None`` keeps
+        the hand-set defaults) — the calibration profile's fitted
+        constants when one is embedded."""
+        if self.calibration is None:
+            return None
+        return self.calibration.model_profiles()
+
+    def build_policy(self):
+        """Instantiate the configured policy from the registry.
+
+        Dispatches through the policy class's ``from_config`` hook
+        (see :class:`~repro.core.policies.BasePolicy`), passing the
+        calibration-lowered cost params; unknown names raise the
+        registry's listing ``KeyError``.
+        """
+        from repro.core.policies import POLICY_REGISTRY, make_policy
+        if self.policy not in POLICY_REGISTRY:
+            make_policy(self.policy)        # raises the listing KeyError
+        cls = POLICY_REGISTRY[self.policy]
+        if hasattr(cls, "from_config"):
+            return cls.from_config(self,
+                                   cost_params=self.effective_cost_params())
+        return cls(**dict(self.policy_kwargs))
+
+    # -- serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        """Serialize to a versioned JSON document (exact inverse of
+        :meth:`from_json`, including the embedded calibration
+        profile)."""
+        doc = {
+            "config_version": CONFIG_VERSION,
+            "policy": self.policy,
+            "policy_kwargs": dict(self.policy_kwargs),
+            "score": dataclasses.asdict(self.score),
+            "cost": (dataclasses.asdict(self.cost)
+                     if self.cost is not None else None),
+            "slo": (dataclasses.asdict(self.slo)
+                    if self.slo is not None else None),
+            "calibration": (json.loads(self.calibration.to_json())
+                            if self.calibration is not None else None),
+            "time_limit": self.time_limit,
+            "use_matrix": self.use_matrix,
+            "use_delta": self.use_delta,
+            "warm_start": self.warm_start,
+            "max_waves": self.max_waves,
+            "replan_on_completion": self.replan_on_completion,
+        }
+        return json.dumps(doc, indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "SchedulerConfig":
+        """Rebuild a config from :meth:`to_json` output; rejects
+        unknown schema versions."""
+        doc = json.loads(text)
+        version = int(doc.get("config_version", -1))
+        if version != CONFIG_VERSION:
+            raise ValueError(
+                f"unsupported SchedulerConfig version {version} "
+                f"(expected {CONFIG_VERSION})")
+        cal = doc.get("calibration")
+        return cls(
+            policy=doc.get("policy", "FATE"),
+            policy_kwargs=dict(doc.get("policy_kwargs") or {}),
+            score=ScoreParams(**(doc.get("score") or {})),
+            cost=(CostParams(**doc["cost"])
+                  if doc.get("cost") is not None else None),
+            slo=(SLOConfig(**doc["slo"])
+                 if doc.get("slo") is not None else None),
+            calibration=(CalibrationProfile.from_json(json.dumps(cal))
+                         if cal is not None else None),
+            time_limit=float(doc.get("time_limit", 5.0)),
+            use_matrix=bool(doc.get("use_matrix", True)),
+            use_delta=bool(doc.get("use_delta", True)),
+            warm_start=bool(doc.get("warm_start", True)),
+            max_waves=doc.get("max_waves"),
+            replan_on_completion=bool(
+                doc.get("replan_on_completion", True)),
+        )
+
+    def save(self, path) -> Path:
+        """Write :meth:`to_json` to ``path``; returns the path."""
+        path = Path(path)
+        path.write_text(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path) -> "SchedulerConfig":
+        """Read a config previously written by :meth:`save`."""
+        return cls.from_json(Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# event taxonomy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerEvent:
+    """Base of every record on the scheduler's replayable event
+    stream; ``t`` is the simulation time the event occurred at."""
+    t: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalEvent(SchedulerEvent):
+    """A submitted workflow's arrival time was reached (emitted
+    before any admission decision)."""
+    wid: str
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmittedEvent(SchedulerEvent):
+    """A workflow entered the shared frontier.  ``arrival`` is the
+    ORIGINAL submission arrival (earlier than ``t`` for workflows that
+    waited in the admission backlog); ``deadline`` is absolute sim
+    time or ``None`` without an SLO."""
+    wid: str
+    arrival: float
+    deadline: Optional[float] = None
+    klass: str = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeferredEvent(SchedulerEvent):
+    """The admission probe predicted an SLO miss: the arrival was
+    parked in the bounded backlog for later re-admission."""
+    wid: str
+    predicted_latency: float
+    deadline: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RejectedEvent(SchedulerEvent):
+    """The workflow was shed and will never execute (``reason`` is
+    ``"admission"`` for arrival-time rejections, ``"expired"`` for
+    backlog entries whose deadline became unreachable)."""
+    wid: str
+    reason: str = "admission"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementEvent(SchedulerEvent):
+    """The policy committed a placement into the action pool (not yet
+    running — a later replan or preemption may still revoke it)."""
+    wid: str
+    sid: str
+    devices: tuple
+    shard_sizes: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class IssueEvent(SchedulerEvent):
+    """A committed placement started executing: device state (ρ, κ, τ)
+    was mutated and the stage now finishes at ``finish``."""
+    wid: str
+    sid: str
+    devices: tuple
+    start: float
+    finish: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionEvent(SchedulerEvent):
+    """An SLO-tight admission revoked the committed-but-unissued pool
+    (``n_revoked`` placements return to the next merged solve)."""
+    trigger_wid: str
+    n_revoked: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletionEvent(SchedulerEvent):
+    """A stage finished; ``workflow_done`` marks its workflow's last
+    stage (the workflow retired from the frontier)."""
+    wid: str
+    sid: str
+    workflow_done: bool = False
+
+
+#: Every concrete event type, in lifecycle order (docs/tests anchor).
+EVENT_TYPES = (ArrivalEvent, AdmittedEvent, DeferredEvent,
+               RejectedEvent, PlacementEvent, IssueEvent,
+               PreemptionEvent, CompletionEvent)
+
+
+# ---------------------------------------------------------------------------
+# shared issue/completion machinery
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StageRun:
+    """One issued stage execution: its placement and timing record."""
+    placement: Placement
+    start: float
+    finish: float                       # max over shards
+    shard_finish: tuple[float, ...]
+    switched: tuple[bool, ...]
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Outcome of one single-workflow batch run (paper Table 1 row)."""
+    wid: str
+    makespan: float
+    query_completion: list[float]       # per query
+    stage_runs: dict[str, StageRun]
+    # mechanism proxies (Appendix C.2), per workflow
+    cross_device_edges: int
+    prefix_hits_est: float
+    same_model_continuations: float
+    total_tasks: int
+    model_switches: int
+
+    @property
+    def p95(self) -> float:
+        """95th-percentile per-query completion time (nearest-rank)."""
+        return nearest_rank_p95(self.query_completion,
+                                default=self.makespan)
+
+
+def _greedy_fallback(state: ExecutionState, cm: CostModel, wf: Workflow,
+                     sid: str) -> Placement:
+    """Liveness fallback shared by both runtimes: place one ready stage
+    on the device minimizing state-corrected cost plus queueing."""
+    st = wf.stages[sid]
+    devs = list(st.eligible) if st.eligible else state.cluster.ids()
+    best = min(devs, key=lambda d: (
+        cm.effective_cost(wf, st, d, wf.num_queries)
+        + state.wait_time(d)))
+    return Placement(wf.wid, sid, (best,), (wf.num_queries,))
+
+
+def _issue_shards(state: ExecutionState, cm: CostModel, wf: Workflow,
+                  st: Stage, p: Placement
+                  ) -> tuple[list[float], list[bool]]:
+    """Start one placement's shards: per-device state-corrected duration
+    (base + switch + transfer − prefix − locality, plus coordination
+    overhead when sharded), applied to (ρ, κ, τ) through the dirty-set
+    mutators.  The single duration model shared by both runtimes."""
+    shard_fin: list[float] = []
+    switched: list[bool] = []
+    for d, nq in zip(p.devices, p.shard_sizes):
+        was_resident = state.is_resident(st.model, d)
+        t0 = max(state.now, state.device_free(d))
+        dur = cm.base_cost(st, d, nq)
+        dur += cm.switch_cost(st, d)
+        dur += cm.transfer_cost(wf, st, d, nq)
+        dur -= cm.prefix_benefit(st, d, nq)
+        dur -= cm.locality_benefit(wf, st, d, nq)
+        if len(p.devices) > 1:
+            dur += (cm.base_cost(st, d, wf.num_queries)
+                    * cm.p.shard_overhead)
+        dur = max(dur, 1e-6)
+        fin = t0 + dur
+        state.set_free_at(d, fin)
+        state.set_resident(d, st.model)
+        if st.keep_cache:
+            state.warm_prefix(d, st.prefix_group, st.model, nq, fin)
+        shard_fin.append(fin)
+        switched.append(not was_resident)
+    return shard_fin, switched
+
+
+# ---------------------------------------------------------------------------
+# multi-workflow frontier + serving stats
+# ---------------------------------------------------------------------------
+
+
+class SharedFrontier:
+    """Merged ready frontier across in-flight workflow DAGs.
+
+    Tracks, per admitted workflow, which stages have completed and
+    exposes one ``(wid, sid)``-keyed ready list spanning every active
+    DAG — the planning unit of the serving setting.  Workflows are
+    iterated in admission order and stages in topological order, so the
+    merged list is deterministic; the planner (not this container)
+    decides how cross-workflow contention is resolved.  A workflow is
+    retired automatically once its last stage completes.
+    """
+
+    def __init__(self) -> None:
+        self.workflows: dict[str, Workflow] = {}
+        self.completed: dict[str, set[str]] = {}
+        self._order: list[str] = []
+
+    def admit(self, wf: Workflow) -> None:
+        """Add an in-flight workflow; its sources become ready."""
+        if wf.wid in self.workflows:
+            raise ValueError(f"duplicate workflow id {wf.wid}")
+        wf.validate()
+        self.workflows[wf.wid] = wf
+        self.completed[wf.wid] = set()
+        self._order.append(wf.wid)
+
+    def complete(self, wid: str, sid: str) -> bool:
+        """Record a stage completion; True if the workflow finished."""
+        done = self.completed[wid]
+        done.add(sid)
+        if len(done) == len(self.workflows[wid].stages):
+            self.retire(wid)
+            return True
+        return False
+
+    def retire(self, wid: str) -> None:
+        """Drop a workflow (finished or evicted) from the frontier."""
+        self.workflows.pop(wid, None)
+        self.completed.pop(wid, None)
+        self._order.remove(wid)
+
+    def ready(self, exclude: set[StageKey]) -> list[StageKey]:
+        """Merged dependency-ready, not-yet-claimed stage keys."""
+        out: list[StageKey] = []
+        for wid in self._order:
+            wf = self.workflows[wid]
+            done = self.completed[wid]
+            for sid in wf.topo_order:
+                if sid in done or (wid, sid) in exclude:
+                    continue
+                if all(p in done for p in wf.stages[sid].parents):
+                    out.append((wid, sid))
+        return out
+
+    def __len__(self) -> int:
+        return len(self.workflows)
+
+
+@dataclasses.dataclass
+class WorkflowServeStats:
+    """Per-workflow serving outcome (times are absolute sim seconds).
+
+    ``arrival`` is the ORIGINAL trace arrival even for workflows that
+    the control plane deferred, so latency (and SLO attainment)
+    includes time spent in the admission backlog.  ``deadline`` is set
+    only when the scheduler runs with an :class:`SLOConfig` (or the
+    workflow was submitted with an explicit deadline); ``klass`` is
+    the admission class named at submission.
+    """
+    wid: str
+    arrival: float
+    finish: float
+    query_completion: list[float]      # absolute per-query finish times
+    n_stages: int
+    deadline: Optional[float] = None   # absolute SLO deadline, if any
+    klass: str = "default"
+
+    @property
+    def makespan(self) -> float:
+        """End-to-end latency: completion minus original arrival."""
+        return self.finish - self.arrival
+
+    @property
+    def latencies(self) -> list[float]:
+        """Per-query latencies relative to the original arrival."""
+        return [t - self.arrival for t in self.query_completion]
+
+    @property
+    def p95(self) -> float:
+        """95th-percentile per-query latency (nearest-rank)."""
+        return nearest_rank_p95(self.latencies, default=self.makespan)
+
+    @property
+    def slo_met(self) -> bool:
+        """True when the workflow finished within its deadline (always
+        True when no SLO was configured)."""
+        return self.deadline is None or self.finish <= self.deadline + 1e-9
+
+
+@dataclasses.dataclass
+class ServingResult:
+    """Outcome of one serving trace under one policy.
+
+    ``rejected`` lists workflows the admission controller shed (never
+    executed); ``deferrals``/``preemptions`` count control-plane
+    interventions.  All three stay empty/zero without an SLO config.
+    """
+    stats: dict[str, WorkflowServeStats]
+    horizon: float                     # first arrival -> last completion
+    max_in_flight: int
+    replans: int
+    model_switches: int
+    rejected: list[str] = dataclasses.field(default_factory=list)
+    deferrals: int = 0
+    preemptions: int = 0
+
+    @property
+    def n_offered(self) -> int:
+        """Workflows offered by the trace: completed + rejected."""
+        return len(self.stats) + len(self.rejected)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of OFFERED workflows that completed within their
+        deadline (rejected arrivals count against attainment)."""
+        if self.n_offered == 0:
+            return float("nan")
+        met = sum(1 for s in self.stats.values() if s.slo_met)
+        return met / self.n_offered
+
+    @property
+    def goodput_wps(self) -> float:
+        """Completed workflows per second over the busy horizon."""
+        return len(self.stats) / self.horizon if self.horizon > 0 else 0.0
+
+    @property
+    def goodput_slo_wps(self) -> float:
+        """SLO-met workflows per second over the busy horizon — the
+        serving objective the control plane optimizes."""
+        if self.horizon <= 0:
+            return 0.0
+        met = sum(1 for s in self.stats.values() if s.slo_met)
+        return met / self.horizon
+
+    @property
+    def goodput_qps(self) -> float:
+        """Completed queries per second over the busy horizon."""
+        n_q = sum(len(s.query_completion) for s in self.stats.values())
+        return n_q / self.horizon if self.horizon > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# the scheduler core
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Event-driven scheduling runtime with an explicit lifecycle.
+
+    Construction::
+
+        sched = Scheduler(cluster, SchedulerConfig(policy="FATE"))
+        sched.submit(wf_a)                 # arrives now
+        sched.submit(wf_b, at=0.7)         # arrives at t=0.7
+        for ev in sched.stream():          # lazily advances the clock
+            ...
+        result = sched.drain()             # ServingResult
+
+    ``submit`` enqueues an arrival; ``step()`` advances the clock by
+    exactly one event batch (performing any planning/issuing the batch
+    unlocks); ``run_until(t)`` steps through every event at or before
+    ``t``; ``drain()`` runs to quiescence and returns the
+    :class:`ServingResult`.  With ``config.slo`` set, every arrival
+    passes the :class:`~repro.core.admission.AdmissionController`
+    future-state probe and is admitted, deferred into the bounded
+    backlog (re-probed oldest-feasible-first on completions), or
+    rejected; SLO-tight admissions preempt the committed-but-unissued
+    pool.  Revocation never touches execution state (only issuing
+    mutates ρ/κ/τ), so delta rescoring stays bit-identical to full
+    rebuilds across preemptions.
+
+    Every transition is appended to :attr:`events` and dispatched to
+    :meth:`on` subscribers — the replayable trace that feeds the
+    calibration loop and any external observer.
+
+    Advanced injection hooks (used by the back-compat executor
+    adapters): pass a pre-built ``state`` and/or ``policy`` to bypass
+    the config's construction of them, ``world_profiles`` to emulate
+    hardware whose constants diverge from the scheduler's belief (the
+    calibration mis-belief harness), ``probe_corrector`` to share a
+    long-lived online probe-margin corrector across runs, and
+    ``batch=True`` for the single-workflow batch semantics of
+    :class:`~repro.core.executor.WorkflowExecutor` (per-workflow
+    ``plan()`` dispatch, unconditional greedy fallback, persistent
+    commit pool, one completion per clock advance, no admission).
+    """
+
+    def __init__(self, cluster=None,
+                 config: Optional[SchedulerConfig] = None, *,
+                 state: Optional[ExecutionState] = None,
+                 policy=None, world_profiles: Optional[dict] = None,
+                 world_cost_params: Optional[CostParams] = None,
+                 probe_corrector=None, batch: bool = False):
+        self.config = config or SchedulerConfig()
+        if state is None:
+            if cluster is None:
+                raise ValueError("Scheduler needs a cluster or a "
+                                 "pre-built ExecutionState")
+            state = fresh_state(cluster,
+                                profiles=self.config.model_profiles())
+        self.state = state
+        self.cost_params = self.config.effective_cost_params()
+        # world_profiles / world_cost_params: ground-truth constants the
+        # emulated hardware follows when they diverge from what the
+        # scheduler believes (state.profiles / config cost params) —
+        # the calibration benchmark's mis-belief harness; None means
+        # world == belief
+        self.cm = CostModel(state,
+                            (world_cost_params
+                             if world_cost_params is not None
+                             else self.cost_params),
+                            profiles=world_profiles)
+        self.policy = policy if policy is not None \
+            else self.config.build_policy()
+        self.batch = batch
+        self.slo = None if batch else self.config.slo
+        self.replan_on_completion = (not batch
+                                     and self.config.replan_on_completion)
+        self.admission: Optional[AdmissionController] = (
+            AdmissionController(self.slo, corrector=probe_corrector)
+            if self.slo is not None else None)
+
+        # event stream ---------------------------------------------------
+        self.events: list[SchedulerEvent] = []
+        self._handlers: list[tuple[type, Callable]] = []
+
+        # run state ------------------------------------------------------
+        self.frontier = SharedFrontier()
+        # (t, prio, seq, kind, payload); prio is seq in serving mode,
+        # the stage id in batch mode (historical tie-break contracts)
+        self._heap: list[tuple] = []
+        self._seq = 0
+        self._n_total_stages = 0
+        self.committed: list[Placement] = []
+        self.issued: set[StageKey] = set()
+        self.runs: dict[StageKey, StageRun] = {}
+        self._wf_finish: dict[str, float] = {}
+        self._arrivals: dict[str, float] = {}
+        self._deadlines: dict[str, float] = {}
+        self._klass: dict[str, str] = {}
+        self._workflows_all: dict[str, Workflow] = {}
+        self.stats: dict[str, WorkflowServeStats] = {}
+        self._query_done: dict[str, dict[int, float]] = {}
+        self._first_arrival: Optional[float] = None
+        self._last_finish: Optional[float] = None
+        self.max_in_flight = 0
+        self.replans = 0
+        self.preemptions = 0
+        self._switches_before = state.model_switches
+        self._guard = 0
+        self._n_rejected_seen = 0
+        # mechanism proxies (Appendix C.2), accumulated per workflow
+        self._edge_cross: dict[str, int] = {}
+        self._prefix_hits: dict[str, float] = {}
+        self._same_model: dict[str, float] = {}
+        self.result: Optional[ServingResult] = None
+
+    # -- clock -----------------------------------------------------------
+    @property
+    def now(self) -> float:
+        """Current simulation time (monotone across steps)."""
+        return self.state.now
+
+    def next_event_time(self) -> Optional[float]:
+        """Timestamp of the next pending event (``None`` when idle)."""
+        return self._heap[0][0] if self._heap else None
+
+    # -- event stream ----------------------------------------------------
+    def on(self, event_type: type, handler: Callable) -> None:
+        """Subscribe ``handler(event)`` to every emitted event that is
+        an instance of ``event_type`` (use :class:`SchedulerEvent` to
+        observe the whole stream)."""
+        self._handlers.append((event_type, handler))
+
+    def _emit(self, ev: SchedulerEvent) -> None:
+        self.events.append(ev)
+        for etype, handler in self._handlers:
+            if isinstance(ev, etype):
+                handler(ev)
+
+    def __iter__(self) -> Iterator[SchedulerEvent]:
+        """Iterate over the events emitted so far (a snapshot; use
+        :meth:`stream` to lazily drive the clock instead)."""
+        return iter(list(self.events))
+
+    def stream(self) -> Iterator[SchedulerEvent]:
+        """Drive the scheduler to quiescence lazily, yielding each
+        event as it is emitted (one :meth:`step` per batch)."""
+        idx = len(self.events)
+        while True:
+            progressed = self.step()
+            while idx < len(self.events):
+                yield self.events[idx]
+                idx += 1
+            if not progressed:
+                return
+
+    # -- lifecycle -------------------------------------------------------
+    def submit(self, wf: Workflow, *, at: Optional[float] = None,
+               deadline: Optional[float] = None,
+               klass: str = "default") -> str:
+        """Enqueue a workflow arrival.
+
+        ``at`` is the absolute arrival time (default: now); arrivals
+        in the past fire at the next step.  ``deadline`` optionally
+        pins an absolute completion deadline for stats/events even
+        without an SLO config (with one, the SLO-derived deadline
+        governs admission and this override only annotates the
+        outcome).  ``klass`` names the admission class recorded on the
+        workflow's stats (one scheduling class today; the hook for
+        per-class weighted SLOs).  Returns the workflow id.
+        """
+        t = self.state.now if at is None else float(at)
+        # batch mode replicates the historical batch executor's heap
+        # ordering: ties between simultaneous completions break by
+        # stage id, not issue order (arrivals sort first via "")
+        prio = "" if self.batch else self._seq
+        heapq.heappush(self._heap, (t, prio, self._seq, "arrive", wf))
+        self._seq += 1
+        self._n_total_stages += len(wf.stages)
+        self._first_arrival = (t if self._first_arrival is None
+                               else min(self._first_arrival, t))
+        if deadline is not None:
+            self._deadlines[wf.wid] = deadline
+        self._klass[wf.wid] = klass
+        return wf.wid
+
+    def step(self) -> bool:
+        """Advance through exactly one event batch.
+
+        Consumes the next batch of simultaneous events (arrivals and
+        completions) with the re-admission sweep and replan trigger,
+        then SETTLES the new instant: every planning/issuing action
+        the batch unlocked runs before ``step`` returns, so the heap
+        already holds the follow-on events (this is what lets
+        :meth:`run_until` honor its contract).  Returns ``False`` when
+        the scheduler is quiescent (no pending events, commitments, or
+        in-flight workflows) — at which point :meth:`drain` finalizes
+        the result.
+        """
+        while True:
+            outcome = self._tick()
+            if outcome == "advanced":
+                # settle: run the work ticks the batch unlocked
+                while self._tick(advance=False) == "work":
+                    pass
+                return True
+            if outcome == "done":
+                # quiescent: an idle, long-lived scheduler may be
+                # polled indefinitely — liveness-guard counts must not
+                # accumulate across idle polls
+                self._guard = 0
+                return False
+
+    def run_until(self, t: float) -> None:
+        """Process every pending event with timestamp ``<= t`` and
+        advance the clock to at least ``t``.
+
+        Each consumed batch is settled before the next is considered
+        (see :meth:`step`), so follow-on events the planning creates
+        at or before ``t`` are processed too, and work unlocked by the
+        last batch is issued at its own timestamp — never back-dated
+        to ``t``.
+        """
+        while self._heap and self._heap[0][0] <= t + 1e-12:
+            self.step()
+        self.state.now = max(self.state.now, t)
+
+    def drain(self) -> ServingResult:
+        """Run to quiescence and return the :class:`ServingResult`
+        (also kept on :attr:`result`)."""
+        while self.step():
+            pass
+        adm = self.admission
+        fa = self._first_arrival if self._first_arrival is not None \
+            else 0.0
+        lf = self._last_finish if self._last_finish is not None else fa
+        self.result = ServingResult(
+            stats=self.stats, horizon=max(lf - fa, 0.0),
+            max_in_flight=self.max_in_flight, replans=self.replans,
+            model_switches=(self.state.model_switches
+                            - self._switches_before),
+            rejected=list(adm.rejected) if adm is not None else [],
+            deferrals=adm.n_deferrals if adm is not None else 0,
+            preemptions=self.preemptions)
+        return self.result
+
+    def batch_result(self, wid: str) -> RunResult:
+        """Single-workflow :class:`RunResult` view of a drained run
+        (the batch adapter's output): per-stage runs, per-query
+        completions, and the mechanism proxies of ``wid``."""
+        runs = {sid: r for (w, sid), r in self.runs.items() if w == wid}
+        makespan = max((r.finish for r in runs.values()), default=0.0)
+        wf = self._workflows_all[wid]
+        qd = self._query_done.get(wid, {})
+        qdone = [qd.get(i, makespan) for i in range(wf.num_queries)]
+        return RunResult(
+            wid=wid, makespan=makespan, query_completion=qdone,
+            stage_runs=runs,
+            cross_device_edges=self._edge_cross.get(wid, 0),
+            prefix_hits_est=self._prefix_hits.get(wid, 0.0),
+            same_model_continuations=self._same_model.get(wid, 0.0),
+            total_tasks=len(wf.stages),
+            model_switches=(self.state.model_switches
+                            - self._switches_before))
+
+    # -- internals -------------------------------------------------------
+    def _guard_limit(self) -> int:
+        factor = 40 if self.batch else 60
+        return factor * max(self._n_total_stages, 1) + 1000
+
+    def _claimed_keys(self) -> set[StageKey]:
+        return self.issued | {(p.wid, p.sid) for p in self.committed}
+
+    def _stall_name(self) -> str:
+        if self.batch:
+            wid = next(iter(self._workflows_all), "batch")
+            return f"{wid}: executor stalled ({self.policy.name})"
+        return f"serving executor stalled ({self.policy.name})"
+
+    def _issuable(self, p: Placement) -> bool:
+        done = self.frontier.completed.get(p.wid)
+        if done is None:
+            return False
+        st = self.frontier.workflows[p.wid].stages[p.sid]
+        if any(par not in done for par in st.parents):
+            return False
+        return all(self.state.device_free(d) <= self.state.now + 1e-12
+                   for d in p.devices)
+
+    def _issue(self, p: Placement) -> None:
+        state = self.state
+        wf = self.frontier.workflows[p.wid]
+        st = wf.stages[p.sid]
+        if self.batch:
+            # mechanism proxies (Appendix C.2), measured at issue
+            # before the state update — batch-only: ServingResult
+            # never reports them, so the serving hot path (replanned
+            # on every completion) skips the per-issue scans
+            primary = p.devices[0]
+            for par in st.parents:
+                locs = state.output_loc.get((p.wid, par), ())
+                if locs and primary not in locs:
+                    self._edge_cross[p.wid] = \
+                        self._edge_cross.get(p.wid, 0) + 1
+            ov = state.prefix_overlap(st, primary, wf.num_queries)
+            self._prefix_hits[p.wid] = \
+                self._prefix_hits.get(p.wid, 0.0) + ov
+            res_frac = sum(
+                1 for d in p.devices if state.is_resident(st.model, d)
+            ) / len(p.devices)
+            self._same_model[p.wid] = \
+                self._same_model.get(p.wid, 0.0) + res_frac
+
+        shard_fin, switched = _issue_shards(state, self.cm, wf, st, p)
+        fin_all = max(shard_fin)
+        key = (p.wid, p.sid)
+        self.runs[key] = StageRun(p, state.now, fin_all,
+                                  tuple(shard_fin), tuple(switched))
+        self._wf_finish[p.wid] = max(self._wf_finish.get(p.wid, 0.0),
+                                     fin_all)
+        self.issued.add(key)
+        prio = p.sid if self.batch else self._seq
+        heapq.heappush(self._heap, (fin_all, prio, self._seq, "finish",
+                                    key))
+        self._seq += 1
+        self._emit(IssueEvent(t=state.now, wid=p.wid, sid=p.sid,
+                              devices=p.devices, start=state.now,
+                              finish=fin_all))
+
+    def _issue_all(self) -> None:
+        progress = True
+        while progress:
+            progress = False
+            for p in list(self.committed):
+                key = (p.wid, p.sid)
+                if key in self.issued \
+                        or p.wid not in self.frontier.workflows \
+                        or p.sid in self.frontier.completed[p.wid]:
+                    self.committed.remove(p)
+                    continue
+                if self._issuable(p):
+                    self.committed.remove(p)
+                    self._issue(p)
+                    progress = True
+
+    def _admit(self, wf: Workflow, arrival: float,
+               deadline: Optional[float] = None) -> None:
+        self.frontier.admit(wf)
+        self._workflows_all[wf.wid] = wf
+        self._arrivals[wf.wid] = arrival
+        if deadline is not None:
+            # an explicit submit() deadline annotation wins over the
+            # SLO-derived one for reporting (admission already decided)
+            self._deadlines.setdefault(wf.wid, deadline)
+        self.max_in_flight = max(self.max_in_flight, len(self.frontier))
+        hook = getattr(self.policy, "on_arrival", None)
+        if hook is not None:
+            hook(wf, self.state)
+        self._emit(AdmittedEvent(
+            t=self.state.now, wid=wf.wid, arrival=arrival,
+            deadline=self._deadlines.get(wf.wid),
+            klass=self._klass.get(wf.wid, "default")))
+
+    def _preempt_commitments(self, trigger_wid: str) -> None:
+        """Revoke committed-but-unissued placements for an SLO-tight
+        admission.  No execution state was mutated for them (only
+        issuing writes ρ/κ/τ), so the planner's delta-rescoring caches
+        need no repair — the revoked rows simply reappear in the next
+        merged solve, warm-started on their previous devices via the
+        solution hint."""
+        if self.committed:
+            revoked = list(self.committed)
+            self.committed.clear()
+            self.preemptions += 1
+            hook = getattr(self.policy, "on_preempt", None)
+            if hook is not None:
+                hook(revoked, self.state)
+            self._emit(PreemptionEvent(t=self.state.now,
+                                       trigger_wid=trigger_wid,
+                                       n_revoked=len(revoked)))
+
+    def _emit_new_rejections(self, reason: str) -> None:
+        adm = self.admission
+        if adm is None:
+            return
+        for wid in adm.rejected[self._n_rejected_seen:]:
+            self._emit(RejectedEvent(t=self.state.now, wid=wid,
+                                     reason=reason))
+        self._n_rejected_seen = len(adm.rejected)
+
+    def _finish(self, key: StageKey) -> None:
+        state = self.state
+        wid, sid = key
+        wf = self.frontier.workflows[wid]
+        st = wf.stages[sid]
+        run = self.runs[key]
+        state.output_loc[(wid, sid)] = run.placement.devices
+        state.completed.add((wid, sid))
+        if not st.children:          # sink: per-query completion
+            qd = self._query_done.setdefault(wid, {})
+            qid = 0
+            for dfin, nq in zip(run.shard_finish,
+                                run.placement.shard_sizes):
+                for _ in range(nq):
+                    qd[qid] = max(qd.get(qid, 0.0), dfin)
+                    qid += 1
+        self.issued.discard(key)
+        done = self.frontier.complete(wid, sid)
+        hook = getattr(self.policy, "on_completion", None)
+        if hook is not None:
+            hook(wid, sid, state)
+        if done:
+            wf_all = self._workflows_all[wid]
+            qd = self._query_done.get(wid, {})
+            fin_t = self._wf_finish.get(wid, state.now)
+            qdone = [qd.get(i, fin_t)
+                     for i in range(wf_all.num_queries)]
+            self.stats[wid] = WorkflowServeStats(
+                wid=wid, arrival=self._arrivals[wid], finish=fin_t,
+                query_completion=qdone, n_stages=len(wf_all.stages),
+                deadline=self._deadlines.get(wid),
+                klass=self._klass.get(wid, "default"))
+            self._last_finish = (fin_t if self._last_finish is None
+                                 else max(self._last_finish, fin_t))
+            if not self.batch and hasattr(self.policy,
+                                          "forget_workflow"):
+                self.policy.forget_workflow(wid)
+            if self.admission is not None:
+                # close the probe loop (predicted vs observed latency
+                # -> EWMA margin corrector) before the controller
+                # drops its per-workflow records
+                self.admission.record_completion(wid, fin_t)
+                self.admission.forget(wid)
+        self._emit(CompletionEvent(t=state.now, wid=wid, sid=sid,
+                                   workflow_done=done))
+
+    def _plan(self, ready: list[StageKey]) -> list[Placement]:
+        policy = self.policy
+        if not self.batch and hasattr(policy, "plan_shared"):
+            return policy.plan_shared(self.frontier.workflows,
+                                      self.state, ready)
+        out: list[Placement] = []
+        by_wid: dict[str, list[str]] = {}
+        for wid, sid in ready:
+            by_wid.setdefault(wid, []).append(sid)
+        for wid, sids in by_wid.items():
+            out.extend(policy.plan(self.frontier.workflows[wid],
+                                   self.state, sids))
+        return out
+
+    def _process_arrival(self, wf: Workflow) -> None:
+        state = self.state
+        if wf.wid in self._workflows_all:
+            # stats/arrivals are keyed by wid for the whole run, so a
+            # reused wid (even after the first instance retired) would
+            # silently clobber them
+            raise ValueError(
+                f"duplicate workflow id in trace: {wf.wid}")
+        self._emit(ArrivalEvent(t=state.now, wid=wf.wid))
+        adm = self.admission
+        if adm is None:
+            self._admit(wf, state.now)
+            return
+        dec = adm.on_arrival(wf, state, self.frontier, self.policy,
+                             self._claimed_keys())
+        if dec.action == "admit":
+            self._admit(wf, state.now, dec.deadline)
+            if dec.preempt:
+                # SLO-tight arrival: revoke unissued commitments so it
+                # competes immediately
+                self._preempt_commitments(wf.wid)
+        elif dec.action == "defer":
+            self._emit(DeferredEvent(t=state.now, wid=wf.wid,
+                                     predicted_latency=dec.predicted_latency,
+                                     deadline=dec.deadline))
+        self._emit_new_rejections("admission")
+
+    def _tick(self, advance: bool = True) -> str:
+        """One pass of the commit-and-advance loop.
+
+        Returns ``"work"`` (made planning/issuing progress without
+        touching the clock), ``"advanced"`` (consumed one event
+        batch), ``"done"`` (quiescent), or — with ``advance=False``,
+        the settle mode :meth:`step` uses to flush planning at the
+        current instant — ``"idle"`` (no work possible now; the clock
+        was deliberately left alone).
+        """
+        state = self.state
+        adm = self.admission
+        self._guard += 1
+        if self._guard > self._guard_limit():
+            raise RuntimeError(self._stall_name())
+        # 1. issue everything issuable at the current time
+        self._issue_all()
+        # 2. plan when claimed actions cannot cover the frontier
+        ready = self.frontier.ready(self._claimed_keys())
+        pool_feasible = any(
+            all(par in self.frontier.completed[p.wid]
+                for par in self.frontier.workflows[p.wid]
+                .stages[p.sid].parents)
+            for p in self.committed
+            if p.wid in self.frontier.workflows)
+        if ready and not pool_feasible:
+            new = self._plan(ready)
+            self.replans += 1
+            if not new and (self.batch or not self.issued):
+                # liveness fallback: greedily place the single best
+                # ready stage by state-corrected cost
+                wid, sid = ready[0]
+                new = [_greedy_fallback(
+                    state, self.cm, self.frontier.workflows[wid], sid)]
+            if new:
+                for p in new:
+                    self._emit(PlacementEvent(
+                        t=state.now, wid=p.wid, sid=p.sid,
+                        devices=p.devices, shard_sizes=p.shard_sizes))
+                self.committed.extend(new)
+                self._issue_all()  # start the fresh plan NOW, before
+                return "work"      # the clock advances to next event
+        if not advance:
+            return "idle"
+        # 3. advance the clock to the next event batch
+        if not self._heap:
+            if adm is not None and adm.backlog:
+                # no further events will trigger re-admission: drain
+                # the backlog (shed expired entries, force the oldest
+                # reachable one in) and keep planning
+                for arr, wfp, dec in adm.readmit(
+                        state, self.frontier, self.policy,
+                        self._claimed_keys(), force=True):
+                    self._admit(wfp, arr, dec.deadline)
+                    if dec.preempt:
+                        self._preempt_commitments(wfp.wid)
+                self._emit_new_rejections("expired")
+                return "work"
+            if self.batch:
+                if self.committed:
+                    return "work"      # unfeasible pool: guard trips
+                if len(self.frontier):
+                    wid = next(iter(self.frontier.workflows))
+                    raise RuntimeError(
+                        f"{wid}: deadlock ({self.policy.name})")
+                return "done"
+            if self.committed or len(self.frontier):
+                raise RuntimeError(
+                    f"serving executor deadlock ({self.policy.name})")
+            return "done"
+        t = self._heap[0][0]
+        state.now = max(state.now, t)
+        completed_any = False
+        if self.batch:
+            # batch semantics: one completion per clock advance (plan
+            # between same-instant completions, as Algorithm 2 does)
+            _, _, _, kind, payload = heapq.heappop(self._heap)
+            if kind == "arrive":
+                self._process_arrival(payload)
+            else:
+                self._finish(payload)
+                completed_any = True
+        else:
+            while self._heap and self._heap[0][0] <= t + 1e-12:
+                _, _, _, kind, payload = heapq.heappop(self._heap)
+                if kind == "arrive":
+                    self._process_arrival(payload)
+                else:
+                    self._finish(payload)
+                    completed_any = True
+        if completed_any and adm is not None:
+            # re-admission sweep: freed capacity may now fit the
+            # oldest deferred arrivals (one per sweep so each
+            # admission's frontier update feeds the next probe)
+            while True:
+                batch = adm.readmit(state, self.frontier, self.policy,
+                                    self._claimed_keys())
+                self._emit_new_rejections("expired")
+                if not batch:
+                    break
+                for arr, wfp, dec in batch:
+                    self._admit(wfp, arr, dec.deadline)
+                    if dec.preempt:
+                        self._preempt_commitments(wfp.wid)
+        if completed_any and self.replan_on_completion and self.committed:
+            # revoke unissued commitments: the completed stage changed
+            # ρ/κ/ℓ/τ, so the merged frontier is re-solved
+            self.committed.clear()
+        return "advanced"

@@ -1,12 +1,22 @@
 """Manifest runner: executes every scheduler on every workflow instance
 under the same runtime and exports one CSV per experiment
 (paper Appendix C.4 — "Evaluation pipeline and result provenance").
+
+These entry points are BACK-COMPAT WRAPPERS over the event-driven
+scheduler core: every call lowers its per-call knobs
+(``score_params`` / ``cost_params`` / ``calibration`` / ``slo`` /
+``policy_kwargs``) into a typed
+:class:`~repro.core.scheduler.SchedulerConfig` and runs through the
+executor adapters.  New code should build a ``SchedulerConfig`` and
+drive :class:`~repro.core.scheduler.Scheduler` directly (see
+``docs/API.md``); the ``policy_kwargs`` escape hatch emits a
+``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import csv
 import dataclasses
-import io
+import warnings
 from pathlib import Path
 from typing import Optional, Sequence
 
@@ -16,7 +26,7 @@ from repro.core.costs import CostParams
 from repro.core.devices import Cluster, homogeneous_cluster
 from repro.core.executor import (ServingExecutor, ServingResult,
                                  WorkflowExecutor, fresh_state)
-from repro.core.policies import make_policy
+from repro.core.scheduler import SchedulerConfig
 from repro.core.scoring import ScoreParams
 from repro.core.workflow import Workflow
 
@@ -61,6 +71,44 @@ def _load_calibration(calibration: Optional[CalibrationProfile],
             calibration.cost_params(cost_params))
 
 
+def _warn_policy_kwargs(policy_kwargs: Optional[dict]) -> dict:
+    """Deprecation shim for the untyped ``policy_kwargs`` escape hatch
+    (superseded by typed :class:`SchedulerConfig` fields)."""
+    if policy_kwargs:
+        warnings.warn(
+            "policy_kwargs is deprecated; express planner knobs as "
+            "SchedulerConfig fields (use_matrix/use_delta/warm_start/"
+            "time_limit/max_waves/score/cost) and drive "
+            "repro.core.scheduler.Scheduler directly",
+            DeprecationWarning, stacklevel=3)
+    return dict(policy_kwargs or {})
+
+
+def _legacy_config(policy_name: str, *,
+                   score_params: Optional[ScoreParams] = None,
+                   lowered_cost: Optional[CostParams] = None,
+                   calibration: Optional[CalibrationProfile] = None,
+                   slo: Optional[SLOConfig] = None,
+                   policy_kwargs: Optional[dict] = None
+                   ) -> SchedulerConfig:
+    """Lower one legacy (kwarg-threaded) run description onto a typed
+    :class:`SchedulerConfig`.
+
+    Preserves the historical quirks exactly so wrapper runs stay
+    bit-identical to the pre-redesign executors: the FATE planner sees
+    ``cost_params`` only when a calibration profile was loaded (the
+    executor always prices with them), and ``score_params`` falls back
+    to defaults.  ``calibration`` itself is pre-lowered by the caller
+    (``lowered_cost``), so the config embeds no profile.
+    """
+    return SchedulerConfig(
+        policy=policy_name,
+        policy_kwargs=dict(policy_kwargs or {}),
+        score=score_params if score_params is not None else ScoreParams(),
+        cost=lowered_cost if calibration is not None else None,
+        slo=slo)
+
+
 def run_one(wf: Workflow, policy_name: str, cluster: Cluster, *,
             score_params: Optional[ScoreParams] = None,
             cost_params: Optional[CostParams] = None,
@@ -76,18 +124,18 @@ def run_one(wf: Workflow, policy_name: str, cluster: Cluster, *,
     the :class:`RunRow` with mechanism proxies and solver stats filled
     in.
     """
+    kwargs = _warn_policy_kwargs(policy_kwargs)
     profiles, cost_params = _load_calibration(calibration, cost_params)
     state = fresh_state(cluster, profiles=profiles)
     preload = wf.meta.get("preload_model")
     if preload:
         for d in cluster.ids():
             state.residency[d] = preload
-    kwargs = dict(policy_kwargs or {})
-    if policy_name == "FATE" and score_params is not None:
-        kwargs["params"] = score_params
-    if policy_name == "FATE" and calibration is not None:
-        kwargs.setdefault("cost_params", cost_params)
-    policy = make_policy(policy_name, **kwargs)
+    config = _legacy_config(policy_name, score_params=score_params,
+                            lowered_cost=cost_params,
+                            calibration=calibration,
+                            policy_kwargs=kwargs)
+    policy = config.build_policy()
     ex = WorkflowExecutor(state, cost_params)
     res = ex.run(wf, policy)
     row = RunRow(
@@ -167,23 +215,30 @@ def run_serving(trace: Sequence[tuple[float, Workflow]],
     ``policy_kwargs`` configure the FATE planner (e.g.
     ``{"use_delta": False, "warm_start": False}`` for parity
     references); like ``score_params`` they are applied to FATE only,
-    so mixed-policy comparisons stay valid.  Returns
+    so mixed-policy comparisons stay valid.  The kwarg path is
+    DEPRECATED: new code should express these as
+    :class:`~repro.core.scheduler.SchedulerConfig` fields and drive
+    the scheduler directly (``docs/API.md`` has the migration table).
+    Returns
     ``{policy: ServingResult}``; aggregate with
     :func:`repro.workflowbench.metrics.serving_summary` or
     :func:`repro.workflowbench.metrics.slo_summary`.
     """
     cluster = cluster or homogeneous_cluster(8)
+    pk = _warn_policy_kwargs(policy_kwargs)
     profiles, cost_params = _load_calibration(calibration, cost_params)
     results: dict[str, ServingResult] = {}
     for pol_name in policies:
-        kwargs = {}
-        if pol_name == "FATE":
-            kwargs.update(policy_kwargs or {})
-            if score_params is not None:
-                kwargs["params"] = score_params
-            if calibration is not None:
-                kwargs.setdefault("cost_params", cost_params)
-        policy = make_policy(pol_name, **kwargs)
+        # policy_kwargs/score_params configure FATE only, so
+        # mixed-policy comparisons stay valid (historical contract)
+        fate = pol_name == "FATE"
+        config = _legacy_config(
+            pol_name,
+            score_params=score_params if fate else None,
+            lowered_cost=cost_params,
+            calibration=calibration if fate else None,
+            slo=slo, policy_kwargs=pk if fate else None)
+        policy = config.build_policy()
         state = fresh_state(cluster, profiles=profiles)
         ex = ServingExecutor(state, cost_params, slo=slo)
         results[pol_name] = ex.run(list(trace), policy)

@@ -3,10 +3,10 @@
 The offline container has no `hypothesis` wheel; rather than skip the
 property tests entirely, this shim re-implements the tiny slice of the
 API the suite uses (`given`, `settings`, `strategies.integers/floats/
-lists/sampled_from/data`) with a seeded PRNG so the tests still execute
-a fixed batch of pseudo-random examples.  When the real package is
-installed (see requirements-dev.txt) it is used instead — see the
-try/except imports in the test modules.
+lists/sampled_from/booleans/none/one_of/data`) with a seeded PRNG so
+the tests still execute a fixed batch of pseudo-random examples.  When
+the real package is installed (see requirements-dev.txt) it is used
+instead — see the try/except imports in the test modules.
 """
 from __future__ import annotations
 
@@ -71,6 +71,22 @@ class _SampledFrom(_Strategy):
         return rng.choice(self.seq)
 
 
+class _Just(_Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _OneOf(_Strategy):
+    def __init__(self, strats):
+        self.strats = list(strats)
+
+    def example(self, rng):
+        return rng.choice(self.strats).example(rng)
+
+
 class _DataObject:
     """Interactive draw handle (st.data())."""
 
@@ -88,13 +104,34 @@ class _Data(_Strategy):
 
 class _StrategiesNamespace:
     @staticmethod
-    def integers(lo, hi):
+    def integers(lo=None, hi=None, *, min_value=None, max_value=None):
+        lo = min_value if lo is None else lo
+        hi = max_value if hi is None else hi
         return _Integers(lo, hi)
 
     @staticmethod
-    def floats(lo, hi, **kw):
+    def floats(lo=None, hi=None, *, min_value=None, max_value=None,
+               **kw):
+        lo = min_value if lo is None else lo
+        hi = max_value if hi is None else hi
         return _Floats(lo, hi, **{k: v for k, v in kw.items()
                                   if k == "width"})
+
+    @staticmethod
+    def booleans():
+        return _SampledFrom([False, True])
+
+    @staticmethod
+    def none():
+        return _Just(None)
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def one_of(*strats):
+        return _OneOf(strats)
 
     @staticmethod
     def lists(elem, min_size=0, max_size=10, unique=False):

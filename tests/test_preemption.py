@@ -17,9 +17,9 @@ from repro.workflowbench.suites import (overloaded_serving_trace,
                                         poisson_serving_trace)
 
 
-def _run(trace, cluster, slo=None, **policy_kwargs):
+def _run(trace, cluster, slo=None, **fate_kwargs):
     ex = ServingExecutor(fresh_state(cluster), slo=slo)
-    res = ex.run(list(trace), make_policy("FATE", **policy_kwargs))
+    res = ex.run(list(trace), make_policy("FATE", **fate_kwargs))
     return res, ex.last_runs
 
 

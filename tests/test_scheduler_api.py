@@ -1,0 +1,480 @@
+"""Unified Scheduler API: old-path/new-path parity, SchedulerConfig
+JSON round-trips, the policy registry, and the typed event stream.
+
+The redesign's acceptance bar is that it is a PURE SURFACE CHANGE:
+the deprecated ``run_serving(policy_kwargs=...)`` path and the new
+``Scheduler(cluster, config)`` path must produce bit-identical
+placements and serving metrics on the overloaded n=18 trace, and a
+``SchedulerConfig`` must survive a JSON round trip exactly (including
+an embedded ``CalibrationProfile``).
+"""
+import dataclasses
+import warnings
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline container: shim
+    from _fallback_hypothesis import given, settings, strategies as st
+
+from repro.core.admission import SLOConfig
+from repro.core.calibration import CalibrationProfile
+from repro.core.costs import CostParams
+from repro.core.devices import homogeneous_cluster
+from repro.core.executor import ServingExecutor, WorkflowExecutor, \
+    fresh_state
+from repro.core.policies import (ALL_POLICIES, BasePolicy, Policy,
+                                 make_policy, register_policy,
+                                 registered_policies)
+from repro.core.scheduler import (EVENT_TYPES, AdmittedEvent,
+                                  ArrivalEvent, CompletionEvent,
+                                  DeferredEvent, IssueEvent,
+                                  PlacementEvent, PreemptionEvent,
+                                  RejectedEvent, Scheduler,
+                                  SchedulerConfig, SchedulerEvent)
+from repro.core.scoring import ScoreParams
+from repro.workflowbench.runner import run_one, run_serving
+from repro.workflowbench.suites import (overloaded_serving_trace,
+                                        prefix_suite)
+
+
+def _overloaded_trace():
+    return overloaded_serving_trace(n_workflows=18, rate=14.0, seed=0,
+                                    num_queries=8)
+
+
+def _run_key(runs):
+    return {k: (r.placement.devices, r.placement.shard_sizes,
+                r.start, r.finish) for k, r in runs.items()}
+
+
+def _stats_key(res):
+    return {w: (s.arrival, s.finish, s.makespan, s.p95,
+                tuple(s.query_completion), s.deadline)
+            for w, s in res.stats.items()}
+
+
+# ---------------------------------------------------------------------------
+# old-path vs new-path parity (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+def test_serving_parity_old_kwargs_vs_scheduler_config():
+    """`run_serving(policy_kwargs=...)` and `Scheduler(config)` emit
+    bit-identical placements and ServingResult metrics on the
+    overloaded n=18 trace."""
+    trace = _overloaded_trace()
+    cluster = homogeneous_cluster(6)
+    slo = SLOConfig()
+
+    # old path: kwarg-threaded wrapper (deprecated escape hatch)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = run_serving(trace, ["FATE"], cluster, slo=slo,
+                          policy_kwargs={"use_delta": True,
+                                         "warm_start": True})["FATE"]
+
+    # new path: one typed config, event-driven lifecycle
+    sched = Scheduler(cluster, SchedulerConfig(policy="FATE", slo=slo))
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    new = sched.drain()
+
+    assert _stats_key(old) == _stats_key(new)
+    assert old.rejected == new.rejected
+    assert old.deferrals == new.deferrals
+    assert old.preemptions == new.preemptions
+    assert old.replans == new.replans
+    assert old.model_switches == new.model_switches
+    assert old.horizon == new.horizon
+    assert old.max_in_flight == new.max_in_flight
+    assert old.slo_attainment == new.slo_attainment
+    assert old.goodput_slo_wps == new.goodput_slo_wps
+
+
+def test_serving_parity_executor_adapter_vs_scheduler():
+    """The ServingExecutor adapter and a directly-driven Scheduler
+    produce identical per-stage StageRun records (placements,
+    devices, shard sizes, timings)."""
+    trace = _overloaded_trace()
+    cluster = homogeneous_cluster(6)
+    ex = ServingExecutor(fresh_state(cluster), slo=SLOConfig())
+    res_a = ex.run(list(trace), make_policy("FATE"))
+
+    sched = Scheduler(cluster,
+                      SchedulerConfig(policy="FATE", slo=SLOConfig()))
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    res_b = sched.drain()
+
+    assert _run_key(ex.last_runs) == _run_key(sched.runs)
+    assert _stats_key(res_a) == _stats_key(res_b)
+
+
+def test_batch_parity_run_one_vs_batch_scheduler():
+    """The run_one wrapper (WorkflowExecutor adapter) matches a
+    batch-mode Scheduler driven through the lifecycle API."""
+    wf = prefix_suite(0.5, n_instances=1)[0]
+    cluster = homogeneous_cluster(4)
+    row = run_one(wf, "FATE", cluster)
+
+    sched = Scheduler(cluster, SchedulerConfig(policy="FATE"),
+                      batch=True)
+    preload = wf.meta.get("preload_model")
+    if preload:
+        for d in cluster.ids():
+            sched.state.residency[d] = preload
+    sched.submit(wf)
+    sched.drain()
+    res = sched.batch_result(wf.wid)
+    assert res.makespan == row.makespan
+    assert res.p95 == row.p95
+    assert res.cross_device_edges == row.cross_device_edges
+    assert res.model_switches == row.model_switches
+
+
+def test_policy_kwargs_emits_deprecation_warning():
+    trace = _overloaded_trace()[:4]
+    with pytest.warns(DeprecationWarning, match="policy_kwargs"):
+        run_serving(trace, ["FATE"], homogeneous_cluster(4),
+                    policy_kwargs={"use_delta": False})
+
+
+# ---------------------------------------------------------------------------
+# SchedulerConfig JSON round trips
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(["FATE", "HEFT", "RoundRobin"]),
+    horizon=st.integers(min_value=1, max_value=6),
+    gamma=st.floats(min_value=0.1, max_value=0.9),
+    lam_prefix=st.floats(min_value=0.0, max_value=3.0),
+    use_matrix=st.booleans(), use_delta=st.booleans(),
+    warm_start=st.booleans(),
+    max_waves=st.one_of(st.none(),
+                        st.integers(min_value=1, max_value=4)),
+    latency_scale=st.floats(min_value=1.0, max_value=5.0),
+    with_slo=st.booleans(), with_cost=st.booleans(),
+    switch_scale=st.floats(min_value=0.1, max_value=3.0),
+)
+def test_config_json_roundtrip_property(policy, horizon, gamma,
+                                        lam_prefix, use_matrix,
+                                        use_delta, warm_start,
+                                        max_waves, latency_scale,
+                                        with_slo, with_cost,
+                                        switch_scale):
+    """from_json(to_json(cfg)) == cfg for random configs."""
+    cfg = SchedulerConfig(
+        policy=policy,
+        score=ScoreParams(horizon=horizon, gamma=gamma,
+                          lam_prefix=lam_prefix),
+        cost=(CostParams(switch_scale=switch_scale)
+              if with_cost else None),
+        slo=(SLOConfig(latency_scale=latency_scale)
+             if with_slo else None),
+        use_matrix=use_matrix, use_delta=use_delta,
+        warm_start=warm_start, max_waves=max_waves)
+    back = SchedulerConfig.from_json(cfg.to_json())
+    assert back == cfg
+
+
+def test_config_json_roundtrip_with_embedded_calibration():
+    """The embedded CalibrationProfile reference survives the round
+    trip exactly (coefficients, provenance, version)."""
+    profile = CalibrationProfile.hand_set().perturbed(
+        switch_mul=0.7, prefill_mul=1.2, transfer_mul=1.1,
+        prefix_saving=0.8)
+    cfg = SchedulerConfig(policy="FATE", calibration=profile,
+                          slo=SLOConfig(online_margin=True),
+                          policy_kwargs={"time_limit": 2.0})
+    back = SchedulerConfig.from_json(cfg.to_json())
+    assert back.calibration is not None
+    assert back.calibration.families == profile.families
+    assert back.calibration.source == profile.source
+    assert back == cfg
+    # the lowered views agree too (what consumers actually read)
+    assert back.effective_cost_params() == cfg.effective_cost_params()
+    assert back.model_profiles() == cfg.model_profiles()
+
+
+def test_config_save_load_and_version_gate(tmp_path):
+    cfg = SchedulerConfig(policy="HEFT")
+    p = cfg.save(tmp_path / "cfg.json")
+    assert SchedulerConfig.load(p) == cfg
+    with pytest.raises(ValueError, match="version"):
+        SchedulerConfig.from_json('{"config_version": 999}')
+
+
+def test_config_equivalent_runs_are_bit_identical(tmp_path):
+    """A run reproduced from the serialized artifact matches the
+    original run exactly."""
+    trace = _overloaded_trace()[:8]
+    cluster = homogeneous_cluster(4)
+    cfg = SchedulerConfig(policy="FATE", slo=SLOConfig())
+    loaded = SchedulerConfig.load(cfg.save(tmp_path / "run.json"))
+    keys = []
+    for c in (cfg, loaded):
+        sched = Scheduler(cluster, c)
+        for t, wf in trace:
+            sched.submit(wf, at=t)
+        sched.drain()
+        keys.append(_run_key(sched.runs))
+    assert keys[0] == keys[1]
+
+
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_policy_keyerror_lists_registered_names():
+    """Regression: the registry's KeyError names every registered
+    policy instead of the old opaque dict KeyError."""
+    with pytest.raises(KeyError) as ei:
+        make_policy("NoSuchPolicy")
+    msg = str(ei.value)
+    for name in registered_policies():
+        assert name in msg
+    assert "NoSuchPolicy" in msg
+
+
+def test_unknown_policy_in_config_raises_listing_keyerror():
+    with pytest.raises(KeyError, match="registered policies"):
+        SchedulerConfig(policy="Bogus").build_policy()
+
+
+def test_registry_and_all_policies_alias():
+    assert set(registered_policies()) >= {
+        "FATE", "HEFT", "Halo", "Helix", "KVFlow", "RoundRobin"}
+    # back-compat alias IS the registry
+    assert ALL_POLICIES is not None
+    assert ALL_POLICIES["FATE"] is make_policy("FATE").__class__
+
+
+def test_register_policy_decorator_and_protocol():
+    @register_policy("_TestEcho")
+    class EchoPolicy(BasePolicy):
+        def plan(self, wf, state, ready):
+            return []
+    try:
+        pol = make_policy("_TestEcho")
+        assert isinstance(pol, Policy)       # runtime-checkable
+        assert pol.name == "_TestEcho"
+        # lifecycle hooks exist and are no-ops
+        pol.on_arrival(None, None)
+        pol.on_completion("w", "s", None)
+        pol.on_preempt([], None)
+        pol.forget_workflow("w")
+    finally:
+        ALL_POLICIES.pop("_TestEcho", None)
+
+
+def test_policy_protocol_reexported_from_executor():
+    from repro.core.executor import Policy as ExecutorPolicy
+    assert ExecutorPolicy is Policy
+
+
+# ---------------------------------------------------------------------------
+# event stream
+# ---------------------------------------------------------------------------
+
+
+def test_event_stream_taxonomy_and_ordering():
+    """A controlled overloaded run emits every event type; per-stage
+    Placement -> Issue -> Completion ordering holds; admission events
+    partition the offered workflows."""
+    trace = _overloaded_trace()
+    cluster = homogeneous_cluster(6)
+    sched = Scheduler(cluster,
+                      SchedulerConfig(policy="FATE", slo=SLOConfig()))
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    res = sched.drain()
+    evs = sched.events
+    by_type = {t: [e for e in evs if type(e) is t] for t in EVENT_TYPES}
+    assert len(by_type[ArrivalEvent]) == len(trace)
+    assert len(by_type[AdmittedEvent]) == len(res.stats)
+    assert len(by_type[RejectedEvent]) == len(res.rejected)
+    assert len(by_type[DeferredEvent]) == res.deferrals
+    assert len(by_type[PreemptionEvent]) == res.preemptions
+    assert len(by_type[IssueEvent]) == len(sched.runs)
+    assert len(by_type[CompletionEvent]) == len(sched.runs)
+    assert by_type[PlacementEvent]          # plans were committed
+    # timestamps are monotone along the stream
+    ts = [e.t for e in evs]
+    assert all(a <= b + 1e-12 for a, b in zip(ts, ts[1:]))
+    # per-stage lifecycle ordering
+    for key in sched.runs:
+        kinds = [type(e).__name__ for e in evs
+                 if getattr(e, "wid", None) == key[0]
+                 and getattr(e, "sid", None) == key[1]]
+        assert kinds.index("PlacementEvent") < kinds.index("IssueEvent")
+        assert kinds.index("IssueEvent") < kinds.index("CompletionEvent")
+    # workflow_done completions == completed workflows
+    done = [e for e in by_type[CompletionEvent] if e.workflow_done]
+    assert {e.wid for e in done} == set(res.stats)
+
+
+def test_event_subscriptions_and_iterator():
+    """on() handlers fire per matching type; the base type observes
+    everything; stream() yields the same sequence lazily."""
+    trace = _overloaded_trace()[:6]
+    cluster = homogeneous_cluster(4)
+
+    def build():
+        s = Scheduler(cluster, SchedulerConfig(policy="FATE"))
+        for t, wf in trace:
+            s.submit(wf, at=t)
+        return s
+
+    seen_issue, seen_all = [], []
+    sched = build()
+    sched.on(IssueEvent, seen_issue.append)
+    sched.on(SchedulerEvent, seen_all.append)
+    sched.drain()
+    assert seen_all == sched.events
+    assert seen_issue == [e for e in sched.events
+                          if isinstance(e, IssueEvent)]
+    assert list(iter(sched)) == sched.events
+
+    streamed = list(build().stream())
+    assert [dataclasses.astuple(e) for e in streamed] == \
+        [dataclasses.astuple(e) for e in sched.events]
+
+
+def test_lifecycle_submit_step_run_until():
+    """step() advances one event batch; run_until() stops at t; a
+    drained scheduler reports quiescence."""
+    trace = _overloaded_trace()[:5]
+    cluster = homogeneous_cluster(4)
+    sched = Scheduler(cluster, SchedulerConfig(policy="FATE"))
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    assert sched.next_event_time() == trace[0][0]
+    assert sched.step()                     # first arrival batch
+    assert sched.now >= trace[0][0]
+    mid = trace[2][0]
+    sched.run_until(mid)
+    assert sched.now >= mid
+    assert sched.next_event_time() is None or \
+        sched.next_event_time() > mid
+    res = sched.drain()
+    assert len(res.stats) == len(trace)
+    assert not sched.step()                 # quiescent after drain
+
+
+def test_run_until_then_drain_matches_plain_drain():
+    """Regression: run_until must settle planning unlocked by the
+    last consumed batch — work must issue at its own timestamp, never
+    back-dated to the run_until horizon."""
+    trace = _overloaded_trace()[:3]
+    cluster = homogeneous_cluster(4)
+
+    def build():
+        s = Scheduler(cluster, SchedulerConfig(policy="FATE"))
+        for t, wf in trace:
+            s.submit(wf, at=t)
+        return s
+
+    ref = build()
+    res_ref = ref.drain()
+
+    far = build()
+    far.run_until(1e9)               # past every event
+    res_far = far.drain()
+    assert _stats_key(res_ref) == _stats_key(res_far)
+    assert _run_key(ref.runs) == _run_key(far.runs)
+    assert res_ref.horizon == res_far.horizon
+
+    # stepping through a mid-trace horizon then draining agrees too
+    mid = build()
+    mid.run_until(trace[1][0])
+    res_mid = mid.drain()
+    assert _stats_key(res_ref) == _stats_key(res_mid)
+
+
+def test_idle_step_polling_never_trips_stall_guard():
+    """Regression: the liveness guard must reset at quiescence so a
+    long-lived scheduler can be polled indefinitely between
+    submissions."""
+    trace = _overloaded_trace()[:2]
+    sched = Scheduler(homogeneous_cluster(4),
+                      SchedulerConfig(policy="RoundRobin"))
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    sched.drain()
+    for _ in range(10_000):          # would trip a cumulative guard
+        assert not sched.step()
+
+
+def test_lifecycle_hooks_are_invoked():
+    """BasePolicy lifecycle hooks see admissions, completions, and
+    preemptions from the core loop."""
+    calls = {"arrival": 0, "completion": 0}
+
+    class HookedRR(BasePolicy):
+        name = "HookedRR"
+
+        def __init__(self):
+            self._inner = make_policy("RoundRobin")
+
+        def plan(self, wf, state, ready):
+            return self._inner.plan(wf, state, ready)
+
+        def on_arrival(self, wf, state):
+            calls["arrival"] += 1
+
+        def on_completion(self, wid, sid, state):
+            calls["completion"] += 1
+
+    trace = _overloaded_trace()[:4]
+    sched = Scheduler(homogeneous_cluster(4), SchedulerConfig(),
+                      policy=HookedRR())
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    sched.drain()
+    assert calls["arrival"] == len(trace)
+    assert calls["completion"] == sum(len(wf.stages)
+                                      for _, wf in trace)
+
+
+def test_submit_klass_and_deadline_annotations():
+    """submit(deadline=, klass=) annotate the stats even without an
+    SLO config."""
+    trace = _overloaded_trace()[:2]
+    sched = Scheduler(homogeneous_cluster(4),
+                      SchedulerConfig(policy="RoundRobin"))
+    (t0, wf0), (t1, wf1) = trace
+    sched.submit(wf0, at=t0, deadline=t0 + 1e9, klass="batch")
+    sched.submit(wf1, at=t1)
+    res = sched.drain()
+    assert res.stats[wf0.wid].klass == "batch"
+    assert res.stats[wf0.wid].deadline == t0 + 1e9
+    assert res.stats[wf0.wid].slo_met
+    assert res.stats[wf1.wid].deadline is None
+    admitted = {e.wid: e for e in sched.events
+                if isinstance(e, AdmittedEvent)}
+    assert admitted[wf0.wid].klass == "batch"
+
+
+def test_duplicate_wid_raises():
+    trace = _overloaded_trace()[:1]
+    t0, wf0 = trace[0]
+    sched = Scheduler(homogeneous_cluster(2),
+                      SchedulerConfig(policy="RoundRobin"))
+    sched.submit(wf0, at=t0)
+    sched.submit(wf0, at=t0 + 0.1)
+    with pytest.raises(ValueError, match="duplicate workflow id"):
+        sched.drain()
+
+
+def test_fate_max_waves_config_plumbs_to_planner():
+    cfg = SchedulerConfig(policy="FATE", max_waves=2,
+                          time_limit=1.5, use_delta=False)
+    pol = cfg.build_policy()
+    assert pol.planner.max_waves == 2
+    assert pol.planner.time_limit == 1.5
+    assert pol.planner.use_delta is False

@@ -1,0 +1,74 @@
+"""Deprecated-surface gate: no in-repo caller may use the untyped
+``policy_kwargs`` path outside the sanctioned back-compat layer.
+
+PR 5 redesigned the scheduler's public API around a typed
+:class:`~repro.core.scheduler.SchedulerConfig`; the old
+``policy_kwargs`` dicts survive only as deprecated escape hatches in
+the ``workflowbench.runner`` wrappers (which emit a
+``DeprecationWarning``) and in the parity tests that deliberately
+exercise the old path against the new one.  Everything else must
+express planner knobs as config fields — this gate greps the tree so
+a stray reintroduction fails ``make check`` instead of rotting.
+
+Run from the repo root (CI and ``make check`` do):
+
+    python tools/check_deprecated.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+#: Directories scanned for Python sources.
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+#: The deprecated identifier this gate hunts for.
+PATTERN = re.compile(r"\bpolicy_kwargs\b")
+
+#: Files allowed to mention the deprecated surface: the back-compat
+#: wrappers themselves, the parity suite that intentionally runs the
+#: old path against the new one, the config object that documents the
+#: migration, and this gate.
+ALLOWLIST = {
+    "src/repro/workflowbench/runner.py",
+    "src/repro/core/scheduler.py",
+    "src/repro/core/policies/base.py",
+    "src/repro/core/policies/fate.py",
+    "tests/test_scheduler_api.py",
+    "tools/check_deprecated.py",
+}
+
+
+def main() -> int:
+    """Scan the tree; print offenders; exit nonzero on any."""
+    offenders: list[str] = []
+    for top in SCAN_DIRS:
+        root = REPO / top
+        if not root.exists():
+            continue
+        for path in sorted(root.rglob("*.py")):
+            rel = str(path.relative_to(REPO))
+            if rel in ALLOWLIST:
+                continue
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                if PATTERN.search(line):
+                    offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    if offenders:
+        print(f"deprecated-surface check: {len(offenders)} use(s) of "
+              f"policy_kwargs outside the back-compat layer")
+        for o in offenders:
+            print(f"  {o}")
+        print("  -> express planner knobs as SchedulerConfig fields "
+              "(see docs/API.md migration table)")
+        return 1
+    print("deprecated-surface check: OK (policy_kwargs confined to "
+          "the back-compat layer)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,10 +33,15 @@ DOCSTRING_MODULES = [
     "src/repro/core/scoring.py",
     "src/repro/core/planner.py",
     "src/repro/core/executor.py",
+    "src/repro/core/scheduler.py",
     "src/repro/core/costs.py",
     "src/repro/core/admission.py",
     "src/repro/core/calibration.py",
     "src/repro/core/frontier_solver.py",
+    "src/repro/core/policies/__init__.py",
+    "src/repro/core/policies/base.py",
+    "src/repro/core/policies/fate.py",
+    "src/repro/core/policies/baselines.py",
     "src/repro/workflowbench/runner.py",
 ]
 
