@@ -14,11 +14,11 @@ test-sched:
 	  tests/test_workflowbench.py tests/test_score_matrix_parity.py \
 	  tests/test_delta_rescoring.py tests/test_shared_frontier.py \
 	  tests/test_admission.py tests/test_preemption.py \
-	  tests/test_scheduler_api.py
+	  tests/test_scheduler_api.py tests/test_faults.py
 
 bench-sched:
 	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
-	  --serve-slo --calibrate
+	  --serve-slo --calibrate --chaos
 
 # Cost-model calibration gate (fit round-trip, >=2x probe-error
 # reduction vs hand-set constants, fixed-profile score-path parity);
@@ -44,8 +44,10 @@ deprecated-check:
 # 5x wide-frontier target, if steady-state delta rescoring drops below
 # the 2x guard — PR target 3x — if either engine's placements diverge
 # from the reference path, if the --serve-slo control plane stops
-# beating unconditional admission / loses cold-solve parity, or if the
+# beating unconditional admission / loses cold-solve parity, if the
 # --calibrate loop stops recovering coefficients / cutting probe error
-# >= 2x / holding fixed-profile parity) + docs + the
-# deprecated-surface gate.
+# >= 2x / holding fixed-profile parity, or if the --chaos gate stops
+# completing 100% of admitted workflows under the seeded fault script
+# within 2x fault-free makespan with bit-identical replay and
+# empty-plan parity) + docs + the deprecated-surface gate.
 check: test-sched bench-sched docs-check deprecated-check

@@ -14,6 +14,7 @@ bit-identical placements, and writes a ``BENCH_sched.json`` trajectory.
     PYTHONPATH=src python -m benchmarks.sched_bench --serve    # serving mode
     PYTHONPATH=src python -m benchmarks.sched_bench --serve-slo  # SLO plane
     PYTHONPATH=src python -m benchmarks.sched_bench --calibrate  # cost model
+    PYTHONPATH=src python -m benchmarks.sched_bench --chaos      # fault gate
     PYTHONPATH=src python -m benchmarks.sched_bench --config SCHED_config.json
 
 Gates (enforced by exit code, used by ``make check`` / CI):
@@ -38,7 +39,14 @@ Gates (enforced by exit code, used by ``make check`` / CI):
     constants on the overloaded n=18 trace, and placements stay
     bit-identical across score paths under the fitted profile; the
     fitted ``CALIBRATION_profile.json`` is written next to
-    ``BENCH_sched.json`` (CI uploads both).
+    ``BENCH_sched.json`` (CI uploads both);
+  * ``--chaos``: under a seeded fault script (device crash + recovery,
+    slowdown episode, targeted transient shard failures) FATE
+    completes 100% of admitted workflows with makespan <= 2x the
+    fault-free horizon, two same-seed runs produce bit-identical
+    event streams, and an EMPTY armed fault plan reproduces the
+    fault-free run bit-for-bit; writes ``BENCH_chaos.json`` next to
+    ``BENCH_sched.json`` (CI uploads it).
 """
 from __future__ import annotations
 
@@ -383,6 +391,91 @@ def run_serve_slo(n_workflows: int = 18, rate: float = 14.0,
     }
 
 
+def run_chaos(n_workflows: int = 18, rate: float = 14.0,
+              n_devices: int = 6, seed: int = 0) -> dict:
+    """Chaos benchmark: fault-tolerant execution under a seeded fault
+    script.
+
+    Runs the overloaded n=18 serving trace four ways under FATE:
+    fault-free (the baseline), under the
+    :func:`~repro.workflowbench.suites.chaos_fault_plan` script (one
+    device crash with recovery, a 3× slowdown episode, two targeted
+    transient shard failures), the same chaos run replayed with the
+    same seed, and with an EMPTY armed ``FaultPlan`` (machinery on,
+    no faults).
+
+    Gates (exit-code enforced when ``--chaos`` is passed):
+      * completion: every admitted workflow completes under chaos
+        (no ``gave_up`` degradations);
+      * bounded degradation: chaos makespan <= 2x the fault-free
+        horizon;
+      * coverage: the script actually engaged — >=1 device down, >=2
+        shard failures, >=1 straggler detection;
+      * determinism: two same-seed chaos runs produce bit-identical
+        event streams;
+      * parity: the empty armed plan reproduces the fault-free run's
+        placements and event stream bit-for-bit (the fault machinery
+        is strictly additive).
+    """
+    import dataclasses
+
+    from repro.core.faults import FaultPlan
+    from repro.core.scheduler import SchedulerConfig
+    from repro.workflowbench.metrics import chaos_summary
+    from repro.workflowbench.suites import chaos_fault_plan, \
+        overloaded_serving_trace
+
+    trace = overloaded_serving_trace(n_workflows=n_workflows, rate=rate,
+                                     seed=seed, num_queries=8)
+    cluster = homogeneous_cluster(n_devices)
+
+    def _events(sched):
+        return [(type(e).__name__, dataclasses.astuple(e))
+                for e in sched.events]
+
+    def _placements(sched):
+        return {f"{w}/{s}": [list(r.placement.devices),
+                             list(r.placement.shard_sizes)]
+                for (w, s), r in sched.runs.items()}
+
+    base, s_base = _run_from_config(trace, cluster,
+                                    SchedulerConfig(policy="FATE"))
+    chaos_cfg = SchedulerConfig(policy="FATE",
+                                faults=chaos_fault_plan(seed))
+    chaos, s_chaos = _run_from_config(trace, cluster, chaos_cfg)
+    replay, s_replay = _run_from_config(
+        trace, cluster,
+        SchedulerConfig.from_json(chaos_cfg.to_json()))
+    empty, s_empty = _run_from_config(
+        trace, cluster, SchedulerConfig(policy="FATE",
+                                        faults=FaultPlan()))
+
+    all_wids = {wf.wid for _, wf in trace}
+    completed_all = (set(chaos.stats) == all_wids
+                     and not chaos.failed)
+    degradation = chaos.horizon / base.horizon if base.horizon else 1.0
+    replay_identical = _events(s_chaos) == _events(s_replay)
+    empty_parity = (_placements(s_base) == _placements(s_empty)
+                    and _events(s_base) == _events(s_empty))
+    engaged = (chaos.device_downs >= 1 and chaos.shard_failures >= 2
+               and chaos.stragglers >= 1)
+    ok = (completed_all and degradation <= 2.0 and engaged
+          and replay_identical and empty_parity)
+    return {
+        "n_workflows": n_workflows,
+        "rate": rate,
+        "n_devices": n_devices,
+        "seed": seed,
+        "fault_plan": chaos_fault_plan(seed).to_dict(),
+        "runs": chaos_summary({"fault-free": base, "chaos": chaos}),
+        "completed_all": completed_all,
+        "degradation": degradation,
+        "replay_identical": replay_identical,
+        "empty_plan_parity": empty_parity,
+        "pass": ok,
+    }
+
+
 def _profile_parity(profile, width: int = 16, n_devices: int = 8,
                     horizon: int = 3) -> bool:
     """Bit-identical placements under a FIXED calibration profile.
@@ -610,6 +703,11 @@ def main() -> None:
                          "round-trip, >=2x probe-error reduction vs "
                          "hand-set constants, fixed-profile parity); "
                          "writes CALIBRATION_profile.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the chaos fault-tolerance gate (100%% "
+                         "completion under a seeded fault script, <=2x "
+                         "makespan degradation, bit-identical replay, "
+                         "empty-plan parity); writes BENCH_chaos.json")
     ap.add_argument("--config", default=None, metavar="PATH",
                     help="run the overloaded serving trace from a "
                          "serialized SchedulerConfig JSON (e.g. the "
@@ -729,6 +827,30 @@ def main() -> None:
               f"across score paths: {cal['profile_parity']}  ->  "
               f"{'PASS' if cal['pass'] else 'FAIL'}  [{profile_path}]")
         ok = ok and cal["pass"]
+        report["pass"] = ok
+    if args.chaos:
+        # fixed trace size as in --serve-slo: the chaos gate is
+        # defined on the overloaded n=18 burst; the full chaos report
+        # goes to its own artifact next to BENCH_sched.json
+        chaos = run_chaos()
+        chaos_path = Path(args.out).parent / "BENCH_chaos.json"
+        chaos_path.write_text(json.dumps(chaos, indent=2) + "\n")
+        report["chaos"] = chaos
+        for label, row in chaos["runs"].items():
+            print(f"chaos: {label:10s} "
+                  f"completed={row['n_completed']}/{row['n_completed'] + row['n_failed']} "
+                  f"horizon={row['horizon']:.1f}s "
+                  f"downs={row['device_downs']} "
+                  f"failures={row['shard_failures']} "
+                  f"retries={row['retries']} "
+                  f"stragglers={row['stragglers']} "
+                  f"spec={row['speculations']}")
+        print(f"chaos: degradation {chaos['degradation']:.2f}x "
+              f"(<= 2x); replay identical: "
+              f"{chaos['replay_identical']}; empty-plan parity: "
+              f"{chaos['empty_plan_parity']}  ->  "
+              f"{'PASS' if chaos['pass'] else 'FAIL'}  [{chaos_path}]")
+        ok = ok and chaos["pass"]
         report["pass"] = ok
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")

@@ -81,6 +81,10 @@ class SLOConfig:
     # identical to the static one
     online_margin: bool = False
     margin_alpha: float = 0.4       # EWMA step of the ratio tracker
+    # ring-buffer cap on the predicted-vs-observed probe log (None =
+    # unbounded, the benchmark/test default; long-running serving
+    # deployments set a cap so the log cannot grow without bound)
+    probe_log_limit: Optional[int] = None
 
     def deadline(self, arrival: float, cp_lb: float) -> float:
         """Absolute completion deadline for a workflow with critical-path
@@ -133,17 +137,25 @@ class ProbeRecord:
         return abs(self.margin * self.predicted - self.observed)
 
 
-def stage_floor_costs(wf: Workflow, cluster) -> dict[str, float]:
+def stage_floor_costs(wf: Workflow, cluster,
+                      live: Optional[Sequence[int]] = None
+                      ) -> dict[str, float]:
     """Per-stage minimum base cost over eligible devices (seconds).
 
     State-free lower bound: ignores switches, transfers, queueing and
     every benefit term — the fastest any single device could run the
-    stage's full query batch.
+    stage's full query batch.  ``live`` (the reduced device set under
+    partial outage) restricts the minimum to live eligible devices;
+    stages whose every eligible device is down fall back to the full
+    eligible set so the bound stays finite.
     """
     out: dict[str, float] = {}
     q = wf.num_queries
     for sid, st in wf.stages.items():
         devs = st.eligible if st.eligible else cluster.ids()
+        if live is not None:
+            up = [d for d in devs if d in live]
+            devs = up or devs
         out[sid] = min(st.cost_on(d) * q / cluster.devices[d].speed
                        for d in devs)
     return out
@@ -277,15 +289,36 @@ class AdmissionController:
         self._efloor: dict[str, dict[str, float]] = {}
         self._cp: dict[str, float] = {}
         self._family: dict[str, str] = {}
+        # live-set generation the bound caches were computed under;
+        # a fault-epoch bump (device down/up) invalidates them all
+        self._fault_epoch = 0
 
     # -- cached critical-path bounds -------------------------------------
+    def _sync_fault_epoch(self, state: ExecutionState) -> None:
+        """Invalidate floor/tail/cp caches when the live set changed."""
+        ep = getattr(state, "fault_epoch", 0)
+        if ep != self._fault_epoch:
+            self._fault_epoch = ep
+            self._tails.clear()
+            self._floor.clear()
+            self._efloor.clear()
+            self._cp.clear()
+
     def tail_bounds(self, wf: Workflow,
                     state: ExecutionState) -> dict[str, float]:
         """Memoized :func:`stage_tail_bounds` for ``wf`` (also fills
-        the floor-cost and switch-aware critical-path caches)."""
+        the floor-cost and switch-aware critical-path caches).
+
+        Bounds are conditioned on the LIVE device set: under partial
+        outage the per-stage floors rise to the fastest surviving
+        device, so admission tightens instead of over-committing
+        against capacity that no longer exists.
+        """
+        self._sync_fault_epoch(state)
         t = self._tails.get(wf.wid)
         if t is None:
-            floor = stage_floor_costs(wf, state.cluster)
+            live = set(state.live_ids()) if state.down else None
+            floor = stage_floor_costs(wf, state.cluster, live=live)
             t = stage_tail_bounds(wf, state.cluster, floor=floor)
             self._tails[wf.wid] = t
             self._floor[wf.wid] = floor
@@ -367,6 +400,9 @@ class AdmissionController:
             finished_at=finish_t))
         if self.corrector is not None:
             self.corrector.observe(family, predicted, observed)
+        limit = self.slo.probe_log_limit
+        if limit is not None and len(self.probe_log) > limit:
+            del self.probe_log[: len(self.probe_log) - limit]
 
     def activation_work(self, wf: Workflow, state: ExecutionState,
                         done=frozenset()) -> float:
@@ -483,7 +519,8 @@ class AdmissionController:
             placed[p.sid] = fin
             my_busy += sum(max(0.0, sim.device_free(d) - before[d])
                            for d in p.devices)
-        release = min(sim.device_free(d) for d in cluster.ids())
+        live = sim.live_ids() if sim.down else cluster.ids()
+        release = min(sim.device_free(d) for d in live)
         completion = state.now
         for sid in wf.sources():
             if sid in placed:
@@ -491,7 +528,7 @@ class AdmissionController:
             else:           # solver deferred the source: it queues
                 est = max(release, state.now) + tails[sid]
             completion = max(completion, est)
-        n_dev = max(cluster.n, 1)
+        n_dev = max(len(live), 1)
         predicted = max(completion - state.now,
                         self._congestion_floor(wf, state, frontier))
         displacement = my_busy / n_dev
@@ -511,8 +548,10 @@ class AdmissionController:
         over all devices, as if the candidate finished last).  Their
         mean keeps light workflows admissible under heavy mixed load
         while still charging heavy arrivals for the queue they join.
+        Both bounds amortize over the LIVE device count, so admission
+        tightens under partial outage.
         """
-        n_dev = max(state.cluster.n, 1)
+        n_dev = max(state.n_live, 1)
         self.tail_bounds(wf, state)
         own = (sum(self._efloor[wf.wid].values())
                + self.activation_work(wf, state))
@@ -529,10 +568,10 @@ class AdmissionController:
         Predicted latency = mean device backlog + critical-path lower
         bound inflated by frontier contention (ready stages per
         device); displacement = the candidate's total floor work
-        amortized over the cluster.
+        amortized over the live cluster.
         """
         cluster = state.cluster
-        n_dev = max(cluster.n, 1)
+        n_dev = max(state.n_live, 1)
         avg_wait = state.backlog_seconds() / n_dev
         n_ready = len(frontier.ready(claimed)) + len(wf.sources())
         contention = max(1.0, n_ready / n_dev)

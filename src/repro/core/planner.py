@@ -145,6 +145,18 @@ class FrontierPlanner:
                                  self._shared_hint.items()
                                  if k[0][0] != wid}
 
+    def drop_device_hints(self, device: int) -> None:
+        """Scrub warm-start hints pointing at a downed device.
+
+        The exact solver skips infeasible hints anyway; dropping them
+        here keeps the hint dictionary from steering branch-and-bound
+        toward a device that no longer exists.
+        """
+        if self._shared_hint:
+            self._shared_hint = {k: d for k, d in
+                                 self._shared_hint.items()
+                                 if d != device}
+
     def plan(self, wf: Workflow, state: ExecutionState,
              ready: list[str]) -> list[Placement]:
         """Commit-and-advance planning (Algorithm 2): repeatedly solve
@@ -298,9 +310,9 @@ class FrontierPlanner:
         margin = (self.params.margin_factor * (base_sum / base_n)
                   if base_n else 1.0)
         for wid, fs, sids in per_wf:
-            rows, weights = self._rows_from_scores(fs, sids, margin,
-                                                   key_of=lambda s,
-                                                   w=wid: (w, s))
+            rows, weights = self._rows_from_scores(
+                self._mask_down(fs, sim), sids, margin,
+                key_of=lambda s, w=wid: (w, s))
             if rows:
                 hint = None
                 if self.warm_start and self._shared_hint:
@@ -331,6 +343,34 @@ class FrontierPlanner:
     # ------------------------------------------------------------------
     # vectorized wave
     # ------------------------------------------------------------------
+    @staticmethod
+    def _mask_down(fs: FrontierScores, state: ExecutionState
+                   ) -> FrontierScores:
+        """Solver view of a score table with downed devices excluded.
+
+        Returns ``fs`` unchanged on the (fault-free) fast path.  When
+        ``state.down`` is non-empty, a SHALLOW masked copy is built —
+        downed columns forced to ``NEG`` / ``inf`` / ineligible, every
+        row flagged constrained — so cached tables (the delta-rescore
+        seeds) are never mutated and the mask costs nothing once the
+        device recovers.
+        """
+        down = getattr(state, "down", None)
+        if not down:
+            return fs
+        pos = [j for j, d in enumerate(fs.devices) if d in down]
+        if not pos:
+            return fs
+        raw = fs.raw.copy()
+        raw[:, pos] = NEG
+        eft = fs.eft.copy()
+        eft[:, pos] = np.inf
+        eligible = fs.eligible.copy()
+        eligible[:, pos] = False
+        return dataclasses.replace(
+            fs, raw=raw, eft=eft, eligible=eligible,
+            constrained=[True] * len(fs.ready))
+
     def _rows_from_scores(self, fs: FrontierScores, ready: list[str],
                           margin: float, key_of=lambda s: s
                           ) -> tuple[list[tuple], list[np.ndarray]]:
@@ -383,7 +423,8 @@ class FrontierPlanner:
         margin = (self.params.margin_factor * (sum(flat) / len(flat))
                   if flat else 1.0)
 
-        rows, weights = self._rows_from_scores(fs, ready, margin)
+        rows, weights = self._rows_from_scores(
+            self._mask_down(fs, state), ready, margin)
         if not rows:
             return [], fs
 
@@ -427,6 +468,7 @@ class FrontierPlanner:
 
         rows: list[tuple] = []
         weights: list[np.ndarray] = []
+        down = getattr(state, "down", None) or ()
         for sid in ready:
             stage = wf.stages[sid]
             eligible = set(stage.eligible) if stage.eligible else None
@@ -435,6 +477,8 @@ class FrontierPlanner:
             raw = np.full(len(devices), NEG)
             efts = np.full(len(devices), np.inf)
             for j, d in enumerate(devices):
+                if d in down:
+                    continue
                 if eligible is not None and d not in eligible:
                     continue
                 raw[j] = scorer.planner_score(wf, stage, 0, d, 0.0)
@@ -449,6 +493,8 @@ class FrontierPlanner:
             for k in range(1, max_slots):
                 w = np.full(len(devices), NEG)
                 for j, d in enumerate(devices):
+                    if d in down:
+                        continue
                     if eligible is not None and d not in eligible:
                         continue
                     w[j] = scorer.planner_score(wf, stage, k, d, 0.0,
@@ -519,6 +565,8 @@ def _simulate_copy(state: ExecutionState) -> ExecutionState:
         output_loc=dict(state.output_loc),
         free_at=dict(state.free_at), now=state.now)
     sim.completed = set(state.completed)
+    sim.down = set(state.down)
+    sim.fault_epoch = state.fault_epoch
     return sim
 
 

@@ -143,6 +143,12 @@ class BasePolicy:
     def forget_workflow(self, wid: str) -> None:
         """Hook: release per-workflow caches (workflow retired)."""
 
+    def on_device_down(self, device: int, state: ExecutionState) -> None:
+        """Hook: ``device`` left the live set (crash or quarantine)."""
+
+    def on_device_up(self, device: int, state: ExecutionState) -> None:
+        """Hook: ``device`` rejoined the live set (recovery)."""
+
     # -- config-driven construction --------------------------------------
     @classmethod
     def from_config(cls, config: "SchedulerConfig",

@@ -67,6 +67,10 @@ class FATEPolicy(BasePolicy):
         """Release per-workflow planner caches (workflow retired)."""
         self.planner.forget_workflow(wid)
 
+    def on_device_down(self, device: int, state: ExecutionState) -> None:
+        """Scrub warm-start hints targeting the downed device."""
+        self.planner.drop_device_hints(device)
+
     @property
     def phase_ms(self):
         """Planner per-phase wall-time accumulators (benchmarks)."""

@@ -48,6 +48,7 @@ from typing import Callable, Iterator, Mapping, Optional, Sequence
 from repro.core.admission import AdmissionController, SLOConfig
 from repro.core.calibration import CalibrationProfile
 from repro.core.costs import CostModel, CostParams
+from repro.core.faults import DeviceHealth, FaultInjector, FaultPlan
 from repro.core.planner import Placement
 from repro.core.scoring import ScoreParams
 from repro.core.state import ExecutionState
@@ -114,7 +115,17 @@ class SchedulerConfig:
       / ``max_waves`` — planner switches (see
       :class:`~repro.core.planner.FrontierPlanner`);
     * ``replan_on_completion`` — revoke unissued commitments on every
-      completion batch (the serving replan trigger).
+      completion batch (the serving replan trigger);
+    * ``faults`` — a :class:`~repro.core.faults.FaultPlan` driving
+      deterministic fault injection (device crashes, transient shard
+      failures, slowdown/straggler episodes) plus the retry /
+      quarantine / speculation recovery knobs; ``None`` (default)
+      disables the fault machinery entirely and an EMPTY plan arms it
+      without injecting anything — both are bit-identical to the
+      fault-free scheduler (serving mode only; ignored by ``batch``);
+    * ``event_buffer`` — ring-buffer cap on the retained event stream
+      (``None`` = unbounded); long-running serving deployments set a
+      cap so :attr:`Scheduler.events` cannot grow without bound.
 
     ``to_json``/``from_json`` round-trip the whole object — including
     the embedded calibration profile — so a benchmark gate can be
@@ -134,6 +145,8 @@ class SchedulerConfig:
     warm_start: bool = True
     max_waves: Optional[int] = None
     replan_on_completion: bool = True
+    faults: Optional[FaultPlan] = None
+    event_buffer: Optional[int] = None
 
     # -- lowering --------------------------------------------------------
     def effective_cost_params(self) -> Optional[CostParams]:
@@ -191,6 +204,9 @@ class SchedulerConfig:
             "warm_start": self.warm_start,
             "max_waves": self.max_waves,
             "replan_on_completion": self.replan_on_completion,
+            "faults": (self.faults.to_dict()
+                       if self.faults is not None else None),
+            "event_buffer": self.event_buffer,
         }
         return json.dumps(doc, indent=2, sort_keys=True) + "\n"
 
@@ -222,6 +238,9 @@ class SchedulerConfig:
             max_waves=doc.get("max_waves"),
             replan_on_completion=bool(
                 doc.get("replan_on_completion", True)),
+            faults=(FaultPlan.from_dict(doc["faults"])
+                    if doc.get("faults") is not None else None),
+            event_buffer=doc.get("event_buffer"),
         )
 
     def save(self, path) -> Path:
@@ -323,10 +342,127 @@ class CompletionEvent(SchedulerEvent):
     workflow_done: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class DeviceDownEvent(SchedulerEvent):
+    """A device left the live set (``reason``: ``"crash"`` fail-stop —
+    its residency/prefix/queue state was wiped — or ``"quarantine"``
+    after repeated transient failures, state kept warm).
+    ``recover_at`` is the scheduled rejoin time when known;
+    ``n_revoked`` counts committed-but-unissued placements on the
+    device that were revoked back into the merged solve."""
+    device: int
+    reason: str = "crash"
+    recover_at: Optional[float] = None
+    n_revoked: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceRecoveredEvent(SchedulerEvent):
+    """A downed device rejoined the live set (cold after a crash,
+    warm after a quarantine)."""
+    device: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardFailedEvent(SchedulerEvent):
+    """An issued stage execution failed before completing (``reason``:
+    ``"transient"`` injected shard failure, or ``"device_down"`` when
+    a device crashed mid-run).  ``attempt`` is the 0-based attempt
+    index that failed; the stage re-enters the frontier after
+    backoff."""
+    wid: str
+    sid: str
+    devices: tuple
+    reason: str = "transient"
+    attempt: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryEvent(SchedulerEvent):
+    """A failed stage's backoff expired: attempt ``attempt`` is now
+    eligible for replanning (``backoff`` seconds after the failure)."""
+    wid: str
+    sid: str
+    attempt: int
+    backoff: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedEvent(SchedulerEvent):
+    """Graceful-degradation marker.  ``kind="straggler"``: an issued
+    stage blew past its timeout and (when enabled) a speculative copy
+    was re-issued on the best alternate device; ``kind="gave_up"``: a
+    stage exhausted its retry budget and its workflow was failed out
+    of the frontier."""
+    kind: str
+    wid: Optional[str] = None
+    sid: Optional[str] = None
+    device: Optional[int] = None
+
+
 #: Every concrete event type, in lifecycle order (docs/tests anchor).
 EVENT_TYPES = (ArrivalEvent, AdmittedEvent, DeferredEvent,
                RejectedEvent, PlacementEvent, IssueEvent,
-               PreemptionEvent, CompletionEvent)
+               PreemptionEvent, CompletionEvent, DeviceDownEvent,
+               DeviceRecoveredEvent, ShardFailedEvent, RetryEvent,
+               DegradedEvent)
+
+
+class EventLog:
+    """Append-only event buffer with an optional ring cap.
+
+    List-like for reads: ``len`` / iteration / indexing cover the
+    RETAINED window (everything, when ``maxlen`` is ``None``), and
+    equality compares against any iterable of events.  With a cap, the
+    oldest events are dropped as new ones arrive; ``n_total`` counts
+    every event ever appended and ``n_dropped`` how many fell off the
+    ring, so :meth:`Scheduler.stream` can keep yielding from absolute
+    positions while the window slides.
+    """
+
+    def __init__(self, maxlen: Optional[int] = None):
+        if maxlen is not None and maxlen < 1:
+            raise ValueError(f"event_buffer must be >= 1, got {maxlen}")
+        self.maxlen = maxlen
+        self.n_total = 0
+        self.n_dropped = 0
+        self._items: list[SchedulerEvent] = []
+
+    def append(self, ev: SchedulerEvent) -> None:
+        """Append one event, evicting the oldest past the cap."""
+        self._items.append(ev)
+        self.n_total += 1
+        if self.maxlen is not None and len(self._items) > self.maxlen:
+            drop = len(self._items) - self.maxlen
+            del self._items[:drop]
+            self.n_dropped += drop
+
+    def since(self, n: int) -> list:
+        """Retained events with absolute index ``>= n``, oldest first
+        (events already evicted from the ring are silently absent)."""
+        return self._items[max(0, n - self.n_dropped):]
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def __getitem__(self, i):
+        return self._items[i]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, EventLog):
+            return self._items == other._items
+        try:
+            return self._items == list(other)
+        except TypeError:
+            return NotImplemented
+
+    def __repr__(self) -> str:
+        cap = "" if self.maxlen is None else f", maxlen={self.maxlen}"
+        return (f"EventLog(n={len(self._items)}, "
+                f"total={self.n_total}{cap})")
 
 
 # ---------------------------------------------------------------------------
@@ -366,11 +502,17 @@ class RunResult:
 
 
 def _greedy_fallback(state: ExecutionState, cm: CostModel, wf: Workflow,
-                     sid: str) -> Placement:
+                     sid: str) -> Optional[Placement]:
     """Liveness fallback shared by both runtimes: place one ready stage
-    on the device minimizing state-corrected cost plus queueing."""
+    on the LIVE device minimizing state-corrected cost plus queueing
+    (``None`` when every eligible device is down — the caller waits on
+    a pending recovery event instead)."""
     st = wf.stages[sid]
     devs = list(st.eligible) if st.eligible else state.cluster.ids()
+    if state.down:
+        devs = [d for d in devs if d not in state.down]
+        if not devs:
+            return None
     best = min(devs, key=lambda d: (
         cm.effective_cost(wf, st, d, wf.num_queries)
         + state.wait_time(d)))
@@ -378,14 +520,27 @@ def _greedy_fallback(state: ExecutionState, cm: CostModel, wf: Workflow,
 
 
 def _issue_shards(state: ExecutionState, cm: CostModel, wf: Workflow,
-                  st: Stage, p: Placement
-                  ) -> tuple[list[float], list[bool]]:
+                  st: Stage, p: Placement,
+                  slow: Optional[dict] = None,
+                  fail_frac: Optional[float] = None
+                  ) -> tuple[list[float], list[bool], list[float]]:
     """Start one placement's shards: per-device state-corrected duration
     (base + switch + transfer − prefix − locality, plus coordination
     overhead when sharded), applied to (ρ, κ, τ) through the dirty-set
-    mutators.  The single duration model shared by both runtimes."""
+    mutators.  The single duration model shared by both runtimes.
+
+    Fault hooks (both ``None`` on the fault-free path, which is then
+    bit-identical to the historical behavior): ``slow`` maps devices to
+    slowdown factors the ACTUAL execution suffers (the scheduler's
+    belief — the third returned list — stays unslowed, which is what
+    straggler detection keys off); ``fail_frac`` truncates the attempt
+    at that fraction of its actual duration (the failure instant) and
+    suppresses prefix warming — a failed attempt produces no reusable
+    cache state.
+    """
     shard_fin: list[float] = []
     switched: list[bool] = []
+    believed: list[float] = []
     for d, nq in zip(p.devices, p.shard_sizes):
         was_resident = state.is_resident(st.model, d)
         t0 = max(state.now, state.device_free(d))
@@ -398,14 +553,19 @@ def _issue_shards(state: ExecutionState, cm: CostModel, wf: Workflow,
             dur += (cm.base_cost(st, d, wf.num_queries)
                     * cm.p.shard_overhead)
         dur = max(dur, 1e-6)
+        believed.append(t0 + dur)
+        if slow is not None:
+            dur *= slow.get(d, 1.0)
+        if fail_frac is not None:
+            dur = max(dur * fail_frac, 1e-6)
         fin = t0 + dur
         state.set_free_at(d, fin)
         state.set_resident(d, st.model)
-        if st.keep_cache:
+        if st.keep_cache and fail_frac is None:
             state.warm_prefix(d, st.prefix_group, st.model, nq, fin)
         shard_fin.append(fin)
         switched.append(not was_resident)
-    return shard_fin, switched
+    return shard_fin, switched, believed
 
 
 # ---------------------------------------------------------------------------
@@ -519,6 +679,11 @@ class ServingResult:
     ``rejected`` lists workflows the admission controller shed (never
     executed); ``deferrals``/``preemptions`` count control-plane
     interventions.  All three stay empty/zero without an SLO config.
+    ``failed`` lists admitted workflows that exhausted their retry
+    budget under fault injection; the fault counters
+    (``device_downs``/``shard_failures``/``retries``/``stragglers``/
+    ``speculations``) stay zero without a
+    :class:`~repro.core.faults.FaultPlan`.
     """
     stats: dict[str, WorkflowServeStats]
     horizon: float                     # first arrival -> last completion
@@ -528,11 +693,18 @@ class ServingResult:
     rejected: list[str] = dataclasses.field(default_factory=list)
     deferrals: int = 0
     preemptions: int = 0
+    failed: list[str] = dataclasses.field(default_factory=list)
+    device_downs: int = 0
+    shard_failures: int = 0
+    retries: int = 0
+    stragglers: int = 0
+    speculations: int = 0
 
     @property
     def n_offered(self) -> int:
-        """Workflows offered by the trace: completed + rejected."""
-        return len(self.stats) + len(self.rejected)
+        """Workflows offered by the trace: completed + rejected +
+        failed-under-faults (failures count against attainment)."""
+        return len(self.stats) + len(self.rejected) + len(self.failed)
 
     @property
     def slo_attainment(self) -> float:
@@ -646,7 +818,7 @@ class Scheduler:
             if self.slo is not None else None)
 
         # event stream ---------------------------------------------------
-        self.events: list[SchedulerEvent] = []
+        self.events = EventLog(self.config.event_buffer)
         self._handlers: list[tuple[type, Callable]] = []
 
         # run state ------------------------------------------------------
@@ -680,6 +852,40 @@ class Scheduler:
         self._same_model: dict[str, float] = {}
         self.result: Optional[ServingResult] = None
 
+        # fault machinery (serving mode only; None everywhere on the
+        # fault-free path, whose behavior is bit-identical to pre-fault
+        # schedulers) -----------------------------------------------------
+        self.faults: Optional[FaultPlan] = (None if batch
+                                            else self.config.faults)
+        self.injector: Optional[FaultInjector] = None
+        self.health: Optional[DeviceHealth] = None
+        self.failed: list[str] = []
+        self.device_downs = 0
+        self.shard_failures = 0
+        self.retries = 0
+        self.stragglers = 0
+        self.speculations = 0
+        # per-stage execution generation: pending heap events carry the
+        # token they were issued under, so a failure (token bump)
+        # invalidates the stale finish/timeout events still in flight
+        self._run_token: dict[StageKey, int] = {}
+        self._attempts: dict[StageKey, int] = {}
+        # retry backoff holds: stage key -> earliest replan time
+        self._hold: dict[StageKey, float] = {}
+        self._submitted: set[str] = set()
+        if self.faults is not None:
+            self.injector = FaultInjector(self.faults)
+            self.health = DeviceHealth(self.faults)
+            for crash in self.faults.crashes:
+                heapq.heappush(self._heap, (crash.at, self._seq,
+                                            self._seq, "crash", crash))
+                self._seq += 1
+                if crash.recover_at is not None:
+                    heapq.heappush(self._heap,
+                                   (crash.recover_at, self._seq,
+                                    self._seq, "recover", crash.device))
+                    self._seq += 1
+
     # -- clock -----------------------------------------------------------
     @property
     def now(self) -> float:
@@ -710,13 +916,19 @@ class Scheduler:
 
     def stream(self) -> Iterator[SchedulerEvent]:
         """Drive the scheduler to quiescence lazily, yielding each
-        event as it is emitted (one :meth:`step` per batch)."""
-        idx = len(self.events)
+        event as it is emitted (one :meth:`step` per batch).
+
+        Positions are absolute (ring-buffer safe): with a configured
+        ``event_buffer`` cap, events evicted between steps are skipped
+        rather than re-yielded or crashed on.
+        """
+        seen = self.events.n_total
         while True:
             progressed = self.step()
-            while idx < len(self.events):
-                yield self.events[idx]
-                idx += 1
+            if self.events.n_total > seen:
+                for ev in self.events.since(seen):
+                    yield ev
+                seen = self.events.n_total
             if not progressed:
                 return
 
@@ -734,7 +946,25 @@ class Scheduler:
         outcome).  ``klass`` names the admission class recorded on the
         workflow's stats (one scheduling class today; the hook for
         per-class weighted SLOs).  Returns the workflow id.
+
+        Raises ``ValueError`` on a duplicate ``wf.wid`` (stats and
+        arrivals are keyed by wid for the whole run, so a reused id
+        would silently clobber them) and on negative ``at`` or
+        ``deadline`` (the simulated clock starts at zero).
         """
+        if wf.wid in self._submitted:
+            raise ValueError(
+                f"duplicate workflow id submitted: {wf.wid!r}")
+        if at is not None and float(at) < 0.0:
+            raise ValueError(
+                f"negative arrival time at={at!r} for {wf.wid!r}; "
+                f"the simulated clock starts at 0.0")
+        if deadline is not None and float(deadline) < 0.0:
+            raise ValueError(
+                f"negative deadline {deadline!r} for {wf.wid!r}; "
+                f"deadlines are absolute times on a clock that "
+                f"starts at 0.0")
+        self._submitted.add(wf.wid)
         t = self.state.now if at is None else float(at)
         # batch mode replicates the historical batch executor's heap
         # ordering: ties between simultaneous completions break by
@@ -807,7 +1037,12 @@ class Scheduler:
                             - self._switches_before),
             rejected=list(adm.rejected) if adm is not None else [],
             deferrals=adm.n_deferrals if adm is not None else 0,
-            preemptions=self.preemptions)
+            preemptions=self.preemptions,
+            failed=list(self.failed),
+            device_downs=self.device_downs,
+            shard_failures=self.shard_failures,
+            retries=self.retries, stragglers=self.stragglers,
+            speculations=self.speculations)
         return self.result
 
     def batch_result(self, wid: str) -> RunResult:
@@ -832,7 +1067,12 @@ class Scheduler:
     # -- internals -------------------------------------------------------
     def _guard_limit(self) -> int:
         factor = 40 if self.batch else 60
-        return factor * max(self._n_total_stages, 1) + 1000
+        limit = factor * max(self._n_total_stages, 1) + 1000
+        if self.injector is not None:
+            # retries, speculation, and crash replans legitimately
+            # multiply the per-stage tick count under fault injection
+            limit += 20 * max(self._n_total_stages, 1) + 2000
+        return limit
 
     def _claimed_keys(self) -> set[StageKey]:
         return self.issued | {(p.wid, p.sid) for p in self.committed}
@@ -849,6 +1089,9 @@ class Scheduler:
             return False
         st = self.frontier.workflows[p.wid].stages[p.sid]
         if any(par not in done for par in st.parents):
+            return False
+        if self.state.down and any(d in self.state.down
+                                   for d in p.devices):
             return False
         return all(self.state.device_free(d) <= self.state.now + 1e-12
                    for d in p.devices)
@@ -877,18 +1120,42 @@ class Scheduler:
             self._same_model[p.wid] = \
                 self._same_model.get(p.wid, 0.0) + res_frac
 
-        shard_fin, switched = _issue_shards(state, self.cm, wf, st, p)
-        fin_all = max(shard_fin)
         key = (p.wid, p.sid)
-        self.runs[key] = StageRun(p, state.now, fin_all,
-                                  tuple(shard_fin), tuple(switched))
-        self._wf_finish[p.wid] = max(self._wf_finish.get(p.wid, 0.0),
-                                     fin_all)
+        slow = fail_frac = None
+        attempt = 0
+        if self.injector is not None:
+            attempt = self._attempts.get(key, 0)
+            slow = self.injector.slow_map(p.devices, state.now)
+            fail_frac = self.injector.failure_fraction(
+                p.wid, p.sid, p.devices, attempt)
+        shard_fin, switched, believed = _issue_shards(
+            state, self.cm, wf, st, p, slow=slow, fail_frac=fail_frac)
+        fin_all = max(shard_fin)
+        token = self._run_token.get(key, 0)
+        run = StageRun(p, state.now, fin_all,
+                       tuple(shard_fin), tuple(switched))
+        self.runs[key] = run
         self.issued.add(key)
         prio = p.sid if self.batch else self._seq
-        heapq.heappush(self._heap, (fin_all, prio, self._seq, "finish",
-                                    key))
+        kind = "finish" if fail_frac is None else "fail"
+        heapq.heappush(self._heap, (fin_all, prio, self._seq, kind,
+                                    (key, token, run)))
         self._seq += 1
+        if (self.injector is not None and not self.batch
+                and self.faults.straggler_threshold > 0.0):
+            # schedule a straggler probe at threshold x the believed
+            # (fault-free) duration; elide it when the actual finish
+            # provably beats it (healthy stage — no timeout can fire)
+            horizon = max(believed) - state.now
+            if horizon > 1e-9:
+                t_out = (state.now
+                         + self.faults.straggler_threshold * horizon)
+                if t_out < fin_all - 1e-9:
+                    heapq.heappush(
+                        self._heap,
+                        (t_out, self._seq, self._seq, "timeout",
+                         (key, token)))
+                    self._seq += 1
         self._emit(IssueEvent(t=state.now, wid=p.wid, sid=p.sid,
                               devices=p.devices, start=state.now,
                               finish=fin_all))
@@ -960,6 +1227,14 @@ class Scheduler:
         wf = self.frontier.workflows[wid]
         st = wf.stages[sid]
         run = self.runs[key]
+        # workflow finish tracks only SUCCESSFUL attempts (a failed
+        # attempt's projected finish never materialises)
+        self._wf_finish[wid] = max(self._wf_finish.get(wid, 0.0),
+                                   run.finish)
+        if self.health is not None:
+            for d in run.placement.devices:
+                self.health.record_success(d)
+        self._attempts.pop(key, None)
         state.output_loc[(wid, sid)] = run.placement.devices
         state.completed.add((wid, sid))
         if not st.children:          # sink: per-query completion
@@ -1041,6 +1316,209 @@ class Scheduler:
                                      deadline=dec.deadline))
         self._emit_new_rejections("admission")
 
+    # -- fault handling ---------------------------------------------------
+    def _held(self, key: StageKey, now: float) -> bool:
+        """True while ``key`` sits in retry backoff (lazily clears
+        expired holds)."""
+        t = self._hold.get(key)
+        if t is None:
+            return False
+        if t <= now + 1e-12:
+            del self._hold[key]
+            return False
+        return True
+
+    def _on_shard_failed(self, key: StageKey, token: int, run: StageRun,
+                         reason: str) -> None:
+        """A stage attempt failed (transient shard fault or device
+        crash): invalidate the in-flight run, count the attempt, trip
+        quarantine, and schedule a backed-off retry or give up."""
+        if key not in self.issued or token != self._run_token.get(key, 0):
+            return                      # stale event (already handled)
+        wid, sid = key
+        self.issued.discard(key)
+        self._run_token[key] = token + 1
+        attempt = self._attempts.get(key, 0) + 1
+        self._attempts[key] = attempt
+        self.shard_failures += 1
+        self._emit(ShardFailedEvent(t=self.state.now, wid=wid, sid=sid,
+                                    devices=run.placement.devices,
+                                    reason=reason, attempt=attempt - 1))
+        if reason == "transient" and self.health is not None:
+            for d in run.placement.devices:
+                if self.health.record_failure(d):
+                    self._quarantine(d)
+        if attempt > self.faults.max_retries:
+            self._fail_workflow(wid, sid)
+            return
+        backoff = self.faults.backoff(attempt)
+        t_r = self.state.now + backoff
+        self._hold[key] = t_r
+        heapq.heappush(self._heap, (t_r, self._seq, self._seq, "retry",
+                                    (key, attempt, backoff)))
+        self._seq += 1
+
+    def _on_retry(self, key: StageKey, attempt: int,
+                  backoff: float) -> None:
+        """Backoff expired: release the hold so the stage re-enters
+        the ready frontier (the settle loop replans it)."""
+        self._hold.pop(key, None)
+        wid, sid = key
+        if wid not in self.frontier.workflows:
+            return                      # workflow failed/retired since
+        self.retries += 1
+        self._emit(RetryEvent(t=self.state.now, wid=wid, sid=sid,
+                              attempt=attempt, backoff=backoff))
+
+    def _on_timeout(self, key: StageKey, token: int) -> None:
+        """Straggler probe fired before the stage finished: emit a
+        degraded-mode event and (optionally) speculatively re-issue a
+        single-device copy on the best live alternate.  First valid
+        finish wins — both copies share the run token, and
+        :meth:`_finish` discards ``key`` from ``issued``, making the
+        loser's event stale."""
+        if key not in self.issued or token != self._run_token.get(key, 0):
+            return                      # finished or failed already
+        state = self.state
+        run = self.runs[key]
+        wid, sid = key
+        self.stragglers += 1
+        self._emit(DegradedEvent(t=state.now, kind="straggler",
+                                 wid=wid, sid=sid,
+                                 device=run.placement.devices[0]))
+        if not self.faults.speculate:
+            return
+        wf = self.frontier.workflows.get(wid)
+        if wf is None:
+            return
+        st = wf.stages[sid]
+        cand = [d for d in (st.eligible or state.cluster.ids())
+                if d not in state.down
+                and d not in run.placement.devices]
+        if not cand:
+            return
+        best = min(cand, key=lambda d: (
+            self.cm.effective_cost(wf, st, d, wf.num_queries)
+            + state.wait_time(d), d))
+        p2 = Placement(wid=wid, sid=sid, devices=(best,),
+                       shard_sizes=(wf.num_queries,))
+        slow = self.injector.slow_map((best,), state.now)
+        shard_fin, switched, _ = _issue_shards(state, self.cm, wf, st,
+                                               p2, slow=slow)
+        fin2 = max(shard_fin)
+        run2 = StageRun(p2, state.now, fin2, tuple(shard_fin),
+                        tuple(switched))
+        heapq.heappush(self._heap, (fin2, self._seq, self._seq,
+                                    "finish", (key, token, run2)))
+        self._seq += 1
+        self.speculations += 1
+        self._emit(IssueEvent(t=state.now, wid=wid, sid=sid,
+                              devices=p2.devices, start=state.now,
+                              finish=fin2))
+
+    def _on_device_crash(self, crash) -> None:
+        """Planned device crash fired: fail every in-flight stage
+        touching the device (freeing surviving shard devices), evict
+        the device from the live set (wiping its residency/prefix
+        state), revoke committed placements on it, and force a full
+        replan of the merged frontier."""
+        state = self.state
+        d = crash.device
+        if d in state.down:
+            return
+        for key in sorted(k for k in self.issued
+                          if d in self.runs[k].placement.devices):
+            run = self.runs[key]
+            for sd in run.placement.devices:
+                if sd != d:
+                    state.set_free_at(sd, state.now)
+            self._on_shard_failed(key, self._run_token.get(key, 0),
+                                  run, "device_down")
+        state.mark_down(d, wipe=True)
+        self.device_downs += 1
+        n = self._revoke_on_device(d)
+        hook = getattr(self.policy, "on_device_down", None)
+        if hook is not None:
+            hook(d, state)
+        self._emit(DeviceDownEvent(t=state.now, device=d,
+                                   reason="crash",
+                                   recover_at=crash.recover_at,
+                                   n_revoked=n))
+        self.committed.clear()          # failure-aware replan
+
+    def _on_device_recover(self, d: int) -> None:
+        """Device rejoined (crash recovery or quarantine expiry):
+        restore it to the live set and replan to use it."""
+        state = self.state
+        if d not in state.down:
+            return
+        state.mark_up(d)
+        if self.health is not None:
+            self.health.reset(d)
+        hook = getattr(self.policy, "on_device_up", None)
+        if hook is not None:
+            hook(d, state)
+        self._emit(DeviceRecoveredEvent(t=state.now, device=d))
+        self.committed.clear()          # replan onto the wider set
+
+    def _quarantine(self, d: int) -> None:
+        """Health tracker tripped on ``d``: temporarily evict it
+        (keeping its caches — the device is sick, not gone) and
+        schedule its automatic recovery."""
+        state = self.state
+        if d in state.down:
+            return
+        state.mark_down(d, wipe=False)
+        self.device_downs += 1
+        recover_at = state.now + self.faults.quarantine_s
+        heapq.heappush(self._heap, (recover_at, self._seq, self._seq,
+                                    "recover", d))
+        self._seq += 1
+        n = self._revoke_on_device(d)
+        hook = getattr(self.policy, "on_device_down", None)
+        if hook is not None:
+            hook(d, state)
+        self._emit(DeviceDownEvent(t=state.now, device=d,
+                                   reason="quarantine",
+                                   recover_at=recover_at, n_revoked=n))
+
+    def _revoke_on_device(self, d: int) -> int:
+        """Withdraw committed-but-unissued placements touching ``d``
+        (no execution state was mutated for them) and notify the
+        policy's preemption hook.  Returns the revoked count."""
+        revoked = [p for p in self.committed if d in p.devices]
+        if not revoked:
+            return 0
+        self.committed = [p for p in self.committed
+                          if d not in p.devices]
+        hook = getattr(self.policy, "on_preempt", None)
+        if hook is not None:
+            hook(revoked, self.state)
+        return len(revoked)
+
+    def _fail_workflow(self, wid: str, sid: str) -> None:
+        """Retry budget exhausted on ``(wid, sid)``: give the whole
+        workflow up.  Invalidates its in-flight runs, scrubs its
+        commitments/holds, retires it from the frontier, and records
+        it on :attr:`failed` (reported by :meth:`drain`)."""
+        for key in sorted(k for k in self.issued if k[0] == wid):
+            self.issued.discard(key)
+            self._run_token[key] = self._run_token.get(key, 0) + 1
+        self.committed = [p for p in self.committed if p.wid != wid]
+        for key in [k for k in self._hold if k[0] == wid]:
+            del self._hold[key]
+        for key in [k for k in self._attempts if k[0] == wid]:
+            del self._attempts[key]
+        if wid in self.frontier.workflows:
+            self.frontier.retire(wid)
+        self.failed.append(wid)
+        if hasattr(self.policy, "forget_workflow"):
+            self.policy.forget_workflow(wid)
+        if self.admission is not None:
+            self.admission.forget(wid)
+        self._emit(DegradedEvent(t=self.state.now, kind="gave_up",
+                                 wid=wid, sid=sid))
+
     def _tick(self, advance: bool = True) -> str:
         """One pass of the commit-and-advance loop.
 
@@ -1060,6 +1538,11 @@ class Scheduler:
         self._issue_all()
         # 2. plan when claimed actions cannot cover the frontier
         ready = self.frontier.ready(self._claimed_keys())
+        if self._hold:
+            # stages in retry backoff stay out of the plan; a "retry"
+            # heap event guarantees the clock reaches their release
+            ready = [k for k in ready
+                     if not self._held(k, state.now)]
         pool_feasible = any(
             all(par in self.frontier.completed[p.wid]
                 for par in self.frontier.workflows[p.wid]
@@ -1073,8 +1556,9 @@ class Scheduler:
                 # liveness fallback: greedily place the single best
                 # ready stage by state-corrected cost
                 wid, sid = ready[0]
-                new = [_greedy_fallback(
-                    state, self.cm, self.frontier.workflows[wid], sid)]
+                fb = _greedy_fallback(
+                    state, self.cm, self.frontier.workflows[wid], sid)
+                new = [fb] if fb is not None else []
             if new:
                 for p in new:
                     self._emit(PlacementEvent(
@@ -1116,21 +1600,45 @@ class Scheduler:
         completed_any = False
         if self.batch:
             # batch semantics: one completion per clock advance (plan
-            # between same-instant completions, as Algorithm 2 does)
+            # between same-instant completions, as Algorithm 2 does);
+            # fault injection is serving-only, so the only kinds are
+            # "arrive" and always-valid "finish"
             _, _, _, kind, payload = heapq.heappop(self._heap)
             if kind == "arrive":
                 self._process_arrival(payload)
             else:
-                self._finish(payload)
+                key, _token, run = payload
+                self.runs[key] = run
+                self._finish(key)
                 completed_any = True
         else:
             while self._heap and self._heap[0][0] <= t + 1e-12:
                 _, _, _, kind, payload = heapq.heappop(self._heap)
                 if kind == "arrive":
                     self._process_arrival(payload)
-                else:
-                    self._finish(payload)
-                    completed_any = True
+                elif kind == "finish":
+                    key, token, run = payload
+                    if key in self.issued \
+                            and token == self._run_token.get(key, 0):
+                        # first valid finish wins (speculative copies
+                        # share the token; the discard below makes
+                        # the loser's event stale)
+                        self.runs[key] = run
+                        self._finish(key)
+                        completed_any = True
+                elif kind == "fail":
+                    key, token, run = payload
+                    self._on_shard_failed(key, token, run, "transient")
+                elif kind == "retry":
+                    key, attempt, backoff = payload
+                    self._on_retry(key, attempt, backoff)
+                elif kind == "timeout":
+                    key, token = payload
+                    self._on_timeout(key, token)
+                elif kind == "crash":
+                    self._on_device_crash(payload)
+                else:               # "recover"
+                    self._on_device_recover(payload)
         if completed_any and adm is not None:
             # re-admission sweep: freed capacity may now fit the
             # oldest deferred arrivals (one per sweep so each

@@ -77,6 +77,12 @@ class ExecutionState:
     same_model_continuations: int = 0
     total_tasks: int = 0
     model_switches: int = 0
+    # fault domain: devices currently out of the live set (crashed or
+    # quarantined), and a monotone epoch bumped on every membership
+    # change so per-cluster caches (admission floors, deadlines) know
+    # to invalidate.  Empty set / epoch 0 on every fault-free run.
+    down: set = dataclasses.field(default_factory=set)
+    fault_epoch: int = 0
 
     def __post_init__(self) -> None:
         for d in self.cluster.ids():
@@ -170,6 +176,43 @@ class ExecutionState:
         new arrival waits before its first stage can start."""
         return sum(self.wait_time(d) for d in self.cluster.ids())
 
+    # -- fault domain -----------------------------------------------------
+    def live_ids(self) -> list[int]:
+        """Device ids currently in the live set (cluster minus down)."""
+        if not self.down:
+            return self.cluster.ids()
+        return [d for d in self.cluster.ids() if d not in self.down]
+
+    @property
+    def n_live(self) -> int:
+        """Number of live devices (``cluster.n`` minus downed)."""
+        return self.cluster.n - len(self.down)
+
+    def mark_down(self, device: int, *, wipe: bool = True) -> None:
+        """Evict ``device`` from the live set (crash or quarantine).
+
+        ``wipe=True`` (fail-stop crash) destroys the device's residency
+        ρ, warm-prefix table κ, and queued busy time τ — HBM contents do
+        not survive a crash.  ``wipe=False`` (quarantine) keeps state
+        warm; the device merely stops receiving new work.  Either way
+        the device is marked dirty so delta rescoring repairs its
+        columns, and the fault epoch is bumped so dependent caches
+        invalidate.
+        """
+        self.down.add(device)
+        self.fault_epoch += 1
+        if wipe:
+            self.residency[device] = None
+            self.prefix[device] = {}
+            self.free_at[device] = self.now
+        self.touch_device(device)
+
+    def mark_up(self, device: int) -> None:
+        """Return ``device`` to the live set (recovery)."""
+        self.down.discard(device)
+        self.fault_epoch += 1
+        self.touch_device(device)
+
     # -- planning views --------------------------------------------------
     def overlay(self) -> "PlanningOverlay":
         """Copy-on-write view for commit-and-advance planning."""
@@ -231,6 +274,8 @@ class PlanningOverlay(ExecutionState):
         self.same_model_continuations = base.same_model_continuations
         self.total_tasks = base.total_tasks
         self.model_switches = base.model_switches
+        self.down = set(base.down)
+        self.fault_epoch = base.fault_epoch
         self._base = base
         self._prefix_own: set[int] = set()
         # fresh, overlay-local dirty set: it records ONLY this planning

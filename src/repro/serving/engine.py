@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.calibration import CalibrationProfile, StageObservation
 from repro.core.costs import CostParams
+from repro.core.faults import FaultInjector, TransientStageFailure
 from repro.core.planner import Placement
 from repro.core.state import ExecutionState
 from repro.core.workflow import (DEFAULT_PROFILES, ModelProfile, Stage,
@@ -149,13 +150,22 @@ class ServingEngine:
     features; :meth:`observations` converts the log into the
     :func:`repro.core.calibration.fit_profile` input format, closing
     the measure → fit → profile loop.
+
+    ``faults`` optionally arms a deterministic
+    :class:`~repro.core.faults.FaultInjector`: stage executions the
+    injector targets raise
+    :class:`~repro.core.faults.TransientStageFailure`, and
+    :meth:`run_workflow` retries them (same placement, fresh attempt
+    counter) up to the plan's ``max_retries`` — the real-execution
+    mirror of the scheduler's simulated retry path.
     """
 
     def __init__(self, models: dict[str, ModelBundle], n_devices: int,
                  *, gen_len: int = 8, prompt_len: int = 32,
                  switch_sleep: float = 0.0,
                  switch_time_scale: float = 0.0,
-                 calibration: Optional[CalibrationProfile] = None):
+                 calibration: Optional[CalibrationProfile] = None,
+                 faults: Optional[FaultInjector] = None):
         self.models = models
         self.devices = [VirtualDevice(i) for i in range(n_devices)]
         self.gen_len = gen_len
@@ -163,6 +173,8 @@ class ServingEngine:
         self.switch_sleep = switch_sleep
         self.switch_time_scale = switch_time_scale
         self.calibration = calibration
+        self.faults = faults
+        self.n_fault_retries = 0
         # per-model profiles the emulated sleeps derive from: the
         # loaded calibration's fit, or the hand-set defaults
         self._profiles = (calibration.model_profiles()
@@ -206,8 +218,23 @@ class ServingEngine:
 
     def run_stage(self, wf: Workflow, stage: Stage,
                   placement: Placement,
-                  prompts: jax.Array) -> StageResult:
-        """prompts: [num_queries, prompt_len] int32 token ids."""
+                  prompts: jax.Array, attempt: int = 0) -> StageResult:
+        """prompts: [num_queries, prompt_len] int32 token ids.
+
+        ``attempt`` is the retry ordinal the fault injector keys on
+        (only attempt 0 is failure-eligible, so retries always
+        converge); an injected fault raises
+        :class:`~repro.core.faults.TransientStageFailure` before any
+        device state is touched.
+        """
+        if self.faults is not None:
+            frac = self.faults.failure_fraction(
+                wf.wid, stage.sid, placement.devices, attempt)
+            if frac is not None:
+                raise TransientStageFailure(
+                    f"injected fault: stage {wf.wid}/{stage.sid} on "
+                    f"devices {placement.devices} failed at "
+                    f"{frac:.0%} of its run (attempt {attempt})")
         bundle = self.models[stage.model]
         t0 = time.perf_counter()
         n_switches = 0
@@ -290,7 +317,17 @@ class ServingEngine:
                 if p.sid in completed:
                     continue
                 stage = wf.stages[p.sid]
-                res = self.run_stage(wf, stage, p, prompts)
+                max_retries = (self.faults.plan.max_retries
+                               if self.faults is not None else 0)
+                for attempt in range(max_retries + 1):
+                    try:
+                        res = self.run_stage(wf, stage, p, prompts,
+                                             attempt=attempt)
+                        break
+                    except TransientStageFailure:
+                        if attempt >= max_retries:
+                            raise
+                        self.n_fault_retries += 1
                 results[p.sid] = res
                 completed.add(p.sid)
                 now = time.perf_counter() - t_start

@@ -165,3 +165,33 @@ def mechanism_rates(rows: Iterable[dict]) -> dict[str, float]:
         "model_cont": sum(r["same_model_continuations"]
                           for r in rows) / tot_tasks,
     }
+
+
+def chaos_summary(results: dict) -> dict[str, dict]:
+    """Fault-tolerance summary per labelled serving run.
+
+    ``results`` maps a run label (e.g. ``"fault-free"``, ``"chaos"``)
+    to a :class:`~repro.core.scheduler.ServingResult`.  Each row
+    reports completion accounting (offered / completed / failed /
+    completion rate over admitted work), the horizon, and the fault
+    machinery counters — the quantities the chaos gate asserts on.
+    """
+    out: dict[str, dict] = {}
+    for label, res in results.items():
+        n_completed = len(res.stats)
+        n_admitted = n_completed + len(res.failed)
+        out[label] = {
+            "n_offered": res.n_offered,
+            "n_completed": n_completed,
+            "n_rejected": len(res.rejected),
+            "n_failed": len(res.failed),
+            "completion_rate": (n_completed / n_admitted
+                                if n_admitted else float("nan")),
+            "horizon": res.horizon,
+            "device_downs": res.device_downs,
+            "shard_failures": res.shard_failures,
+            "retries": res.retries,
+            "stragglers": res.stragglers,
+            "speculations": res.speculations,
+        }
+    return out

@@ -196,3 +196,38 @@ def overloaded_serving_trace(n_workflows: int = 18, rate: float = 14.0,
     return poisson_serving_trace(n_workflows=n_workflows, rate=rate,
                                  seed=seed, num_queries=num_queries,
                                  mix="mixed")
+
+
+def chaos_fault_plan(seed: int = 0) -> "FaultPlan":
+    """The chaos-gate fault script for the overloaded serving trace.
+
+    A fixed, seeded :class:`~repro.core.faults.FaultPlan` combining
+    every fault class the scheduler handles, with timings tuned to the
+    fault-free FATE horizon of ``overloaded_serving_trace(18)`` on a
+    6-device homogeneous cluster (≈107 simulated seconds):
+
+    * one device crash at ~30% of the fault-free horizon (device 2 at
+      t=30s) with recovery 30 simulated seconds later;
+    * a 3× slowdown episode on device 1 (t=10–45s) long enough to
+      trip straggler probes (threshold 1.5× believed duration) and
+      speculative re-issue;
+    * two targeted transient shard failures early in two different
+      workflow shapes (a prefix-suite worker and a conflict-suite
+      level stage), exercising retry-with-backoff.
+
+    Used by ``benchmarks/sched_bench.py --chaos`` and
+    ``tests/test_faults.py``.
+    """
+    from repro.core.faults import (DeviceCrash, FaultPlan, ShardFailure,
+                                   Slowdown)
+    return FaultPlan(
+        seed=seed,
+        crashes=(DeviceCrash(device=2, at=30.0, recover_at=60.0),),
+        slowdowns=(Slowdown(device=1, at=10.0, until=45.0, factor=3.0),),
+        failures=(ShardFailure(wid="serve-prefix-000", sid="worker0",
+                               at_fraction=0.5),
+                  ShardFailure(wid="serve-conflict-001", sid="l0c0",
+                               at_fraction=0.3)),
+        max_retries=3, retry_backoff=0.05, retry_backoff_mult=2.0,
+        straggler_threshold=1.5, speculate=True,
+        quarantine_after=3, quarantine_s=1.0)

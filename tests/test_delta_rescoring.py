@@ -299,3 +299,42 @@ def test_preferred_devices_generation_key():
     b = _preferred_devices("some-model", 8)
     assert b == a                                     # same spread...
     assert b is not a                                 # ...recomputed
+
+
+def test_mark_down_mark_up_delta_matches_full_rebuild():
+    """Device removal/recovery through the dirty-set mutators: after a
+    crash-style wipe (``mark_down(wipe=True)``), a quarantine-style
+    eviction (``wipe=False``), and recovery, delta rescoring stays
+    bit-identical to a from-scratch rebuild on the same state."""
+    rng = random.Random(7)
+    cluster = homogeneous_cluster(6)
+    wf = _random_workflow(rng, 12, "downwf")
+    state = fresh_state(cluster)
+    params = ScoreParams(horizon=3)
+    scorer = Scorer(state, CostModel(state), params)
+    ready = _ready(wf, set())
+    scorer.set_frontier(wf, ready)
+    prev = scorer.rescore_matrix(wf, ready, None)
+
+    def _assert_parity(prev):
+        ref = Scorer(state, CostModel(state), params)
+        ref.set_frontier(wf, ready)
+        full = ref.score_matrix(wf, ready)
+        for name in ("raw", "eft", "base", "wait"):
+            assert np.array_equal(getattr(prev, name),
+                                  getattr(full, name)), name
+
+    # warm device 2 so the crash wipe actually changes its columns
+    state.set_resident(2, MODELS[0])
+    state.warm_prefix(2, "g0", MODELS[0], 4, state.now)
+    state.now += 0.05
+    state.mark_down(2, wipe=True)       # crash: residency/prefix wiped
+    state.mark_down(4, wipe=False)      # quarantine: caches kept
+    prev = scorer.rescore_matrix(wf, ready, prev)
+    _assert_parity(prev)
+
+    state.mark_up(2)
+    state.mark_up(4)
+    state.set_free_at(2, state.now + 0.2)
+    prev = scorer.rescore_matrix(wf, ready, prev)
+    _assert_parity(prev)

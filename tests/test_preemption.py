@@ -161,3 +161,67 @@ def test_cpsat_hint_preserves_optimum():
     hinted = CpSolver().solve(m)
     assert hinted.objective == pytest.approx(ref.objective) == 7.0
     assert hinted.values[1] == 1 and hinted.values[3] == 1
+
+
+# ---------------------------------------------------------------------------
+# revocation x device removal (fault-tolerance satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_revokes_committed_placements_on_dead_device():
+    """A device crash revokes committed-but-unissued placements
+    touching it (the policy's on_preempt hook observes exactly those)
+    and reports the count on the DeviceDownEvent."""
+    from repro.core.faults import DeviceCrash
+    from repro.core.planner import Placement
+    from repro.core.scheduler import (DeviceDownEvent, Scheduler,
+                                      SchedulerConfig)
+
+    sched = Scheduler(homogeneous_cluster(4),
+                      SchedulerConfig(policy="FATE"))
+    observed = []
+    sched.policy.on_preempt = \
+        lambda revoked, state: observed.extend(revoked)
+    doomed = Placement("w", "a", (2, 3), (4, 4))
+    survivor = Placement("w", "b", (0,), (8,))
+    sched.committed.extend([doomed, survivor])
+    sched._on_device_crash(DeviceCrash(device=2, at=0.0))
+    assert observed == [doomed]
+    assert 2 in sched.state.down
+    downs = [e for e in sched.events if isinstance(e, DeviceDownEvent)]
+    assert [(e.device, e.n_revoked) for e in downs] == [(2, 1)]
+    # the crash forces a full replan: the pool is emptied entirely
+    assert sched.committed == []
+
+
+def test_crash_fault_trace_parity_delta_vs_cold():
+    """Failure-aware replanning repairs the delta caches: a faulted
+    run (crash + recovery mid-trace) with warm-started delta-rescored
+    solves is bit-identical to its cold full-rebuild reference."""
+    import dataclasses as _dc
+
+    from repro.core.faults import DeviceCrash, FaultPlan
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+
+    trace = poisson_serving_trace(n_workflows=6, rate=8.0, seed=3,
+                                  num_queries=8)
+    cl = homogeneous_cluster(4)
+    plan = FaultPlan(crashes=(DeviceCrash(device=1, at=4.0,
+                                          recover_at=10.0),))
+
+    def _run_cfg(**kw):
+        sched = Scheduler(cl, SchedulerConfig(policy="FATE",
+                                              faults=plan, **kw))
+        for t, wf in trace:
+            sched.submit(wf, at=t)
+        res = sched.drain()
+        return res, sched
+
+    fast, s_fast = _run_cfg()
+    ref, s_ref = _run_cfg(use_delta=False, warm_start=False)
+    assert set(fast.stats) == set(ref.stats)
+    assert _placements(s_fast.runs) == _placements(s_ref.runs)
+    assert [( type(e).__name__, _dc.astuple(e)) for e in s_fast.events] \
+        == [(type(e).__name__, _dc.astuple(e)) for e in s_ref.events]
+    for wid in ref.stats:
+        assert fast.stats[wid].makespan == ref.stats[wid].makespan, wid

@@ -461,14 +461,32 @@ def test_submit_klass_and_deadline_annotations():
 
 
 def test_duplicate_wid_raises():
+    """Duplicate wids are rejected at submit() time — before they
+    can clobber the run's per-wid stats keying."""
     trace = _overloaded_trace()[:1]
     t0, wf0 = trace[0]
     sched = Scheduler(homogeneous_cluster(2),
                       SchedulerConfig(policy="RoundRobin"))
     sched.submit(wf0, at=t0)
-    sched.submit(wf0, at=t0 + 0.1)
     with pytest.raises(ValueError, match="duplicate workflow id"):
-        sched.drain()
+        sched.submit(wf0, at=t0 + 0.1)
+    res = sched.drain()          # first submission is unaffected
+    assert wf0.wid in res.stats
+
+
+def test_submit_negative_times_raise():
+    """Negative at= / deadline= are rejected with clear ValueErrors."""
+    trace = _overloaded_trace()[:1]
+    _, wf0 = trace[0]
+    sched = Scheduler(homogeneous_cluster(2),
+                      SchedulerConfig(policy="RoundRobin"))
+    with pytest.raises(ValueError, match="negative arrival time"):
+        sched.submit(wf0, at=-0.5)
+    with pytest.raises(ValueError, match="negative deadline"):
+        sched.submit(wf0, at=0.0, deadline=-1.0)
+    # failed submits must not poison the duplicate-wid registry
+    sched.submit(wf0, at=0.0)
+    assert wf0.wid in sched.drain().stats
 
 
 def test_fate_max_waves_config_plumbs_to_planner():

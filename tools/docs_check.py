@@ -34,6 +34,7 @@ DOCSTRING_MODULES = [
     "src/repro/core/planner.py",
     "src/repro/core/executor.py",
     "src/repro/core/scheduler.py",
+    "src/repro/core/faults.py",
     "src/repro/core/costs.py",
     "src/repro/core/admission.py",
     "src/repro/core/calibration.py",
