@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sched bench-sched calibrate docs-check \
+.PHONY: test test-sched bench-sched calibrate audit docs-check \
   deprecated-check check
 
 test:
@@ -14,17 +14,25 @@ test-sched:
 	  tests/test_workflowbench.py tests/test_score_matrix_parity.py \
 	  tests/test_delta_rescoring.py tests/test_shared_frontier.py \
 	  tests/test_admission.py tests/test_preemption.py \
-	  tests/test_scheduler_api.py tests/test_faults.py
+	  tests/test_scheduler_api.py tests/test_faults.py \
+	  tests/test_recovery.py
 
 bench-sched:
 	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
-	  --serve-slo --calibrate --chaos
+	  --serve-slo --calibrate --chaos --recovery
 
 # Cost-model calibration gate (fit round-trip, >=2x probe-error
 # reduction vs hand-set constants, fixed-profile score-path parity);
 # writes CALIBRATION_profile.json next to BENCH_sched.json.
 calibrate:
 	$(PYTHON) -m benchmarks.sched_bench --quick --calibrate
+
+# Invariant auditor smoke: build a journaled chaos run in a temp dir,
+# kill it mid-flight, restore from snapshot + journal replay, and
+# assert the cross-structure invariants hold (tools/invariant_audit.py
+# also audits archived SNAPSHOT.json / journal artifacts directly).
+audit:
+	$(PYTHON) tools/invariant_audit.py --self-test
 
 # Docs gate: markdown link check over README.md/docs/ plus a
 # pydocstyle-equivalent docstring lint on the documented-surface
@@ -46,8 +54,10 @@ deprecated-check:
 # from the reference path, if the --serve-slo control plane stops
 # beating unconditional admission / loses cold-solve parity, if the
 # --calibrate loop stops recovering coefficients / cutting probe error
-# >= 2x / holding fixed-profile parity, or if the --chaos gate stops
+# >= 2x / holding fixed-profile parity, if the --chaos gate stops
 # completing 100% of admitted workflows under the seeded fault script
 # within 2x fault-free makespan with bit-identical replay and
-# empty-plan parity) + docs + the deprecated-surface gate.
+# empty-plan parity, or if the --recovery gate stops restoring a
+# killed journaled run bit-identically with clean invariant audits)
+# + docs + the deprecated-surface gate.
 check: test-sched bench-sched docs-check deprecated-check

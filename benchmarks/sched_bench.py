@@ -476,6 +476,131 @@ def run_chaos(n_workflows: int = 18, rate: float = 14.0,
     }
 
 
+def run_recovery(n_workflows: int = 18, rate: float = 14.0,
+                 n_devices: int = 6, seed: int = 0,
+                 kill_fractions=(0.1, 0.3, 0.5, 0.7, 0.9),
+                 snap_every: int = 20) -> dict:
+    """Crash-recovery benchmark: durable control plane under chaos.
+
+    Runs the overloaded n=18 chaos trace (same trace and fault script
+    as ``--chaos``) once uninterrupted to fix a baseline fingerprint,
+    then for each kill fraction: runs a journaled scheduler (periodic
+    snapshots, 64 KiB journal segments so rotation is exercised),
+    abandons it mid-run at the swept event index, reopens the journal
+    directory cold, restores from the latest snapshot plus
+    deterministic journal-tail replay, and drains to completion.  One
+    kill point additionally gets a torn final journal line (a
+    simulated mid-write crash) before reopening.
+
+    Gates (exit-code enforced when ``--recovery`` is passed):
+      * every recovered run completes all admitted workflows and its
+        result fingerprint (per-workflow arrival/finish/per-query
+        completion times, rejections, failures, horizon, every fault
+        and control-plane counter, total event count) is bit-identical
+        to the uninterrupted baseline, at EVERY kill point;
+      * :func:`~repro.core.scheduler.audit_invariants` reports zero
+        violations immediately after restore and again after drain;
+      * the torn-tail kill point is detected
+        (``recovered_torn_tail``) and still recovers bit-identically.
+    """
+    import tempfile
+
+    from repro.core.admission import SLOConfig
+    from repro.core.journal import EventJournal
+    from repro.core.scheduler import (Scheduler, SchedulerConfig,
+                                      audit_invariants)
+    from repro.workflowbench.suites import chaos_fault_plan, \
+        overloaded_serving_trace
+
+    trace = overloaded_serving_trace(n_workflows=n_workflows, rate=rate,
+                                     seed=seed, num_queries=8)
+    cluster = homogeneous_cluster(n_devices)
+    cfg = SchedulerConfig(policy="FATE", slo=SLOConfig(),
+                          faults=chaos_fault_plan(seed))
+
+    def _fingerprint(res, sched):
+        return {
+            "stats": {w: [s.arrival, s.finish,
+                          list(s.query_completion), s.deadline]
+                      for w, s in res.stats.items()},
+            "rejected": list(res.rejected),
+            "failed": list(res.failed),
+            "horizon": res.horizon,
+            "counters": [res.replans, res.preemptions, res.deferrals,
+                         res.max_in_flight, res.device_downs,
+                         res.shard_failures, res.retries,
+                         res.stragglers, res.speculations],
+            "n_events": sched.events.n_total,
+        }
+
+    base_res, base_sched = _run_from_config(trace, cluster, cfg)
+    base_fp = _fingerprint(base_res, base_sched)
+    total = base_sched.events.n_total
+    kill_points = sorted({max(1, int(total * f))
+                          for f in kill_fractions})
+    torn_at = kill_points[len(kill_points) // 2]
+
+    rows = []
+    for k in kill_points:
+        with tempfile.TemporaryDirectory() as tmp:
+            journal = EventJournal(tmp, rotate_bytes=64 * 1024)
+            sched = Scheduler(cluster,
+                              SchedulerConfig.from_json(cfg.to_json()),
+                              journal=journal)
+            for t, wf in trace:
+                sched.submit(wf, at=t)
+            journal.write_snapshot(sched.snapshot())
+            steps = 0
+            while sched.events.n_total < k and sched.step():
+                steps += 1
+                if steps % snap_every == 0:
+                    journal.write_snapshot(sched.snapshot())
+            killed_at = sched.events.n_total
+            del sched, journal                 # crash: abandon in place
+
+            torn = k == torn_at
+            if torn:
+                segs = sorted(Path(tmp).glob("events-*.jsonl"))
+                with segs[-1].open("a") as fh:   # simulated torn write
+                    fh.write('{"event_version": 1, "type": "Sta')
+
+            reopened = EventJournal(tmp)
+            snap = reopened.latest_snapshot()
+            snap_events = snap["events"]["n_total"]
+            restored = Scheduler.restore(snap, reopened)
+            audit_restored = audit_invariants(restored)
+            res = restored.drain()
+            audit_drained = audit_invariants(restored)
+            identical = _fingerprint(res, restored) == base_fp
+            rows.append({
+                "kill_event_index": k,
+                "killed_at": killed_at,
+                "snapshot_event_index": snap_events,
+                "replayed_tail": killed_at - snap_events,
+                "torn_tail_injected": torn,
+                "torn_tail_recovered": reopened.recovered_torn_tail,
+                "audit_restored": audit_restored,
+                "audit_drained": audit_drained,
+                "identical": identical,
+                "pass": (identical and not audit_restored
+                         and not audit_drained
+                         and (reopened.recovered_torn_tail == torn)),
+            })
+
+    ok = bool(rows) and all(r["pass"] for r in rows)
+    return {
+        "n_workflows": n_workflows,
+        "rate": rate,
+        "n_devices": n_devices,
+        "seed": seed,
+        "baseline_events": total,
+        "baseline_completed": len(base_res.stats),
+        "baseline_rejected": len(base_res.rejected),
+        "kill_points": rows,
+        "pass": ok,
+    }
+
+
 def _profile_parity(profile, width: int = 16, n_devices: int = 8,
                     horizon: int = 3) -> bool:
     """Bit-identical placements under a FIXED calibration profile.
@@ -708,6 +833,12 @@ def main() -> None:
                          "completion under a seeded fault script, <=2x "
                          "makespan degradation, bit-identical replay, "
                          "empty-plan parity); writes BENCH_chaos.json")
+    ap.add_argument("--recovery", action="store_true",
+                    help="run the crash-recovery gate (journaled chaos "
+                         "run killed at swept event indices, restored "
+                         "from snapshot + journal replay; bit-identical "
+                         "results and zero invariant violations "
+                         "required); writes BENCH_recovery.json")
     ap.add_argument("--config", default=None, metavar="PATH",
                     help="run the overloaded serving trace from a "
                          "serialized SchedulerConfig JSON (e.g. the "
@@ -851,6 +982,27 @@ def main() -> None:
               f"{chaos['empty_plan_parity']}  ->  "
               f"{'PASS' if chaos['pass'] else 'FAIL'}  [{chaos_path}]")
         ok = ok and chaos["pass"]
+        report["pass"] = ok
+    if args.recovery:
+        # fixed trace size as in --chaos: the recovery gate is defined
+        # on the overloaded n=18 chaos burst; the full report goes to
+        # its own artifact next to BENCH_sched.json
+        rec = run_recovery()
+        rec_path = Path(args.out).parent / "BENCH_recovery.json"
+        rec_path.write_text(json.dumps(rec, indent=2) + "\n")
+        report["recovery"] = rec
+        for row in rec["kill_points"]:
+            print(f"recovery: kill@{row['kill_event_index']:5d} "
+                  f"snap@{row['snapshot_event_index']:5d} "
+                  f"replayed={row['replayed_tail']:3d} "
+                  f"torn={'y' if row['torn_tail_injected'] else 'n'} "
+                  f"audit={len(row['audit_restored']) + len(row['audit_drained'])} "
+                  f"identical={row['identical']}")
+        print(f"recovery: {len(rec['kill_points'])} kill points over "
+              f"{rec['baseline_events']} baseline events, all "
+              f"bit-identical: {all(r['identical'] for r in rec['kill_points'])}"
+              f"  ->  {'PASS' if rec['pass'] else 'FAIL'}  [{rec_path}]")
+        ok = ok and rec["pass"]
         report["pass"] = ok
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")

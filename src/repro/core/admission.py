@@ -345,6 +345,48 @@ class AdmissionController:
         self.deadlines.pop(wid, None)
         self.pending.pop(wid, None)
 
+    # -- durability ------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Plain-JSON capture of the controller's decision state: the
+        backlog (by workflow id — the owning scheduler snapshot
+        carries the workflow objects), rejections, SLO deadlines,
+        counters, pending probe predictions, the probe log, and the
+        online :class:`ProbeCorrector` EWMAs.  The derived bound
+        caches (tails/floors/critical paths) are pure functions of
+        workflow + live set and are NOT captured — a restored
+        controller rebuilds them lazily, bit-identically."""
+        return {
+            "backlog": [[arr, wf.wid] for arr, wf in self.backlog],
+            "rejected": list(self.rejected),
+            "deadlines": dict(self.deadlines),
+            "n_deferrals": self.n_deferrals,
+            "n_probes": self.n_probes,
+            "pending": {wid: list(v)
+                        for wid, v in self.pending.items()},
+            "probe_log": [dataclasses.asdict(r)
+                          for r in self.probe_log],
+            "corrector": (self.corrector.to_dict()
+                          if self.corrector is not None else None),
+        }
+
+    def load_state(self, doc, workflows) -> None:
+        """Restore the state captured by :meth:`state_dict`
+        (``workflows`` maps backlog workflow ids back to their
+        rehydrated objects)."""
+        self.backlog = [(arr, workflows[wid])
+                        for arr, wid in doc["backlog"]]
+        self.rejected = list(doc["rejected"])
+        self.deadlines = dict(doc["deadlines"])
+        self.n_deferrals = int(doc["n_deferrals"])
+        self.n_probes = int(doc["n_probes"])
+        self.pending = {wid: tuple(v)
+                        for wid, v in doc["pending"].items()}
+        self.probe_log = [ProbeRecord(**r)
+                          for r in doc["probe_log"]]
+        cor = doc.get("corrector")
+        if cor is not None:
+            self.corrector = ProbeCorrector.from_dict(cor)
+
     # -- probe-margin correction -----------------------------------------
     def probe_family(self, wf: Workflow,
                      state: ExecutionState) -> str:

@@ -631,3 +631,25 @@ class ProbeCorrector:
         self.margins[family] = new
         self.n_obs[family] = self.n_obs.get(family, 0) + 1
         return new
+
+    def to_dict(self) -> dict:
+        """Plain-JSON capture of the corrector: knobs plus the
+        per-family EWMA margins and observation counts.  Inverse of
+        :meth:`from_dict` — the scheduler snapshot embeds this so a
+        restored control plane keeps its learned probe margins."""
+        return {"prior": self.prior, "alpha": self.alpha,
+                "min_margin": self.min_margin,
+                "max_margin": self.max_margin,
+                "margins": dict(self.margins),
+                "n_obs": dict(self.n_obs)}
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "ProbeCorrector":
+        """Rebuild a corrector from :meth:`to_dict` output."""
+        c = cls(prior=doc["prior"], alpha=doc["alpha"],
+                min_margin=doc["min_margin"],
+                max_margin=doc["max_margin"])
+        c.margins = dict(doc.get("margins") or {})
+        c.n_obs = {k: int(n)
+                   for k, n in (doc.get("n_obs") or {}).items()}
+        return c

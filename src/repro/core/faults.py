@@ -219,6 +219,27 @@ class FaultInjector:
         m = {d: self.slow_factor(d, t) for d in devices}
         return m if any(v != 1.0 for v in m.values()) else None
 
+    # -- durability ------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Plain-JSON capture of the injector's mutable cursor: the
+        seeded RNG state, fired targeted failures, and the random-
+        failure count.  With :meth:`load_state` this lets a restored
+        scheduler consume the exact same fault draws the pre-crash
+        run would have — the determinism the recovery gate asserts."""
+        version, internal, gauss = self._rng.getstate()
+        return {"rng": [version, list(internal), gauss],
+                "fired": sorted(list(k) for k in self._fired),
+                "n_random": self.n_random}
+
+    def load_state(self, doc: Mapping) -> None:
+        """Restore the cursor captured by :meth:`state_dict` (the
+        plan itself rides in the owning ``SchedulerConfig``)."""
+        version, internal, gauss = doc["rng"]
+        self._rng.setstate((int(version),
+                            tuple(int(x) for x in internal), gauss))
+        self._fired = {tuple(k) for k in doc["fired"]}
+        self.n_random = int(doc["n_random"])
+
 
 class DeviceHealth:
     """Consecutive-transient-failure tracker driving quarantine.
@@ -248,3 +269,14 @@ class DeviceHealth:
     def reset(self, device: int) -> None:
         """Forget a device's strikes (e.g. on crash recovery)."""
         self.consecutive.pop(device, None)
+
+    # -- durability ------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Plain-JSON capture of the per-device strike counters."""
+        return {"consecutive": {str(d): n
+                                for d, n in self.consecutive.items()}}
+
+    def load_state(self, doc: Mapping) -> None:
+        """Restore the counters captured by :meth:`state_dict`."""
+        self.consecutive = {int(d): int(n)
+                            for d, n in doc["consecutive"].items()}

@@ -48,7 +48,9 @@ from typing import Callable, Iterator, Mapping, Optional, Sequence
 from repro.core.admission import AdmissionController, SLOConfig
 from repro.core.calibration import CalibrationProfile
 from repro.core.costs import CostModel, CostParams
+from repro.core.devices import Cluster, Device
 from repro.core.faults import DeviceHealth, FaultInjector, FaultPlan
+from repro.core.journal import EventJournal, JournalError
 from repro.core.planner import Placement
 from repro.core.scoring import ScoreParams
 from repro.core.state import ExecutionState
@@ -56,6 +58,20 @@ from repro.core.workflow import Stage, StageKey, Workflow
 
 #: Schema version of :meth:`SchedulerConfig.to_json` documents.
 CONFIG_VERSION = 1
+
+#: Schema version of :meth:`SchedulerEvent.to_dict` documents.
+EVENT_SCHEMA_VERSION = 1
+
+#: Schema version of :meth:`Scheduler.snapshot` documents.
+SNAPSHOT_VERSION = 1
+
+
+class RecoveryError(RuntimeError):
+    """Deterministic replay diverged from the journal: the regenerated
+    event stream does not match what the pre-crash scheduler logged
+    (or the journal tail extends past the restored run's quiescence).
+    Either the snapshot/journal pair is mismatched or determinism was
+    broken — the restored state cannot be trusted."""
 
 
 def nearest_rank_p95(xs: Sequence[float],
@@ -263,8 +279,55 @@ class SchedulerConfig:
 @dataclasses.dataclass(frozen=True)
 class SchedulerEvent:
     """Base of every record on the scheduler's replayable event
-    stream; ``t`` is the simulation time the event occurred at."""
+    stream; ``t`` is the simulation time the event occurred at.
+
+    Every concrete subclass is registered in :data:`EVENT_REGISTRY`
+    and round-trips through :meth:`to_dict`/:meth:`from_dict` — the
+    serialization contract the write-ahead
+    :class:`~repro.core.journal.EventJournal` depends on.
+    """
     t: float
+
+    def to_dict(self) -> dict:
+        """Versioned plain-JSON document: the event's class name under
+        ``"type"``, :data:`EVENT_SCHEMA_VERSION` under
+        ``"event_version"``, and every dataclass field (tuples become
+        lists).  Exact inverse of :meth:`from_dict`."""
+        doc = {"event_version": EVENT_SCHEMA_VERSION,
+               "type": type(self).__name__}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            doc[f.name] = list(v) if isinstance(v, tuple) else v
+        return doc
+
+    @staticmethod
+    def from_dict(doc: Mapping) -> "SchedulerEvent":
+        """Rebuild the concrete event from a :meth:`to_dict` document.
+
+        Raises ``ValueError`` on an unknown ``"type"`` (not in
+        :data:`EVENT_REGISTRY`) or a schema version other than
+        :data:`EVENT_SCHEMA_VERSION` — a journal written by a future
+        schema must be rejected, not half-parsed.  Unknown extra keys
+        (e.g. the journal's ``"i"`` index tag) are ignored; list
+        values are coerced back to the tuples the dataclasses carry.
+        """
+        version = int(doc.get("event_version", -1))
+        if version != EVENT_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported event schema version {version} "
+                f"(expected {EVENT_SCHEMA_VERSION})")
+        name = doc.get("type")
+        cls = EVENT_REGISTRY.get(name)
+        if cls is None:
+            raise ValueError(
+                f"unknown event type {name!r} "
+                f"(registered: {sorted(EVENT_REGISTRY)})")
+        kwargs = {}
+        for f in dataclasses.fields(cls):
+            if f.name in doc:
+                v = doc[f.name]
+                kwargs[f.name] = tuple(v) if isinstance(v, list) else v
+        return cls(**kwargs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -407,6 +470,11 @@ EVENT_TYPES = (ArrivalEvent, AdmittedEvent, DeferredEvent,
                DeviceRecoveredEvent, ShardFailedEvent, RetryEvent,
                DegradedEvent)
 
+#: Type registry ``SchedulerEvent.from_dict`` dispatches through —
+#: class name -> class, one entry per :data:`EVENT_TYPES` member.
+EVENT_REGISTRY: dict[str, type] = {cls.__name__: cls
+                                   for cls in EVENT_TYPES}
+
 
 class EventLog:
     """Append-only event buffer with an optional ring cap.
@@ -438,8 +506,25 @@ class EventLog:
             self.n_dropped += drop
 
     def since(self, n: int) -> list:
-        """Retained events with absolute index ``>= n``, oldest first
-        (events already evicted from the ring are silently absent)."""
+        """Retained events with absolute index ``>= n``, oldest first.
+
+        ``n`` is an ABSOLUTE stream position in ``[0, n_total]``:
+        ``since(0)`` is the whole retained window, ``since(n_total)``
+        is empty (the next event lands there).  Positions the ring has
+        already evicted (``n < n_dropped``) are legal — the evicted
+        prefix is silently absent, which is the wraparound contract
+        :meth:`Scheduler.stream` relies on across window slides.
+        Out-of-range positions raise ``ValueError``: a negative ``n``
+        or one beyond ``n_total`` is a cursor-bookkeeping bug at the
+        caller, not a readable position.
+        """
+        if n < 0:
+            raise ValueError(
+                f"absolute event index must be >= 0, got {n}")
+        if n > self.n_total:
+            raise ValueError(
+                f"absolute event index {n} is past the end of the "
+                f"stream (n_total={self.n_total})")
         return self._items[max(0, n - self.n_dropped):]
 
     def __len__(self) -> int:
@@ -463,6 +548,100 @@ class EventLog:
         cap = "" if self.maxlen is None else f", maxlen={self.maxlen}"
         return (f"EventLog(n={len(self._items)}, "
                 f"total={self.n_total}{cap})")
+
+
+# ---------------------------------------------------------------------------
+# snapshot serialization helpers (plain-JSON codecs for the run-state
+# structures Scheduler.snapshot()/restore() round-trip)
+# ---------------------------------------------------------------------------
+
+
+def _placement_doc(p: Placement) -> dict:
+    return {"wid": p.wid, "sid": p.sid, "devices": list(p.devices),
+            "shard_sizes": list(p.shard_sizes), "score": p.score,
+            "planned_at": p.planned_at}
+
+
+def _placement_from_doc(doc: Mapping) -> Placement:
+    return Placement(doc["wid"], doc["sid"], tuple(doc["devices"]),
+                     tuple(doc["shard_sizes"]),
+                     score=doc.get("score", 0.0),
+                     planned_at=doc.get("planned_at", 0.0))
+
+
+def _stagerun_doc(run: "StageRun") -> dict:
+    return {"placement": _placement_doc(run.placement),
+            "start": run.start, "finish": run.finish,
+            "shard_finish": list(run.shard_finish),
+            "switched": list(run.switched)}
+
+
+def _stagerun_from_doc(doc: Mapping) -> "StageRun":
+    return StageRun(_placement_from_doc(doc["placement"]),
+                    doc["start"], doc["finish"],
+                    tuple(doc["shard_finish"]),
+                    tuple(bool(s) for s in doc["switched"]))
+
+
+def _heap_entry_doc(entry: tuple) -> dict:
+    """Serialize one pending heap entry ``(t, prio, seq, kind,
+    payload)``; arrival payloads are stored by wid (the workflow
+    itself lives in the snapshot's workflow registry)."""
+    t, prio, seq, kind, payload = entry
+    doc = {"t": t, "prio": prio, "seq": seq, "kind": kind}
+    if kind == "arrive":
+        doc["wid"] = payload.wid
+    elif kind in ("finish", "fail"):
+        key, token, run = payload
+        doc.update(key=list(key), token=token,
+                   run=_stagerun_doc(run))
+    elif kind == "retry":
+        key, attempt, backoff = payload
+        doc.update(key=list(key), attempt=attempt, backoff=backoff)
+    elif kind == "timeout":
+        key, token = payload
+        doc.update(key=list(key), token=token)
+    elif kind == "crash":
+        doc["crash"] = dataclasses.asdict(payload)
+    elif kind == "recover":
+        doc["device"] = payload
+    else:                                # pragma: no cover
+        raise ValueError(f"unknown heap event kind {kind!r}")
+    return doc
+
+
+def _heap_entry_from_doc(doc: Mapping,
+                         workflows: Mapping[str, "Workflow"]) -> tuple:
+    """Inverse of :func:`_heap_entry_doc` (arrival workflows resolved
+    through the snapshot's registry)."""
+    from repro.core.faults import DeviceCrash
+    kind = doc["kind"]
+    if kind == "arrive":
+        payload = workflows[doc["wid"]]
+    elif kind in ("finish", "fail"):
+        payload = (tuple(doc["key"]), doc["token"],
+                   _stagerun_from_doc(doc["run"]))
+    elif kind == "retry":
+        payload = (tuple(doc["key"]), doc["attempt"], doc["backoff"])
+    elif kind == "timeout":
+        payload = (tuple(doc["key"]), doc["token"])
+    elif kind == "crash":
+        payload = DeviceCrash(**doc["crash"])
+    elif kind == "recover":
+        payload = doc["device"]
+    else:
+        raise ValueError(f"unknown heap event kind {kind!r}")
+    return (doc["t"], doc["prio"], doc["seq"], kind, payload)
+
+
+def _keyed_dict_doc(d: Mapping) -> list:
+    """``{(wid, sid): value}`` -> ``[[wid, sid, value], ...]`` in
+    insertion order (JSON objects cannot key on tuples)."""
+    return [[wid, sid, v] for (wid, sid), v in d.items()]
+
+
+def _keyed_dict_from_doc(rows, value=lambda v: v) -> dict:
+    return {(wid, sid): value(v) for wid, sid, v in rows}
 
 
 # ---------------------------------------------------------------------------
@@ -787,8 +966,17 @@ class Scheduler:
                  state: Optional[ExecutionState] = None,
                  policy=None, world_profiles: Optional[dict] = None,
                  world_cost_params: Optional[CostParams] = None,
-                 probe_corrector=None, batch: bool = False):
+                 probe_corrector=None, batch: bool = False,
+                 journal: Optional[EventJournal] = None,
+                 audit_every: Optional[int] = None):
         self.config = config or SchedulerConfig()
+        # snapshot() refuses schedulers built through the injection
+        # hooks below: injected objects are not reconstructable from
+        # the config, so a snapshot of them could not restore
+        self._injected = (state is not None or policy is not None
+                          or world_profiles is not None
+                          or world_cost_params is not None
+                          or probe_corrector is not None)
         if state is None:
             if cluster is None:
                 raise ValueError("Scheduler needs a cluster or a "
@@ -820,6 +1008,17 @@ class Scheduler:
         # event stream ---------------------------------------------------
         self.events = EventLog(self.config.event_buffer)
         self._handlers: list[tuple[type, Callable]] = []
+
+        # durability ------------------------------------------------------
+        # lifecycle: "open" accepts submissions; "drained" is a
+        # finalized run; "restored" resumes pre-crash work only
+        self._lifecycle = "open"
+        self.journal: Optional[EventJournal] = None
+        self._journaled = 0                 # next stream index to journal
+        self.audit_every = audit_every
+        self._n_steps = 0
+        if journal is not None:
+            self.attach_journal(journal)
 
         # run state ------------------------------------------------------
         self.frontier = SharedFrontier()
@@ -950,8 +1149,21 @@ class Scheduler:
         Raises ``ValueError`` on a duplicate ``wf.wid`` (stats and
         arrivals are keyed by wid for the whole run, so a reused id
         would silently clobber them) and on negative ``at`` or
-        ``deadline`` (the simulated clock starts at zero).
+        ``deadline`` (the simulated clock starts at zero).  Raises
+        ``RuntimeError`` when the scheduler is no longer ``"open"``:
+        a drained run is finalized (its :class:`ServingResult` is
+        built) and a crash-restored scheduler only resumes pre-crash
+        work — pushing fresh arrivals into either would corrupt the
+        finalized stats / the deterministic replay contract, so build
+        a fresh :class:`Scheduler` instead.
         """
+        if self._lifecycle != "open":
+            raise RuntimeError(
+                f"cannot submit {wf.wid!r}: scheduler lifecycle state "
+                f"is {self._lifecycle!r} (submissions are only "
+                f"accepted while 'open' — drained runs are finalized "
+                f"and restored runs only resume pre-crash work; "
+                f"create a fresh Scheduler for new arrivals)")
         if wf.wid in self._submitted:
             raise ValueError(
                 f"duplicate workflow id submitted: {wf.wid!r}")
@@ -992,7 +1204,32 @@ class Scheduler:
         the scheduler is quiescent (no pending events, commitments, or
         in-flight workflows) — at which point :meth:`drain` finalizes
         the result.
+
+        With an attached :class:`~repro.core.journal.EventJournal`,
+        the batch's events are appended (write-ahead) before ``step``
+        returns — the step's commit point for crash recovery.  With
+        ``audit_every=N``, every Nth step additionally runs
+        :func:`audit_invariants` and raises :class:`RecoveryError` on
+        any violation (the debug hook the recovery gate uses).
         """
+        progressed = self._step_core()
+        # flush even on a quiescent step: the final tick may still have
+        # emitted events (e.g. expired-backlog rejections) that must
+        # reach the journal before the run is considered settled
+        self._flush_journal()
+        if progressed:
+            self._n_steps += 1
+            if (self.audit_every is not None
+                    and self._n_steps % self.audit_every == 0):
+                violations = audit_invariants(self)
+                if violations:
+                    raise RecoveryError(
+                        "invariant audit failed at step "
+                        f"{self._n_steps} (t={self.now:.3f}): "
+                        + "; ".join(violations))
+        return progressed
+
+    def _step_core(self) -> bool:
         while True:
             outcome = self._tick()
             if outcome == "advanced":
@@ -1023,9 +1260,11 @@ class Scheduler:
 
     def drain(self) -> ServingResult:
         """Run to quiescence and return the :class:`ServingResult`
-        (also kept on :attr:`result`)."""
+        (also kept on :attr:`result`).  Finalizes the lifecycle:
+        further :meth:`submit` calls raise ``RuntimeError``."""
         while self.step():
             pass
+        self._lifecycle = "drained"
         adm = self.admission
         fa = self._first_arrival if self._first_arrival is not None \
             else 0.0
@@ -1063,6 +1302,305 @@ class Scheduler:
             total_tasks=len(wf.stages),
             model_switches=(self.state.model_switches
                             - self._switches_before))
+
+    # -- durability ------------------------------------------------------
+    def attach_journal(self, journal: EventJournal) -> None:
+        """Adopt ``journal`` as this run's write-ahead log: every
+        subsequent :meth:`step` appends its event batch before
+        returning.
+
+        The journal's position must match the event stream — a fresh
+        journal on a fresh scheduler, or the journal a restored
+        scheduler was replayed against.  Anything else raises
+        :class:`~repro.core.journal.JournalError` (the journal would
+        silently stop being a contiguous prefix of the stream).
+        """
+        if journal.next_index != self.events.n_total:
+            raise JournalError(
+                f"journal is at index {journal.next_index} but the "
+                f"event stream is at {self.events.n_total}; attach "
+                f"the journal this stream was logged to (or a fresh "
+                f"one before the first step)")
+        self.journal = journal
+        self._journaled = journal.next_index
+
+    def _flush_journal(self) -> None:
+        """Write-ahead append of every event emitted since the last
+        flush (the per-step commit point)."""
+        if self.journal is None:
+            return
+        n = self.events.n_total
+        if n <= self._journaled:
+            return
+        new = self.events.since(self._journaled)
+        if len(new) != n - self._journaled:
+            raise JournalError(
+                f"{n - self._journaled - len(new)} un-journaled "
+                f"event(s) were evicted from the event ring before "
+                f"the journal flush — journaled runs need an "
+                f"event_buffer at least one step-batch large")
+        self.journal.append_batch(new, self._journaled)
+        self._journaled = n
+
+    def snapshot(self) -> dict:
+        """Serialize the complete run state into one versioned
+        plain-JSON document (the checkpoint half of the durable
+        control plane).
+
+        Captures the clock and execution state (ρ/κ/ℓ/τ, down set),
+        every in-flight structure (pending event heap with run tokens,
+        frontier, commitments, issued runs), the admission
+        controller's backlog/deadline/probe state including the
+        :class:`~repro.core.calibration.ProbeCorrector` EWMAs, the
+        fault machinery's RNG cursor / health counters / retry
+        backoffs, the retained event window with its ring cursors, and
+        the embedded :class:`SchedulerConfig` — everything
+        :meth:`restore` needs to resume deterministically.
+
+        Only config-driven serving schedulers snapshot: batch-mode
+        adapters and schedulers built through the injection hooks
+        (``state=``/``policy=``/``world_*``/``probe_corrector=``)
+        raise ``ValueError``, since injected objects cannot be
+        reconstructed from the document.
+        """
+        if self.batch:
+            raise ValueError(
+                "snapshot() supports serving mode only (batch-mode "
+                "adapters are single-shot and need no durability)")
+        if self._injected:
+            raise ValueError(
+                "snapshot() requires a config-driven Scheduler; "
+                "injected state/policy/world/probe_corrector hooks "
+                "cannot be reconstructed from a snapshot")
+        wfs = dict(self._workflows_all)
+        for entry in self._heap:
+            if entry[3] == "arrive":
+                wfs[entry[4].wid] = entry[4]
+        if self.admission is not None:
+            for _arr, wf in self.admission.backlog:
+                wfs[wf.wid] = wf
+        cluster = self.state.cluster
+        return {
+            "snapshot_version": SNAPSHOT_VERSION,
+            "config": json.loads(self.config.to_json()),
+            "cluster": {
+                "transfer_coef": cluster.transfer_coef,
+                "devices": [dataclasses.asdict(d)
+                            for d in cluster.devices]},
+            "lifecycle": self._lifecycle,
+            "state": self.state.to_dict(),
+            "workflows": {wid: wf.to_dict() for wid, wf in wfs.items()},
+            "workflows_all": list(self._workflows_all),
+            "frontier": {
+                "order": list(self.frontier._order),
+                "completed": {wid: sorted(done) for wid, done
+                              in self.frontier.completed.items()}},
+            "heap": [_heap_entry_doc(e) for e in self._heap],
+            "committed": [_placement_doc(p) for p in self.committed],
+            "issued": sorted(list(k) for k in self.issued),
+            "runs": _keyed_dict_doc({k: _stagerun_doc(r)
+                                     for k, r in self.runs.items()}),
+            "wf_finish": dict(self._wf_finish),
+            "arrivals": dict(self._arrivals),
+            "deadlines": dict(self._deadlines),
+            "klass": dict(self._klass),
+            "stats": {wid: dataclasses.asdict(s)
+                      for wid, s in self.stats.items()},
+            "query_done": {wid: {str(q): t for q, t in qd.items()}
+                           for wid, qd in self._query_done.items()},
+            "submitted": sorted(self._submitted),
+            "counters": {
+                "seq": self._seq,
+                "n_total_stages": self._n_total_stages,
+                "first_arrival": self._first_arrival,
+                "last_finish": self._last_finish,
+                "max_in_flight": self.max_in_flight,
+                "replans": self.replans,
+                "preemptions": self.preemptions,
+                "switches_before": self._switches_before,
+                "guard": self._guard,
+                "n_rejected_seen": self._n_rejected_seen,
+                "n_steps": self._n_steps,
+                "device_downs": self.device_downs,
+                "shard_failures": self.shard_failures,
+                "retries": self.retries,
+                "stragglers": self.stragglers,
+                "speculations": self.speculations},
+            "failed": list(self.failed),
+            "run_token": _keyed_dict_doc(self._run_token),
+            "attempts": _keyed_dict_doc(self._attempts),
+            "hold": _keyed_dict_doc(self._hold),
+            "faults": (None if self.injector is None else {
+                "injector": self.injector.state_dict(),
+                "health": self.health.state_dict()}),
+            "admission": (self.admission.state_dict()
+                          if self.admission is not None else None),
+            "events": {
+                "maxlen": self.events.maxlen,
+                "n_total": self.events.n_total,
+                "n_dropped": self.events.n_dropped,
+                "retained": [ev.to_dict() for ev in self.events]},
+        }
+
+    def save_snapshot(self, path) -> Path:
+        """Write :meth:`snapshot` as JSON to ``path``; returns it."""
+        path = Path(path)
+        path.write_text(json.dumps(self.snapshot(), sort_keys=True))
+        return path
+
+    @classmethod
+    def restore(cls, snapshot, journal: Optional[EventJournal] = None
+                ) -> "Scheduler":
+        """Rebuild a scheduler from a :meth:`snapshot` document (or a
+        path to one) and, when ``journal`` is given, deterministically
+        replay the journal tail past the snapshot.
+
+        Replay is *regeneration*: the scheduler is a deterministic
+        state machine, so :meth:`restore` re-steps it from the
+        snapshot and verifies every regenerated event against the
+        journal's record, raising :class:`RecoveryError` on the first
+        divergence.  Work that was in flight at the crash is re-armed
+        through the snapshotted pending-event heap under its recorded
+        run tokens, so stale completions from the pre-crash epoch are
+        discarded by the same token machinery that handles speculative
+        duplicates.  The journal is then re-attached (write-ahead
+        logging resumes seamlessly), and the restored scheduler's
+        lifecycle is ``"restored"``: it drains pre-crash work but
+        refuses fresh :meth:`submit` calls.
+        """
+        doc = snapshot
+        if not isinstance(doc, Mapping):
+            doc = json.loads(Path(doc).read_text())
+        version = int(doc.get("snapshot_version", -1))
+        if version != SNAPSHOT_VERSION:
+            raise ValueError(
+                f"unsupported snapshot version {version} "
+                f"(expected {SNAPSHOT_VERSION})")
+        config = SchedulerConfig.from_json(json.dumps(doc["config"]))
+        cl = doc["cluster"]
+        cluster = Cluster(tuple(Device(**d) for d in cl["devices"]),
+                          transfer_coef=cl["transfer_coef"])
+        sched = cls(cluster, config)
+        sched._load_snapshot(doc)
+        if journal is not None:
+            sched._replay_journal(journal)
+        return sched
+
+    def _load_snapshot(self, doc: Mapping) -> None:
+        """Overwrite this (freshly constructed) scheduler's run state
+        with a snapshot document's contents."""
+        from repro.core.workflow import DEFAULT_PROFILES
+        wfs = {wid: Workflow.from_dict(w)
+               for wid, w in doc["workflows"].items()}
+        profiles = self.config.model_profiles() or DEFAULT_PROFILES
+        self.state = ExecutionState.from_dict(
+            doc["state"], self.state.cluster, profiles)
+        # the cost model prices off the state object — rebind it (the
+        # config-driven path never injects world profiles/params)
+        self.cm = CostModel(self.state, self.cost_params)
+        fr = SharedFrontier()
+        for wid in doc["frontier"]["order"]:
+            fr.workflows[wid] = wfs[wid]
+            fr.completed[wid] = set(doc["frontier"]["completed"][wid])
+            fr._order.append(wid)
+        self.frontier = fr
+        # replaces the scripted crash/recover events the constructor
+        # pre-pushed — the snapshot heap carries the pending ones
+        self._heap = [_heap_entry_from_doc(h, wfs)
+                      for h in doc["heap"]]
+        self.committed = [_placement_from_doc(p)
+                          for p in doc["committed"]]
+        self.issued = {tuple(k) for k in doc["issued"]}
+        self.runs = _keyed_dict_from_doc(doc["runs"],
+                                         _stagerun_from_doc)
+        self._wf_finish = dict(doc["wf_finish"])
+        self._arrivals = dict(doc["arrivals"])
+        self._deadlines = dict(doc["deadlines"])
+        self._klass = dict(doc["klass"])
+        self._workflows_all = {wid: wfs[wid]
+                               for wid in doc["workflows_all"]}
+        self.stats = {wid: WorkflowServeStats(**s)
+                      for wid, s in doc["stats"].items()}
+        self._query_done = {wid: {int(q): t for q, t in qd.items()}
+                            for wid, qd in doc["query_done"].items()}
+        self._submitted = set(doc["submitted"])
+        c = doc["counters"]
+        self._seq = c["seq"]
+        self._n_total_stages = c["n_total_stages"]
+        self._first_arrival = c["first_arrival"]
+        self._last_finish = c["last_finish"]
+        self.max_in_flight = c["max_in_flight"]
+        self.replans = c["replans"]
+        self.preemptions = c["preemptions"]
+        self._switches_before = c["switches_before"]
+        self._guard = c["guard"]
+        self._n_rejected_seen = c["n_rejected_seen"]
+        self._n_steps = c["n_steps"]
+        self.device_downs = c["device_downs"]
+        self.shard_failures = c["shard_failures"]
+        self.retries = c["retries"]
+        self.stragglers = c["stragglers"]
+        self.speculations = c["speculations"]
+        self.failed = list(doc["failed"])
+        self._run_token = _keyed_dict_from_doc(doc["run_token"])
+        self._attempts = _keyed_dict_from_doc(doc["attempts"])
+        self._hold = _keyed_dict_from_doc(doc["hold"])
+        f = doc.get("faults")
+        if f is not None:
+            self.injector.load_state(f["injector"])
+            self.health.load_state(f["health"])
+        adm_doc = doc.get("admission")
+        if adm_doc is not None and self.admission is not None:
+            self.admission.load_state(adm_doc, wfs)
+        ev_doc = doc["events"]
+        log = EventLog(ev_doc["maxlen"])
+        log._items = [SchedulerEvent.from_dict(e)
+                      for e in ev_doc["retained"]]
+        log.n_total = ev_doc["n_total"]
+        log.n_dropped = ev_doc["n_dropped"]
+        self.events = log
+        self._journaled = log.n_total
+        self._lifecycle = "restored"
+
+    def _replay_journal(self, journal: EventJournal) -> None:
+        """Re-step from the snapshot through the journal tail,
+        verifying each regenerated event against the journal's record
+        (see :meth:`restore`); then adopt the journal for continued
+        write-ahead logging."""
+        cursor = self.events.n_total
+        tail = [ev for _i, ev in journal.read(cursor)]
+        if journal.next_index < cursor:
+            raise JournalError(
+                f"journal ends at event {journal.next_index} but the "
+                f"snapshot is already at {cursor} — this journal does "
+                f"not extend this snapshot")
+        consumed = 0
+        while consumed < len(tail):
+            before = self.events.n_total
+            if not self._step_core():
+                raise RecoveryError(
+                    f"journal holds {len(tail) - consumed} more "
+                    f"event(s) past the restored run's quiescence")
+            new = self.events.since(before)
+            if len(new) != self.events.n_total - before:
+                raise RecoveryError(
+                    "event ring evicted events mid-replay — "
+                    "journaled runs need an event_buffer at least "
+                    "one step-batch large")
+            for ev in new:
+                if consumed >= len(tail):
+                    break       # regenerated past the logged tail
+                if ev != tail[consumed]:
+                    raise RecoveryError(
+                        f"replay divergence at event "
+                        f"{cursor + consumed}: regenerated {ev!r}, "
+                        f"journal holds {tail[consumed]!r}")
+                consumed += 1
+        # resume write-ahead logging: adopt the journal and flush any
+        # events the final replayed batch generated past its record
+        self.journal = journal
+        self._journaled = journal.next_index
+        self._flush_journal()
 
     # -- internals -------------------------------------------------------
     def _guard_limit(self) -> int:
@@ -1658,3 +2196,103 @@ class Scheduler:
             # ρ/κ/ℓ/τ, so the merged frontier is re-solved
             self.committed.clear()
         return "advanced"
+
+
+# ---------------------------------------------------------------------------
+# cross-structure invariant auditor
+# ---------------------------------------------------------------------------
+
+
+def audit_invariants(sched: Scheduler) -> list[str]:
+    """Check the scheduler's cross-structure invariants; returns a
+    list of human-readable violation strings (empty = consistent).
+
+    Runs against any live, snapshotted-and-restored, or replayed
+    scheduler — ``tools/invariant_audit.py`` wraps it as a CLI over
+    archived snapshots, the ``--recovery`` bench gate asserts it on
+    every restored state, and ``Scheduler(audit_every=N)`` runs it as
+    an in-``step()`` debug hook.  Invariants:
+
+    * no stage is simultaneously issued and completed, committed and
+      issued, or committed twice;
+    * every issued stage has a :class:`StageRun` record AND a pending
+      token-valid finish/fail heap event (no lost work);
+    * committed placements reference live frontier workflows with
+      satisfied completions only, and never target a downed
+      (crashed/quarantined) device;
+    * stages in retry backoff are not concurrently issued;
+    * frontier bookkeeping is closed: order list <-> workflow map <->
+      completion sets <-> registry/arrival tables, completed sids
+      exist in their DAG, and no in-flight workflow already has final
+      stats;
+    * event ring accounting: ``n_total == n_dropped + retained``, the
+      cap is respected, and nothing is dropped while uncapped.
+    """
+    v: list[str] = []
+    state = sched.state
+    fr = sched.frontier
+    # issued set ----------------------------------------------------------
+    pending: set[StageKey] = set()
+    for (_t, _prio, _seq, kind, payload) in sched._heap:
+        if kind in ("finish", "fail"):
+            key, token, _run = payload
+            if token == sched._run_token.get(key, 0):
+                pending.add(key)
+    for key in sorted(sched.issued):
+        wid, sid = key
+        if sid in fr.completed.get(wid, ()):
+            v.append(f"stage {key} is both issued and completed")
+        if key not in sched.runs:
+            v.append(f"issued stage {key} has no StageRun record")
+        if key not in pending:
+            v.append(f"issued stage {key} has no pending token-valid "
+                     f"completion event (lost work)")
+        if key in sched._hold:
+            v.append(f"stage {key} is in retry backoff but issued")
+    # committed pool ------------------------------------------------------
+    seen: set[StageKey] = set()
+    for p in sched.committed:
+        key = (p.wid, p.sid)
+        if key in seen:
+            v.append(f"duplicate commitment for {key}")
+        seen.add(key)
+        if key in sched.issued:
+            v.append(f"stage {key} is both committed and issued")
+        if p.wid in fr.completed and p.sid in fr.completed[p.wid]:
+            v.append(f"committed stage {key} is already completed")
+        for d in p.devices:
+            if d in state.down:
+                v.append(f"committed placement {key} targets downed "
+                         f"device {d}")
+    # frontier bookkeeping ------------------------------------------------
+    if sorted(fr._order) != sorted(fr.workflows):
+        v.append("frontier order list out of sync with workflow map")
+    if sorted(fr.completed) != sorted(fr.workflows):
+        v.append("frontier completion sets out of sync with "
+                 "workflow map")
+    for wid, wf in fr.workflows.items():
+        if wid not in sched._workflows_all:
+            v.append(f"frontier workflow {wid} missing from the "
+                     f"workflow registry")
+        if wid not in sched._arrivals:
+            v.append(f"frontier workflow {wid} has no recorded "
+                     f"arrival")
+        unknown = fr.completed.get(wid, set()) - set(wf.stages)
+        if unknown:
+            v.append(f"workflow {wid} completed unknown stage(s) "
+                     f"{sorted(unknown)}")
+        if wid in sched.stats:
+            v.append(f"workflow {wid} is both in flight and "
+                     f"finalized in stats")
+    # event ring accounting ----------------------------------------------
+    ev = sched.events
+    if ev.n_total != ev.n_dropped + len(ev):
+        v.append(f"event ring accounting broken: n_total="
+                 f"{ev.n_total} != n_dropped={ev.n_dropped} + "
+                 f"retained={len(ev)}")
+    if ev.maxlen is None and ev.n_dropped:
+        v.append(f"uncapped event log dropped {ev.n_dropped} "
+                 f"event(s)")
+    if ev.maxlen is not None and len(ev) > ev.maxlen:
+        v.append(f"event ring holds {len(ev)} > maxlen={ev.maxlen}")
+    return v

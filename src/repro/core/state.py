@@ -218,6 +218,72 @@ class ExecutionState:
         """Copy-on-write view for commit-and-advance planning."""
         return PlanningOverlay(self)
 
+    # -- serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain-JSON document of the full state (ρ/κ/ℓ/τ, clock,
+        bookkeeping sets, counters, fault domain, dirty set).
+
+        Dict iteration orders are preserved verbatim — the restored
+        state must replay bit-identically, so insertion order (which
+        downstream float accumulation can observe) is part of the
+        contract.  The cluster and profiles are NOT embedded; the
+        owning snapshot carries them (:meth:`from_dict` takes both).
+        """
+        def _key(k):
+            return list(k) if isinstance(k, tuple) else k
+        return {
+            "now": self.now,
+            "residency": {str(d): m for d, m in self.residency.items()},
+            "prefix": {str(d): {g: dataclasses.asdict(e)
+                                for g, e in tbl.items()}
+                       for d, tbl in self.prefix.items()},
+            "output_loc": [[wid, sid, list(devs)]
+                           for (wid, sid), devs
+                           in self.output_loc.items()],
+            "free_at": {str(d): t for d, t in self.free_at.items()},
+            "completed": [_key(k) for k in sorted(self.completed)],
+            "running": [_key(k) for k in sorted(self.running)],
+            "committed": [_key(k) for k in sorted(self.committed)],
+            "cross_device_edges": self.cross_device_edges,
+            "prefix_hits_est": self.prefix_hits_est,
+            "same_model_continuations": self.same_model_continuations,
+            "total_tasks": self.total_tasks,
+            "model_switches": self.model_switches,
+            "down": sorted(self.down),
+            "fault_epoch": self.fault_epoch,
+            "dirty": sorted(self._dirty_devices),
+        }
+
+    @classmethod
+    def from_dict(cls, doc, cluster: Cluster,
+                  profiles: dict) -> "ExecutionState":
+        """Rebuild a state from :meth:`to_dict` output over the given
+        cluster and model-profile table."""
+        def _key(k):
+            return tuple(k) if isinstance(k, list) else k
+        st = cls(cluster=cluster, profiles=dict(profiles))
+        st.now = doc["now"]
+        st.residency = {int(d): m
+                        for d, m in doc["residency"].items()}
+        st.prefix = {int(d): {g: PrefixEntry(**e)
+                              for g, e in tbl.items()}
+                     for d, tbl in doc["prefix"].items()}
+        st.output_loc = {(wid, sid): tuple(devs)
+                         for wid, sid, devs in doc["output_loc"]}
+        st.free_at = {int(d): t for d, t in doc["free_at"].items()}
+        st.completed = {_key(k) for k in doc["completed"]}
+        st.running = {_key(k) for k in doc["running"]}
+        st.committed = {_key(k) for k in doc["committed"]}
+        st.cross_device_edges = doc["cross_device_edges"]
+        st.prefix_hits_est = doc["prefix_hits_est"]
+        st.same_model_continuations = doc["same_model_continuations"]
+        st.total_tasks = doc["total_tasks"]
+        st.model_switches = doc["model_switches"]
+        st.down = set(doc["down"])
+        st.fault_epoch = doc["fault_epoch"]
+        st._dirty_devices = set(doc.get("dirty", ()))
+        return st
+
 
 class _LayeredSet:
     """Set overlay: additions land in a private layer, lookups fall

@@ -45,6 +45,36 @@ class Stage:
             return self.base_cost[device]
         return self.base_cost.get(-1, 1.0)
 
+    def to_dict(self) -> dict:
+        """Plain-JSON document (``base_cost`` device keys stringified;
+        derived ``children``/``level`` omitted — ``Workflow._wire``
+        recomputes them).  Inverse of :meth:`from_dict`."""
+        return {
+            "sid": self.sid, "model": self.model,
+            "eligible": list(self.eligible),
+            "max_shards": self.max_shards,
+            "base_cost": {str(d): c for d, c in self.base_cost.items()},
+            "prefix_group": self.prefix_group,
+            "shared_fraction": self.shared_fraction,
+            "keep_cache": self.keep_cache,
+            "cache_reuse": self.cache_reuse,
+            "output_tokens": self.output_tokens,
+            "prefill_fraction": self.prefill_fraction,
+            "comm_weight": self.comm_weight,
+            "role": self.role,
+            "parents": list(self.parents),
+        }
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "Stage":
+        """Rebuild a stage from :meth:`to_dict` output."""
+        doc = dict(doc)
+        doc["eligible"] = tuple(doc.get("eligible") or ())
+        doc["parents"] = tuple(doc.get("parents") or ())
+        doc["base_cost"] = {int(d): c
+                            for d, c in doc.get("base_cost", {}).items()}
+        return cls(**doc)
+
 
 @dataclasses.dataclass
 class Workflow:
@@ -176,6 +206,32 @@ class Workflow:
                 raise ValueError(f"{s.sid}: R(v) must be >= 1")
             if not s.base_cost:
                 raise ValueError(f"{s.sid}: missing runtime profile")
+
+    def to_dict(self) -> dict:
+        """Plain-JSON document of the DAG (stages in insertion order —
+        ``stages`` dict order determines topo tie-breaks, so it is
+        part of the serialized contract).  Inverse of
+        :meth:`from_dict`; ``meta`` must be JSON-serializable."""
+        return {
+            "wid": self.wid,
+            "stages": [s.to_dict() for s in self.stages.values()],
+            "num_queries": self.num_queries,
+            "family": self.family,
+            "meta": dict(self.meta),
+        }
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "Workflow":
+        """Rebuild a workflow from :meth:`to_dict` output (re-wires
+        children/levels/topo order from the stage parent lists)."""
+        stages = {}
+        for sdoc in doc["stages"]:
+            st = Stage.from_dict(sdoc)
+            stages[st.sid] = st
+        return cls(wid=doc["wid"], stages=stages,
+                   num_queries=doc.get("num_queries", 16),
+                   family=doc.get("family", ""),
+                   meta=dict(doc.get("meta") or {}))
 
 
 @dataclasses.dataclass(frozen=True)

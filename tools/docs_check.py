@@ -35,6 +35,7 @@ DOCSTRING_MODULES = [
     "src/repro/core/executor.py",
     "src/repro/core/scheduler.py",
     "src/repro/core/faults.py",
+    "src/repro/core/journal.py",
     "src/repro/core/costs.py",
     "src/repro/core/admission.py",
     "src/repro/core/calibration.py",

@@ -1,0 +1,137 @@
+"""Offline invariant auditor for durable scheduler state.
+
+Restores a :class:`~repro.core.scheduler.Scheduler` from a snapshot
+document (optionally replaying a journal tail on top) and runs
+:func:`~repro.core.scheduler.audit_invariants` over the rehydrated
+state — the same cross-structure consistency checks the in-process
+``audit_every`` debug hook runs between steps:
+
+* every pending token-valid completion event references live issued
+  work (no lost in-flight shards);
+* committed placements are unique, not yet issued, not already
+  completed, and touch no downed device;
+* the shared frontier, workflow registry, arrival table, and per-
+  workflow stats agree with each other;
+* the event ring's counters (``n_total = n_dropped + len``) are
+  consistent with its capacity.
+
+Usage (from the repo root):
+
+    python tools/invariant_audit.py SNAPSHOT.json [--journal DIR]
+    python tools/invariant_audit.py --journal DIR      # latest snapshot
+    python tools/invariant_audit.py --self-test
+
+With ``--journal`` and no positional snapshot, the newest snapshot
+inside the journal directory is used.  ``--self-test`` builds a small
+journaled chaos run in a temp directory, kills it mid-flight, and
+audits the restored scheduler — a dependency-free smoke for ``make
+audit``.  Exit status is 0 when the audit is clean, 1 when violations
+are found (each printed on its own line), 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+
+def _audit(sched) -> int:
+    """Print violations (if any) and return the process exit code."""
+    from repro.core.scheduler import audit_invariants
+
+    violations = audit_invariants(sched)
+    if violations:
+        for v in violations:
+            print(f"VIOLATION: {v}")
+        print(f"audit: {len(violations)} violation(s)")
+        return 1
+    print("audit: clean (0 violations)")
+    return 0
+
+
+def _restore(snapshot_path, journal_dir):
+    """Rehydrate a scheduler from CLI arguments."""
+    from repro.core.journal import EventJournal
+    from repro.core.scheduler import Scheduler
+
+    journal = EventJournal(journal_dir) if journal_dir else None
+    if snapshot_path is not None:
+        doc = json.loads(Path(snapshot_path).read_text())
+    else:
+        doc = journal.latest_snapshot()
+        if doc is None:
+            print(f"no snapshot found in journal {journal_dir}",
+                  file=sys.stderr)
+            raise SystemExit(2)
+    return Scheduler.restore(doc, journal)
+
+
+def _self_test() -> int:
+    """Journaled chaos run, killed mid-flight, restored, audited."""
+    from repro.core.admission import SLOConfig
+    from repro.core.journal import EventJournal
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.workflowbench.suites import chaos_fault_plan, \
+        overloaded_serving_trace
+
+    trace = overloaded_serving_trace(n_workflows=12, rate=14.0, seed=0,
+                                     num_queries=8)
+    cfg = SchedulerConfig(policy="FATE", slo=SLOConfig(),
+                          faults=chaos_fault_plan(0))
+    from repro.core.devices import homogeneous_cluster
+    cluster = homogeneous_cluster(6)
+    with tempfile.TemporaryDirectory() as tmp:
+        journal = EventJournal(tmp)
+        sched = Scheduler(cluster, cfg, journal=journal)
+        for t, wf in trace:
+            sched.submit(wf, at=t)
+        journal.write_snapshot(sched.snapshot())
+        steps = 0
+        while sched.events.n_total < 300 and sched.step():
+            steps += 1
+            if steps % 25 == 0:
+                journal.write_snapshot(sched.snapshot())
+        killed = sched.events.n_total
+        del sched, journal
+        reopened = EventJournal(tmp)
+        restored = Scheduler.restore(reopened.latest_snapshot(),
+                                     reopened)
+        print(f"self-test: killed at event {killed}, restored at "
+              f"event {restored.events.n_total}")
+        code = _audit(restored)
+        restored.drain()
+        return code or _audit(restored)
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("snapshot", nargs="?", default=None,
+                    help="snapshot JSON (from Scheduler.save_snapshot "
+                         "or EventJournal.write_snapshot)")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="journal directory to replay on top of the "
+                         "snapshot (and to locate the latest snapshot "
+                         "when no positional path is given)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="build, kill, and audit a small journaled "
+                         "chaos run in a temp directory")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return _self_test()
+    if args.snapshot is None and args.journal is None:
+        ap.error("need a snapshot path, --journal, or --self-test")
+    sched = _restore(args.snapshot, args.journal)
+    print(f"restored scheduler at event {sched.events.n_total} "
+          f"(lifecycle: {sched._lifecycle})")
+    return _audit(sched)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
