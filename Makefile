@@ -15,11 +15,13 @@ test-sched:
 	  tests/test_delta_rescoring.py tests/test_shared_frontier.py \
 	  tests/test_admission.py tests/test_preemption.py \
 	  tests/test_scheduler_api.py tests/test_faults.py \
-	  tests/test_recovery.py
+	  tests/test_recovery.py tests/test_pool_partition.py \
+	  tests/test_batched_probe.py tests/test_scan_index.py \
+	  tests/test_scale_stress.py
 
 bench-sched:
 	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
-	  --serve-slo --calibrate --chaos --recovery
+	  --serve-slo --calibrate --chaos --recovery --scale
 
 # Cost-model calibration gate (fit round-trip, >=2x probe-error
 # reduction vs hand-set constants, fixed-profile score-path parity);
@@ -57,7 +59,10 @@ deprecated-check:
 # >= 2x / holding fixed-profile parity, if the --chaos gate stops
 # completing 100% of admitted workflows under the seeded fault script
 # within 2x fault-free makespan with bit-identical replay and
-# empty-plan parity, or if the --recovery gate stops restoring a
-# killed journaled run bit-identically with clean invariant audits)
+# empty-plan parity, if the --recovery gate stops restoring a
+# killed journaled run bit-identically with clean invariant audits,
+# or if the --scale gate stops completing 1000 workflows on 64
+# devices with zero invariant violations under the per-event
+# overhead ceiling and single-pool/monolithic parity)
 # + docs + the deprecated-surface gate.
 check: test-sched bench-sched docs-check deprecated-check

@@ -15,6 +15,7 @@ bit-identical placements, and writes a ``BENCH_sched.json`` trajectory.
     PYTHONPATH=src python -m benchmarks.sched_bench --serve-slo  # SLO plane
     PYTHONPATH=src python -m benchmarks.sched_bench --calibrate  # cost model
     PYTHONPATH=src python -m benchmarks.sched_bench --chaos      # fault gate
+    PYTHONPATH=src python -m benchmarks.sched_bench --scale      # 1k gate
     PYTHONPATH=src python -m benchmarks.sched_bench --config SCHED_config.json
 
 Gates (enforced by exit code, used by ``make check`` / CI):
@@ -46,7 +47,14 @@ Gates (enforced by exit code, used by ``make check`` / CI):
     fault-free horizon, two same-seed runs produce bit-identical
     event streams, and an EMPTY armed fault plan reproduces the
     fault-free run bit-for-bit; writes ``BENCH_chaos.json`` next to
-    ``BENCH_sched.json`` (CI uploads it).
+    ``BENCH_sched.json`` (CI uploads it);
+  * ``--scale``: 1000 bursty workflows on a 64-device cluster under
+    the hierarchical pooled solve + batched admission probing — 100%
+    completion, zero invariant-audit violations (audited every 100
+    steps and after drain), mean per-event scheduler overhead under
+    the 5 ms ceiling, and single-pool hierarchical placements
+    bit-identical to the monolithic merged solve; writes
+    ``BENCH_scale.json`` next to ``BENCH_sched.json`` (CI uploads it).
 """
 from __future__ import annotations
 
@@ -740,6 +748,143 @@ def run_calibrate(n_workflows: int = 18, rate: float = 14.0,
     }
 
 
+SCALE_N = 1000                  # --scale gate: workflows
+SCALE_DEVICES = 64              # --scale gate: cluster size
+SCALE_CEILING_MS = 5.0          # --scale gate: mean ms per event
+SCALE_AUDIT_EVERY = 100         # --scale: invariant audit cadence
+
+
+def _scale_pool_parity(width: int = 32, n_devices: int = 16,
+                       horizon: int = 4) -> bool:
+    """Single-pool hierarchical solve vs monolithic: bit-identical.
+
+    Forces the hierarchical path with ONE pool holding every device
+    (``_forced_partition``) on the wide 32×16 H=4 merged frontier
+    (``plan_shared`` — the only path that partitions) and checks the
+    placements match the monolithic merged solve exactly — twice, so
+    the second plan exercises the delta-rescore path under the
+    partitioned solve too.  The column-sliced score tables make this
+    an identity by construction; the gate keeps it that way.
+    """
+    wf = bench_workflow(width)
+    cluster = heterogeneous_cluster(n_devices)
+    ready = [(wf.wid, f"w{i}") for i in range(width)]
+    params = ScoreParams(horizon=horizon)
+    keys = []
+    for forced in (None, [list(cluster.ids())]):
+        state = _warmed_state(wf, width, cluster)
+        planner = FrontierPlanner(params)
+        planner._forced_partition = forced
+        key = []
+        for _ in range(2):
+            ps = planner.plan_shared({wf.wid: wf}, state, list(ready))
+            key.append([(p.sid, p.devices, p.shard_sizes) for p in ps])
+        keys.append(key)
+    return bool(keys[0][0]) and keys[0] == keys[1]
+
+
+def run_scale(n_workflows: int = SCALE_N,
+              n_devices: int = SCALE_DEVICES, burst: int = 8,
+              gap: float = 2.0, pools: int = 4,
+              audit_every: int = SCALE_AUDIT_EVERY,
+              ceiling_ms: float = SCALE_CEILING_MS) -> dict:
+    """1k-workflow scale gate: hierarchical pooled solve + batched
+    admission probing + indexed event-loop structures at fleet size.
+
+    Drives the bursty :func:`~repro.workflowbench.suites.
+    scale_serving_trace` (arrivals land ``burst`` at a time on the
+    same timestamp, so every burst shares one batched admission
+    overlay) through the event-driven ``Scheduler`` on a
+    ``n_devices``-device cluster with the ``pools``-way hierarchical
+    frontier solve, a bounded event ring (the 4096-slot buffer slides
+    thousands of times at this scale), and a generous SLO so the
+    admission plane probes every arrival without shedding load.
+
+    Gates (exit-code enforced when ``--scale`` is passed):
+      * completion: all ``n_workflows`` workflows complete — nothing
+        rejected, failed, or stranded;
+      * invariants: :func:`~repro.core.scheduler.audit_invariants`
+        reports ZERO violations, checked every ``audit_every`` steps
+        mid-run and once more after drain (audit time is excluded
+        from the timed window);
+      * overhead ceiling: mean scheduler wall-time per emitted event
+        stays under ``ceiling_ms`` — the end-to-end guard on the hot
+        loop (partitioned solves, batched probes, indexed scans);
+      * parity: the single-pool hierarchical solve is bit-identical
+        to the monolithic merged solve on the wide 32×16 H=4
+        frontier (:func:`_scale_pool_parity`).
+
+    The per-phase planner breakdown of the scale run is always
+    recorded in the report (``phase_ms``) — ``docs/SCALE.md`` explains
+    how to read it.
+    """
+    from repro.core.admission import SLOConfig
+    from repro.core.scheduler import (Scheduler, SchedulerConfig,
+                                      audit_invariants)
+    from repro.workflowbench.suites import scale_serving_trace
+
+    trace = scale_serving_trace(n_workflows, burst=burst, gap=gap,
+                                num_queries=1)
+    cluster = homogeneous_cluster(n_devices)
+    config = SchedulerConfig(policy="FATE",
+                             slo=SLOConfig(latency_scale=100.0),
+                             pools=pools, batch_probes=True,
+                             event_buffer=4096)
+    sched = Scheduler(cluster, config)
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+
+    violations: list[str] = []
+    steps = 0
+    audit_s = 0.0
+    t0 = time.perf_counter()
+    while True:
+        if not sched.step():
+            break
+        steps += 1
+        if steps % audit_every == 0:
+            a0 = time.perf_counter()
+            violations += audit_invariants(sched)
+            audit_s += time.perf_counter() - a0
+    wall_s = time.perf_counter() - t0 - audit_s
+    res = sched.drain()
+    violations += audit_invariants(sched)
+
+    n_events = sched.events.n_total
+    mean_ms = wall_s * 1e3 / max(n_events, 1)
+    completed_all = (len(res.stats) == n_workflows
+                     and not res.rejected and not res.failed)
+    parity = _scale_pool_parity()
+    ok = (completed_all and not violations
+          and mean_ms <= ceiling_ms and parity)
+    return {
+        "n_workflows": n_workflows,
+        "n_devices": n_devices,
+        "burst": burst,
+        "pools": pools,
+        "n_completed": len(res.stats),
+        "n_rejected": len(res.rejected),
+        "n_failed": len(res.failed),
+        "completed_all": completed_all,
+        "n_events": n_events,
+        "events_dropped_from_ring": sched.events.n_dropped,
+        "max_in_flight": res.max_in_flight,
+        "replans": res.replans,
+        "n_probes": sched.admission.n_probes,
+        "horizon_s": res.horizon,
+        "wall_s": wall_s,
+        "audit_s": audit_s,
+        "n_audits": steps // audit_every + 1,
+        "violations": violations,
+        "mean_event_ms": mean_ms,
+        "ceiling_ms": ceiling_ms,
+        "phase_ms": {k: float(v)
+                     for k, v in sched.policy.phase_ms.items()},
+        "single_pool_parity": parity,
+        "pass": ok,
+    }
+
+
 def run_serve(n_workflows: int = 12, rate: float = 6.0,
               n_devices: int = 8, seed: int = 0) -> dict:
     """Poisson multi-workflow serving smoke: shared-frontier FATE vs
@@ -833,6 +978,13 @@ def main() -> None:
                          "completion under a seeded fault script, <=2x "
                          "makespan degradation, bit-identical replay, "
                          "empty-plan parity); writes BENCH_chaos.json")
+    ap.add_argument("--scale", action="store_true",
+                    help="run the 1k-workflow scale gate (hierarchical "
+                         "pooled solve + batched admission probing on a "
+                         "64-device cluster; 100%% completion, zero "
+                         "invariant violations, mean per-event overhead "
+                         "ceiling, single-pool/monolithic parity); "
+                         "writes BENCH_scale.json")
     ap.add_argument("--recovery", action="store_true",
                     help="run the crash-recovery gate (journaled chaos "
                          "run killed at swept event indices, restored "
@@ -982,6 +1134,32 @@ def main() -> None:
               f"{chaos['empty_plan_parity']}  ->  "
               f"{'PASS' if chaos['pass'] else 'FAIL'}  [{chaos_path}]")
         ok = ok and chaos["pass"]
+        report["pass"] = ok
+    if args.scale:
+        # fixed gate size: the scale contract is defined at 1000
+        # workflows on 64 devices; the full report goes to its own
+        # artifact next to BENCH_sched.json
+        scale = run_scale()
+        scale_path = Path(args.out).parent / "BENCH_scale.json"
+        scale_path.write_text(json.dumps(scale, indent=2) + "\n")
+        report["scale"] = scale
+        print(f"scale: {scale['n_completed']}/{scale['n_workflows']} "
+              f"workflows on {scale['n_devices']} devices "
+              f"(pools={scale['pools']}, burst={scale['burst']}) | "
+              f"{scale['n_events']} events in {scale['wall_s']:.1f}s, "
+              f"mean {scale['mean_event_ms']:.3f} ms/event "
+              f"(ceiling {scale['ceiling_ms']:.1f}), "
+              f"in-flight<= {scale['max_in_flight']}, "
+              f"probes={scale['n_probes']}")
+        print("scale: phase " + "  ".join(
+            f"{k}={v:.1f}ms" for k, v in scale["phase_ms"].items())
+            + f"  audits={scale['n_audits']} "
+            f"({scale['audit_s']:.2f}s, excluded) "
+            f"violations={len(scale['violations'])}")
+        print(f"scale: single-pool hierarchical == monolithic: "
+              f"{scale['single_pool_parity']}  ->  "
+              f"{'PASS' if scale['pass'] else 'FAIL'}  [{scale_path}]")
+        ok = ok and scale["pass"]
         report["pass"] = ok
     if args.recovery:
         # fixed trace size as in --chaos: the recovery gate is defined

@@ -292,6 +292,15 @@ class AdmissionController:
         # live-set generation the bound caches were computed under;
         # a fault-epoch bump (device down/up) invalidates them all
         self._fault_epoch = 0
+        # O(in-flight)-scan memos, keyed on (frontier.version,
+        # fault_epoch): the total outstanding floor work and the
+        # in-flight (remaining-tail, deadline) slack pairs.  Both are
+        # pure functions of the frontier contents + live set, so a
+        # version/epoch match returns the cached value and probes stop
+        # re-walking every in-flight DAG.  Derived caches — not part of
+        # state_dict (a restored controller rebuilds them lazily).
+        self._floor_work_memo: Optional[tuple] = None
+        self._slack_memo: Optional[tuple] = None
 
     # -- cached critical-path bounds -------------------------------------
     def _sync_fault_epoch(self, state: ExecutionState) -> None:
@@ -482,7 +491,19 @@ class AdmissionController:
         queued frontier work is invisible to per-device ``free_at``
         (stages occupy devices only once issued), so probes must
         account for it explicitly.
+
+        Memoized on ``(frontier.version, fault_epoch)``: the sum only
+        changes when a workflow is admitted/retired or a stage
+        completes (all bump the frontier version) or the live set
+        changes, so back-to-back probes between events reuse it
+        instead of re-walking every in-flight DAG.
         """
+        self._sync_fault_epoch(state)
+        ver = getattr(frontier, "version", None)
+        if ver is not None and self._floor_work_memo is not None:
+            m_ver, m_ep, m_total = self._floor_work_memo
+            if m_ver == ver and m_ep == self._fault_epoch:
+                return m_total
         total = 0.0
         for wid, wf in frontier.workflows.items():
             self.tail_bounds(wf, state)
@@ -491,6 +512,8 @@ class AdmissionController:
             total += sum(c for sid, c in floor.items()
                          if sid not in done)
             total += self.activation_work(wf, state, done)
+        if ver is not None:
+            self._floor_work_memo = (ver, self._fault_epoch, total)
         return total
 
     # -- probes ----------------------------------------------------------
@@ -623,10 +646,127 @@ class AdmissionController:
                         self._congestion_floor(wf, state, frontier))
         return predicted, work / n_dev
 
+    # -- batched probing -------------------------------------------------
+    def probe_batch(self, wfs: Sequence[Workflow],
+                    state: ExecutionState, frontier, policy,
+                    claimed: set) -> dict[str, tuple[float, float]]:
+        """Shared-overlay probe for one same-instant arrival batch.
+
+        Simultaneous arrivals in one event batch see identical device
+        state, so probing them one-by-one runs N one-wave lookahead
+        solves that differ only in which candidate's sources joined the
+        frontier.  This probes them through a SINGLE delta-rescored
+        overlay wave with ALL candidates' sources appended, attributing
+        per-candidate completion estimates and displacement from the
+        one shared solution (within a wave each device carries at most
+        one placement, so attribution is exact).
+
+        Returns ``{wid: (raw_completion_latency, displacement)}`` —
+        the completion estimate is NOT floored by the congestion floor;
+        :meth:`decide` applies the floor at decision time, so a later
+        candidate's floor sees earlier batch admissions exactly as
+        sequential probing would.  Candidates the pre-probe
+        short-circuits of :meth:`decide` would never probe (admission
+        off, or critical path already past the deadline) are omitted.
+        """
+        out: dict[str, tuple[float, float]] = {}
+        if not self.slo.admission:
+            return out
+        cands: list[Workflow] = []
+        for wf in wfs:
+            cp = self.cp_lower_bound(wf, state)
+            deadline = self.slo.deadline(state.now, cp)
+            if cp > deadline - state.now + 1e-12:
+                continue                      # decide() rejects unprobed
+            cands.append(wf)
+        if not cands:
+            return out
+        self.n_probes += len(cands)
+        planner = getattr(policy, "planner", None)
+        if planner is not None and hasattr(planner, "plan_shared"):
+            return self._probe_planned_batch(cands, state, frontier,
+                                             planner, claimed)
+        for wf in cands:                      # analytic probe is cheap:
+            cluster_est = self._probe_analytic_raw(wf, state, frontier,
+                                                   claimed)
+            out[wf.wid] = cluster_est
+        return out
+
+    def _probe_analytic_raw(self, wf: Workflow, state: ExecutionState,
+                            frontier,
+                            claimed: set) -> tuple[float, float]:
+        """:meth:`_probe_analytic` without the congestion floor —
+        the batched path applies the floor in :meth:`decide`."""
+        n_dev = max(state.n_live, 1)
+        avg_wait = state.backlog_seconds() / n_dev
+        n_ready = len(frontier.ready(claimed)) + len(wf.sources())
+        contention = max(1.0, n_ready / n_dev)
+        cp = self.cp_lower_bound(wf, state)
+        work = sum(self._floor[wf.wid].values())
+        return avg_wait + cp * contention, work / n_dev
+
+    def _probe_planned_batch(self, wfs: Sequence[Workflow],
+                             state: ExecutionState, frontier, planner,
+                             claimed: set
+                             ) -> dict[str, tuple[float, float]]:
+        """One shared one-wave lookahead covering every candidate.
+
+        Mirrors :meth:`_probe_planned` (same overlay protocol, same
+        estimator replay, same per-source completion formula) but with
+        all candidates' sources in one merged ready set, so the batch
+        costs one incremental wave instead of N.
+        """
+        from repro.core.costs import CostModel
+        from repro.core.planner import _apply_estimate
+
+        cluster = state.cluster
+        sim = state.overlay()
+        before = {d: sim.device_free(d) for d in cluster.ids()}
+        workflows = dict(frontier.workflows)
+        ready = list(frontier.ready(claimed))
+        for wf in wfs:
+            workflows[wf.wid] = wf
+            ready += [(wf.wid, sid) for sid in wf.sources()]
+        placements = planner.plan_shared(workflows, sim, ready,
+                                         max_waves=1)
+        cm = CostModel(sim, getattr(planner, "cost_params", None))
+        for p in placements:
+            _apply_estimate(workflows[p.wid], sim, p, cm)
+        cand_ids = {wf.wid for wf in wfs}
+        placed: dict[tuple[str, str], float] = {}
+        busy: dict[str, float] = {}
+        for p in placements:
+            if p.wid not in cand_ids:
+                continue
+            fin = max(sim.device_free(d) for d in p.devices)
+            placed[(p.wid, p.sid)] = fin
+            busy[p.wid] = busy.get(p.wid, 0.0) + sum(
+                max(0.0, sim.device_free(d) - before[d])
+                for d in p.devices)
+        live = sim.live_ids() if sim.down else cluster.ids()
+        release = min(sim.device_free(d) for d in live)
+        n_dev = max(len(live), 1)
+        out: dict[str, tuple[float, float]] = {}
+        for wf in wfs:
+            tails = self.tail_bounds(wf, state)
+            floor = self._floor[wf.wid]
+            completion = state.now
+            for sid in wf.sources():
+                fin = placed.get((wf.wid, sid))
+                if fin is not None:
+                    est = fin + (tails[sid] - floor[sid])
+                else:
+                    est = max(release, state.now) + tails[sid]
+                completion = max(completion, est)
+            out[wf.wid] = (completion - state.now,
+                           busy.get(wf.wid, 0.0) / n_dev)
+        return out
+
     # -- decisions -------------------------------------------------------
     def decide(self, wf: Workflow, state: ExecutionState, frontier,
-               policy, claimed: set,
-               arrival: float) -> AdmissionDecision:
+               policy, claimed: set, arrival: float,
+               probe: Optional[tuple[float, float]] = None
+               ) -> AdmissionDecision:
         """Pure decision (no backlog bookkeeping): admit / defer /
         reject ``wf`` given its original ``arrival`` time.
 
@@ -635,6 +775,13 @@ class AdmissionController:
         corrector's live per-family estimate when online correction is
         active — so deferral re-probes automatically track the
         corrected margin too.
+
+        ``probe``, when given, is a precomputed RAW (unfloored)
+        ``(completion_latency, displacement)`` pair from
+        :meth:`probe_batch`; the congestion floor is applied here, at
+        decision time, so batch-mates admitted earlier in the same
+        event batch raise this candidate's floor exactly as sequential
+        probing would.
         """
         cp = self.cp_lower_bound(wf, state)
         deadline = self.slo.deadline(arrival, cp)
@@ -644,8 +791,13 @@ class AdmissionController:
         if cp > budget + 1e-12:
             # unreachable even alone on an idle cluster: shed the load
             return AdmissionDecision("reject", cp, deadline, cp)
-        predicted, displacement = self.probe(wf, state, frontier,
-                                             policy, claimed)
+        if probe is not None:
+            est, displacement = probe
+            predicted = max(est,
+                            self._congestion_floor(wf, state, frontier))
+        else:
+            predicted, displacement = self.probe(wf, state, frontier,
+                                                 policy, claimed)
         margin = self.probe_margin(wf, state)
         fits = margin * predicted <= budget + 1e-12
         if fits and not self._displaces_inflight(state, frontier,
@@ -668,6 +820,32 @@ class AdmissionController:
         """
         if displacement <= 0.0:
             return False
+        for rem, deadline in self._inflight_slack(state, frontier):
+            without = state.now + rem
+            if without <= deadline + 1e-12 < without + displacement:
+                return True
+        return False
+
+    def _inflight_slack(self, state: ExecutionState,
+                        frontier) -> list[tuple[float, float]]:
+        """Memoized ``(remaining-tail, deadline)`` pairs for every
+        in-flight workflow with a registered deadline.
+
+        Keyed on ``(frontier.version, fault_epoch)`` like
+        :meth:`remaining_floor_work`: the remaining tails only change
+        when stages complete (version bump) or the live set changes.
+        Deadlines registered for workflows not yet admitted into the
+        frontier are excluded by construction (matching the unmemoized
+        scan, which skipped wids absent from ``frontier.workflows``),
+        so mid-sweep ``_note_admit`` calls cannot stale the memo.
+        """
+        self._sync_fault_epoch(state)
+        ver = getattr(frontier, "version", None)
+        if ver is not None and self._slack_memo is not None:
+            m_ver, m_ep, m_pairs = self._slack_memo
+            if m_ver == ver and m_ep == self._fault_epoch:
+                return m_pairs
+        pairs: list[tuple[float, float]] = []
         for wid, deadline in self.deadlines.items():
             wf = frontier.workflows.get(wid)
             if wf is None:
@@ -676,10 +854,10 @@ class AdmissionController:
             done = frontier.completed[wid]
             rem = max((tails[sid] for sid in wf.topo_order
                        if sid not in done), default=0.0)
-            without = state.now + rem
-            if without <= deadline + 1e-12 < without + displacement:
-                return True
-        return False
+            pairs.append((rem, deadline))
+        if ver is not None:
+            self._slack_memo = (ver, self._fault_epoch, pairs)
+        return pairs
 
     def _shed(self, wid: str, policy) -> None:
         """Record a rejection and release every cache that references
@@ -694,12 +872,15 @@ class AdmissionController:
             policy.forget_workflow(wid)
 
     def on_arrival(self, wf: Workflow, state: ExecutionState, frontier,
-                   policy, claimed: set) -> AdmissionDecision:
+                   policy, claimed: set,
+                   probe: Optional[tuple[float, float]] = None
+                   ) -> AdmissionDecision:
         """Arrival-time decision with backlog bookkeeping applied:
         deferrals land in the bounded backlog (or degrade to reject
-        when it is full); rejects are recorded."""
+        when it is full); rejects are recorded.  ``probe`` forwards a
+        precomputed raw estimate from :meth:`probe_batch`."""
         dec = self.decide(wf, state, frontier, policy, claimed,
-                          arrival=state.now)
+                          arrival=state.now, probe=probe)
         if dec.action == "defer":
             if len(self.backlog) >= self.slo.backlog_limit:
                 dec.action = "reject"
@@ -736,6 +917,20 @@ class AdmissionController:
             if state.now + cp > deadline + 1e-12:
                 self._shed(wf.wid, policy)         # expired
                 continue
+            if not force and self.slo.admission:
+                # the probe's prediction is floored at the congestion
+                # floor, so when margin·floor already exceeds the
+                # budget the decision is defer regardless of what the
+                # solver lookahead would say — skip the probe (FP-safe:
+                # predicted = max(est, floor) ≥ floor exactly, and
+                # x ↦ fl(m·x) is monotone for m > 0, so
+                # m·floor > budget + ε implies m·predicted > budget + ε
+                # and decide() could only defer)
+                floor = self._congestion_floor(wf, state, frontier)
+                margin = self.probe_margin(wf, state)
+                if margin * floor > (deadline - state.now) + 1e-12:
+                    keep.append((arrival, wf))
+                    continue
             dec = self.decide(wf, state, frontier, policy, claimed,
                               arrival=arrival)
             if dec.action == "admit" or force:

@@ -90,6 +90,34 @@ class FrontierSolution:
     nodes: int
 
 
+def combine_solutions(sols: list["FrontierSolution"]) -> "FrontierSolution":
+    """Union of per-pool solutions from a hierarchical sharded solve.
+
+    The pools partition both the device axis and the row set, so the
+    per-pool assignments are disjoint on rows *and* devices and their
+    union is a feasible assignment of the original merged problem.
+    Assignment insertion order follows pool order (the caller solves
+    pools in index order), keeping downstream materialization
+    deterministic.  Objective/nodes/wall-clock are summed; status
+    degrades to the weakest member (any non-OPTIMAL pool makes the
+    combined solve FEASIBLE).
+    """
+    if not sols:
+        return FrontierSolution("OPTIMAL", 0.0, {}, 0.0, 0)
+    assignment: dict[tuple, int] = {}
+    for s in sols:
+        assignment.update(s.assignment)
+    status = "OPTIMAL" if all(s.status == "OPTIMAL" for s in sols) \
+        else "FEASIBLE"
+    return FrontierSolution(
+        status=status,
+        objective=float(sum(s.objective for s in sols)),
+        assignment=assignment,
+        wall_time=float(sum(s.wall_time for s in sols)),
+        nodes=int(sum(s.nodes for s in sols)),
+    )
+
+
 _AUG_BUFFERS: dict[tuple[int, int], np.ndarray] = {}
 
 

@@ -33,7 +33,8 @@ import numpy as np
 
 from repro.core.costs import CostModel, CostParams, shard_partition
 from repro.core.frontier_solver import (NEG, FrontierProblem,
-                                        FrontierSolution, merge_problems,
+                                        FrontierSolution,
+                                        combine_solutions, merge_problems,
                                         solve_frontier_exact)
 from repro.core.scoring import FrontierScores, ScoreParams, Scorer
 from repro.core.state import ExecutionState
@@ -88,8 +89,16 @@ class FrontierPlanner:
                  time_limit: float = 5.0, use_matrix: bool = True,
                  use_delta: bool = True, warm_start: bool = True,
                  cost_params: Optional[CostParams] = None,
-                 max_waves: Optional[int] = None):
+                 max_waves: Optional[int] = None, pools: int = 1):
         self.params = params or ScoreParams()
+        # hierarchical sharded solve: > 1 splits every merged-frontier
+        # wave into that many disjoint device pools (affinity-aware) and
+        # solves each pool exactly; 1 keeps the monolithic merged solve.
+        # See docs/SCALE.md for the partition scheme and its invariants.
+        self.pools = max(1, int(pools))
+        # test/bench hook: explicit device-id pools (list of id lists)
+        # that override the residency-aware partitioner when set.
+        self._forced_partition: Optional[list[list[int]]] = None
         # default wave cap of plan_shared (None = plan until the merged
         # frontier is exhausted); per-call max_waves overrides it — the
         # admission probe always passes 1 regardless of this default
@@ -309,6 +318,13 @@ class FrontierPlanner:
             base_n += len(flat)
         margin = (self.params.margin_factor * (base_sum / base_n)
                   if base_n else 1.0)
+        partition = None
+        if self.pools > 1 or self._forced_partition is not None:
+            partition = self._partition_frontier(sim, workflows, by_wid,
+                                                 counts)
+        if partition is not None:
+            return self._solve_pooled(workflows, sim, per_wf, margin,
+                                      partition)
         for wid, fs, sids in per_wf:
             rows, weights = self._rows_from_scores(
                 self._mask_down(fs, sim), sids, margin,
@@ -339,6 +355,173 @@ class FrontierPlanner:
             n_rows=len(problem.rows), n_devices=len(problem.devices),
             objective=sol.objective))
         return self._materialize_shared(workflows, sim, sol)
+
+    # ------------------------------------------------------------------
+    # hierarchical sharded solve (device-pool partitioning)
+    # ------------------------------------------------------------------
+    def _partition_frontier(self, sim: ExecutionState,
+                            workflows: dict[str, Workflow],
+                            by_wid: dict[str, list[str]],
+                            counts: dict[str, int]
+                            ) -> Optional[tuple[list[list[int]],
+                                                dict[str, int]]]:
+        """Split one wave into per-pool subproblems, or ``None``.
+
+        Builds ``pools`` disjoint device pools (column positions into
+        the canonical cluster id order) by greedily packing residency
+        groups — same-resident-model devices stay together, groups
+        ordered by merged-frontier demand — then assigns every workflow
+        wholly to one pool by resident-model affinity with
+        load-balancing tie-breaks.  All choices are deterministic
+        functions of the (sorted) inputs, so identical states partition
+        identically.
+
+        Returns ``None`` — caller falls back to the monolithic merged
+        solve for this wave — whenever some workflow has a ready stage
+        with no live eligible device in any single pool, or the pool
+        count cannot be realized.  The fallback keeps the pool
+        invariants (each pool solved independently ⇒ at most one
+        assignment per device per wave requires disjoint pools covering
+        every candidate device of every row in the subproblem).
+        """
+        ids = sim.cluster.ids()
+        pos_of = {d: j for j, d in enumerate(ids)}
+        if self._forced_partition is not None:
+            pool_cols = [sorted(pos_of[d] for d in grp)
+                         for grp in self._forced_partition]
+            if sorted(j for cols in pool_cols for j in cols) \
+                    != list(range(len(ids))):
+                raise ValueError(
+                    "forced partition must cover every device exactly "
+                    "once")
+        else:
+            n_pools = self.pools
+            if n_pools >= len(ids):
+                return None
+            groups = sim.residency_groups()
+            ordered = sorted((m for m in groups if m is not None),
+                             key=lambda m: (-counts.get(m, 0), m))
+            if None in groups:
+                ordered.append(None)
+            pool_cols = [[] for _ in range(n_pools)]
+            for m in ordered:
+                pi = min(range(n_pools),
+                         key=lambda i: (len(pool_cols[i]), i))
+                pool_cols[pi].extend(pos_of[d] for d in groups[m])
+            # no pool may be empty: steal trailing columns from the
+            # fullest pool (deterministic donor choice)
+            for pi in range(n_pools):
+                while not pool_cols[pi]:
+                    donor = max(range(n_pools),
+                                key=lambda i: (len(pool_cols[i]), -i))
+                    if len(pool_cols[donor]) <= 1:
+                        return None
+                    pool_cols[pi].append(pool_cols[donor].pop())
+            pool_cols = [sorted(cols) for cols in pool_cols]
+        down = getattr(sim, "down", None) or set()
+        # per-pool live-device tallies by resident model (affinity) and
+        # overall (feasibility fast path for unconstrained stages)
+        n_pools = len(pool_cols)
+        pool_live = [0] * n_pools
+        aff: dict[str, list[int]] = {}
+        for pi, cols in enumerate(pool_cols):
+            for j in cols:
+                d = ids[j]
+                if d in down:
+                    continue
+                pool_live[pi] += 1
+                m = sim.residency.get(d)
+                if m is not None:
+                    aff.setdefault(m, [0] * n_pools)[pi] += 1
+        zeros = [0] * n_pools
+        wid_pool: dict[str, int] = {}
+        rows_per_pool = [0] * n_pools
+        for wid, sids in by_wid.items():
+            wf = workflows[wid]
+            feasible = []
+            for pi, cols in enumerate(pool_cols):
+                if not pool_live[pi]:
+                    continue
+                ok = True
+                for sid in sids:
+                    elig = wf.stages[sid].eligible
+                    if not elig:
+                        continue        # any live device serves
+                    if not any(ids[j] in elig and ids[j] not in down
+                               for j in cols):
+                        ok = False
+                        break
+                if ok:
+                    feasible.append(pi)
+            if not feasible:
+                return None
+            best = max(feasible, key=lambda pi: (
+                sum(aff.get(wf.stages[sid].model, zeros)[pi]
+                    for sid in sids),
+                -rows_per_pool[pi], -pi))
+            wid_pool[wid] = best
+            rows_per_pool[best] += len(sids)
+        return pool_cols, wid_pool
+
+    def _solve_pooled(self, workflows: dict[str, Workflow],
+                      sim: ExecutionState,
+                      per_wf: list[tuple[str, FrontierScores, list[str]]],
+                      margin: float,
+                      partition: tuple[list[list[int]], dict[str, int]]
+                      ) -> list[Placement]:
+        """Exact per-pool solves of one partitioned wave.
+
+        Score tables are built (and delta-rescored) on the full device
+        axis exactly as in the monolithic path — the wave margin too —
+        then column-sliced per pool via :meth:`FrontierScores.restrict`,
+        so a single-pool partition reproduces the monolithic solve
+        bit-for-bit.  Pools are solved in index order and the disjoint
+        per-pool assignments unioned (:func:`combine_solutions`), which
+        keeps materialization order deterministic.
+        """
+        pool_cols, wid_pool = partition
+        sols = []
+        for pi, cols in enumerate(pool_cols):
+            probs: list[FrontierProblem] = []
+            n_rows = 0
+            for wid, fs, sids in per_wf:
+                if wid_pool.get(wid) != pi:
+                    continue
+                sub = self._mask_down(fs, sim).restrict(cols)
+                rows, weights = self._rows_from_scores(
+                    sub, sids, margin, key_of=lambda s, w=wid: (w, s))
+                if not rows:
+                    continue
+                hint = None
+                if self.warm_start and self._shared_hint:
+                    # stale entries pointing outside the pool are
+                    # ignored by the solver (absent-device hints)
+                    hint = {r: self._shared_hint[r] for r in rows
+                            if r in self._shared_hint} or None
+                probs.append(FrontierProblem(
+                    rows, sub.devices, np.array(weights), hint=hint))
+                n_rows += len(rows)
+            if not probs:
+                continue
+            problem = merge_problems(probs)
+            t0 = time.perf_counter()
+            sol = solve_frontier_exact(problem, self.time_limit)
+            self.phase_ms["solve"] += (time.perf_counter() - t0) * 1e3
+            self.solve_log.append(SolveRecord(
+                wall_time=sol.wall_time, nodes=sol.nodes,
+                status=sol.status, n_rows=len(problem.rows),
+                n_devices=len(problem.devices),
+                objective=sol.objective))
+            sols.append(sol)
+        if not sols:
+            return []
+        combined = combine_solutions(sols)
+        if self.warm_start:
+            if len(self._shared_hint) > 8192:
+                self._shared_hint = dict(combined.assignment)
+            else:
+                self._shared_hint.update(combined.assignment)
+        return self._materialize_shared(workflows, sim, combined)
 
     # ------------------------------------------------------------------
     # vectorized wave

@@ -39,6 +39,7 @@ sink stage finish at different times).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import json
@@ -141,7 +142,16 @@ class SchedulerConfig:
       fault-free scheduler (serving mode only; ignored by ``batch``);
     * ``event_buffer`` — ring-buffer cap on the retained event stream
       (``None`` = unbounded); long-running serving deployments set a
-      cap so :attr:`Scheduler.events` cannot grow without bound.
+      cap so :attr:`Scheduler.events` cannot grow without bound;
+    * ``pools`` — hierarchical sharded frontier solve: partition the
+      merged ready frontier into this many residency-aware device
+      pools and solve each pool exactly, combining the disjoint
+      per-pool solutions (``1`` = the monolithic solve; see
+      :class:`~repro.core.planner.FrontierPlanner`);
+    * ``batch_probes`` — admission probes of simultaneous arrivals in
+      one event batch share a single delta-rescored lookahead wave
+      (see :meth:`~repro.core.admission.AdmissionController
+      .probe_batch`) instead of running one solve per arrival.
 
     ``to_json``/``from_json`` round-trip the whole object — including
     the embedded calibration profile — so a benchmark gate can be
@@ -163,6 +173,8 @@ class SchedulerConfig:
     replan_on_completion: bool = True
     faults: Optional[FaultPlan] = None
     event_buffer: Optional[int] = None
+    pools: int = 1
+    batch_probes: bool = False
 
     # -- lowering --------------------------------------------------------
     def effective_cost_params(self) -> Optional[CostParams]:
@@ -223,6 +235,8 @@ class SchedulerConfig:
             "faults": (self.faults.to_dict()
                        if self.faults is not None else None),
             "event_buffer": self.event_buffer,
+            "pools": self.pools,
+            "batch_probes": self.batch_probes,
         }
         return json.dumps(doc, indent=2, sort_keys=True) + "\n"
 
@@ -257,6 +271,8 @@ class SchedulerConfig:
             faults=(FaultPlan.from_dict(doc["faults"])
                     if doc.get("faults") is not None else None),
             event_buffer=doc.get("event_buffer"),
+            pools=int(doc.get("pools", 1)),
+            batch_probes=bool(doc.get("batch_probes", False)),
         )
 
     def save(self, path) -> Path:
@@ -762,12 +778,63 @@ class SharedFrontier:
     merged list is deterministic; the planner (not this container)
     decides how cross-workflow contention is resolved.  A workflow is
     retired automatically once its last stage completes.
+
+    The ready set is INDEXED: per workflow, a topo-sorted list of
+    dependency-ready stages plus unmet-parent counters, maintained
+    incrementally on admit/complete/retire, so :meth:`ready` costs
+    O(ready + in-flight) instead of re-walking every DAG
+    (O(total stages)) per call — the dominant scan at 1k-workflow
+    scale.  ``version`` increments on every mutation; admission-probe
+    memos key on it.  :meth:`ready_reference` keeps the brute-force
+    walk for audits and tests.
     """
 
     def __init__(self) -> None:
         self.workflows: dict[str, Workflow] = {}
         self.completed: dict[str, set[str]] = {}
-        self._order: list[str] = []
+        #: mutation counter (admit/complete/retire); cache key for
+        #: derived views (admission-probe memos, planner partitions)
+        self.version = 0
+        # per-wid ready index: sorted (topo_pos, sid) pairs of
+        # dependency-ready not-yet-completed stages, the unmet-parent
+        # counts behind them, the topo position map, and the workflow
+        # generation the index was built against (topology mutation
+        # via Workflow.invalidate_topology forces a rebuild)
+        self._ready: dict[str, list[tuple[int, str]]] = {}
+        self._unmet: dict[str, dict[str, int]] = {}
+        self._topo_pos: dict[str, dict[str, int]] = {}
+        self._gen: dict[str, int] = {}
+
+    @property
+    def _order(self) -> list[str]:
+        """Admission-ordered workflow ids (the dict insertion order is
+        the admission order — kept as a view so retiring a workflow is
+        O(1) instead of a list scan)."""
+        return list(self.workflows)
+
+    def _index_workflow(self, wid: str) -> None:
+        """(Re)build one workflow's ready index from scratch."""
+        wf = self.workflows[wid]
+        done = self.completed[wid]
+        pos = {sid: i for i, sid in enumerate(wf.topo_order)}
+        unmet: dict[str, int] = {}
+        ready: list[tuple[int, str]] = []
+        for sid in wf.topo_order:
+            if sid in done:
+                continue
+            n = sum(1 for p in wf.stages[sid].parents if p not in done)
+            unmet[sid] = n
+            if n == 0:
+                ready.append((pos[sid], sid))
+        self._topo_pos[wid] = pos
+        self._unmet[wid] = unmet
+        self._ready[wid] = ready
+        self._gen[wid] = wf.generation
+
+    def reindex(self) -> None:
+        """Rebuild every workflow's ready index (snapshot restore)."""
+        for wid in self.workflows:
+            self._index_workflow(wid)
 
     def admit(self, wf: Workflow) -> None:
         """Add an in-flight workflow; its sources become ready."""
@@ -776,27 +843,69 @@ class SharedFrontier:
         wf.validate()
         self.workflows[wf.wid] = wf
         self.completed[wf.wid] = set()
-        self._order.append(wf.wid)
+        self._index_workflow(wf.wid)
+        self.version += 1
 
     def complete(self, wid: str, sid: str) -> bool:
         """Record a stage completion; True if the workflow finished."""
         done = self.completed[wid]
         done.add(sid)
-        if len(done) == len(self.workflows[wid].stages):
+        self.version += 1
+        wf = self.workflows[wid]
+        if len(done) == len(wf.stages):
             self.retire(wid)
             return True
+        if self._gen.get(wid) != wf.generation:
+            self._index_workflow(wid)       # topology mutated: rebuild
+            return False
+        pos = self._topo_pos[wid]
+        ready = self._ready[wid]
+        unmet = self._unmet[wid]
+        if unmet.pop(sid, 1) == 0:          # drop the completed stage
+            i = bisect.bisect_left(ready, (pos[sid], sid))
+            if i < len(ready) and ready[i] == (pos[sid], sid):
+                del ready[i]
+        for c in wf.stages[sid].children:
+            n = unmet.get(c)
+            if n is None:
+                continue                    # child already completed
+            unmet[c] = n - 1
+            if n == 1:                      # became dependency-ready
+                bisect.insort(ready, (pos[c], c))
         return False
 
     def retire(self, wid: str) -> None:
         """Drop a workflow (finished or evicted) from the frontier."""
         self.workflows.pop(wid, None)
         self.completed.pop(wid, None)
-        self._order.remove(wid)
+        self._ready.pop(wid, None)
+        self._unmet.pop(wid, None)
+        self._topo_pos.pop(wid, None)
+        self._gen.pop(wid, None)
+        self.version += 1
 
     def ready(self, exclude: set[StageKey]) -> list[StageKey]:
-        """Merged dependency-ready, not-yet-claimed stage keys."""
+        """Merged dependency-ready, not-yet-claimed stage keys.
+
+        Indexed: reads the per-workflow ready lists (admission order,
+        topo order within a workflow — identical output to
+        :meth:`ready_reference`, which the invariant audit asserts).
+        """
         out: list[StageKey] = []
-        for wid in self._order:
+        for wid, wf in self.workflows.items():
+            if self._gen.get(wid) != wf.generation:
+                self._index_workflow(wid)
+            for _pos, sid in self._ready[wid]:
+                if (wid, sid) not in exclude:
+                    out.append((wid, sid))
+        return out
+
+    def ready_reference(self, exclude: set[StageKey]) -> list[StageKey]:
+        """Brute-force ready walk (the pre-index implementation),
+        kept as the ground truth the indexed :meth:`ready` is audited
+        against."""
+        out: list[StageKey] = []
+        for wid in self.workflows:
             wf = self.workflows[wid]
             done = self.completed[wid]
             for sid in wf.topo_order:
@@ -1030,6 +1139,26 @@ class Scheduler:
         self.committed: list[Placement] = []
         self.issued: set[StageKey] = set()
         self.runs: dict[StageKey, StageRun] = {}
+        # indexed views of the commit pool and issued set, kept in
+        # lockstep by _commit/_drop_commit_index/_drop_issued (the
+        # invariant audit cross-checks them against the authoritative
+        # list/set).  They replace the per-tick O(committed × parents)
+        # feasibility scan and the O(issued) by-device/by-workflow
+        # scans in the crash/failure paths.
+        self._committed_keys: set[StageKey] = set()
+        self._commit_unmet: dict[StageKey, int] = {}
+        self._commit_feasible: set[StageKey] = set()
+        # parent stage key -> commit keys waiting on it, plus the
+        # reverse map so drops clean up without a workflow lookup
+        self._commit_waiting: dict[StageKey, set[StageKey]] = {}
+        self._commit_parents: dict[StageKey, list[StageKey]] = {}
+        self._committed_by_dev: dict[int, set[StageKey]] = {}
+        self._issued_by_dev: dict[int, set[StageKey]] = {}
+        self._issued_by_wid: dict[str, set[StageKey]] = {}
+        # devices recorded at ISSUE time — runs[key] can be replaced
+        # by a winning speculative copy on different devices before
+        # the drop, so index removal must not read runs[key]
+        self._issued_devices: dict[StageKey, tuple] = {}
         self._wf_finish: dict[str, float] = {}
         self._arrivals: dict[str, float] = {}
         self._deadlines: dict[str, float] = {}
@@ -1502,7 +1631,7 @@ class Scheduler:
         for wid in doc["frontier"]["order"]:
             fr.workflows[wid] = wfs[wid]
             fr.completed[wid] = set(doc["frontier"]["completed"][wid])
-            fr._order.append(wid)
+        fr.reindex()
         self.frontier = fr
         # replaces the scripted crash/recover events the constructor
         # pre-pushed — the snapshot heap carries the pending ones
@@ -1513,6 +1642,7 @@ class Scheduler:
         self.issued = {tuple(k) for k in doc["issued"]}
         self.runs = _keyed_dict_from_doc(doc["runs"],
                                          _stagerun_from_doc)
+        self._rebuild_indexes()
         self._wf_finish = dict(doc["wf_finish"])
         self._arrivals = dict(doc["arrivals"])
         self._deadlines = dict(doc["deadlines"])
@@ -1613,7 +1743,102 @@ class Scheduler:
         return limit
 
     def _claimed_keys(self) -> set[StageKey]:
-        return self.issued | {(p.wid, p.sid) for p in self.committed}
+        return self.issued | self._committed_keys
+
+    # -- commit-pool / issued-set indexes ---------------------------------
+    def _commit(self, p: Placement) -> None:
+        """Append one placement to the commit pool, indexing it: key
+        set, unmet-parent count (feeding the O(1) pool-feasibility
+        check), waiting-on maps, and the by-device view."""
+        key = (p.wid, p.sid)
+        self.committed.append(p)
+        self._committed_keys.add(key)
+        wf = self.frontier.workflows.get(p.wid)
+        done = self.frontier.completed.get(p.wid, ())
+        unmet = ([par for par in wf.stages[p.sid].parents
+                  if par not in done] if wf is not None else [])
+        self._commit_unmet[key] = len(unmet)
+        parents = [(p.wid, par) for par in unmet]
+        self._commit_parents[key] = parents
+        for pk in parents:
+            self._commit_waiting.setdefault(pk, set()).add(key)
+        if wf is not None and not unmet:
+            self._commit_feasible.add(key)
+        for d in p.devices:
+            self._committed_by_dev.setdefault(d, set()).add(key)
+
+    def _commit_all(self, ps: Sequence[Placement]) -> None:
+        for p in ps:
+            self._commit(p)
+
+    def _drop_commit_index(self, p: Placement) -> None:
+        """Remove one placement's index entries (the caller removes it
+        from the ``committed`` list itself)."""
+        key = (p.wid, p.sid)
+        self._committed_keys.discard(key)
+        self._commit_feasible.discard(key)
+        self._commit_unmet.pop(key, None)
+        for pk in self._commit_parents.pop(key, ()):
+            s = self._commit_waiting.get(pk)
+            if s is not None:
+                s.discard(key)
+                if not s:
+                    del self._commit_waiting[pk]
+        for d in p.devices:
+            s = self._committed_by_dev.get(d)
+            if s is not None:
+                s.discard(key)
+                if not s:
+                    del self._committed_by_dev[d]
+
+    def _clear_committed(self) -> None:
+        """Empty the commit pool and every index over it (preemption /
+        crash / completion-replan revocation)."""
+        self.committed.clear()
+        self._committed_keys.clear()
+        self._commit_unmet.clear()
+        self._commit_feasible.clear()
+        self._commit_waiting.clear()
+        self._commit_parents.clear()
+        self._committed_by_dev.clear()
+
+    def _drop_issued(self, key: StageKey) -> None:
+        """Remove ``key`` from the issued set and its indexes, using
+        the devices recorded at issue time (``runs[key]`` may already
+        hold a winning speculative copy on other devices)."""
+        self.issued.discard(key)
+        for d in self._issued_devices.pop(key, ()):
+            s = self._issued_by_dev.get(d)
+            if s is not None:
+                s.discard(key)
+                if not s:
+                    del self._issued_by_dev[d]
+        s = self._issued_by_wid.get(key[0])
+        if s is not None:
+            s.discard(key)
+            if not s:
+                del self._issued_by_wid[key[0]]
+
+    def _rebuild_indexes(self) -> None:
+        """Recompute every derived committed/issued index from the
+        authoritative structures (snapshot-restore path).  Unmet
+        counts come from the restored completion sets, so the rebuilt
+        indexes are exactly what incremental maintenance would have
+        produced."""
+        pool = self.committed
+        self.committed = []
+        self._clear_committed()
+        for p in pool:
+            self._commit(p)
+        self._issued_by_dev = {}
+        self._issued_by_wid = {}
+        self._issued_devices = {}
+        for key in self.issued:
+            devs = self.runs[key].placement.devices
+            self._issued_devices[key] = devs
+            self._issued_by_wid.setdefault(key[0], set()).add(key)
+            for d in devs:
+                self._issued_by_dev.setdefault(d, set()).add(key)
 
     def _stall_name(self) -> str:
         if self.batch:
@@ -1674,6 +1899,10 @@ class Scheduler:
                        tuple(shard_fin), tuple(switched))
         self.runs[key] = run
         self.issued.add(key)
+        self._issued_devices[key] = p.devices
+        self._issued_by_wid.setdefault(p.wid, set()).add(key)
+        for d in p.devices:
+            self._issued_by_dev.setdefault(d, set()).add(key)
         prio = p.sid if self.batch else self._seq
         kind = "finish" if fail_frac is None else "fail"
         heapq.heappush(self._heap, (fin_all, prio, self._seq, kind,
@@ -1699,20 +1928,33 @@ class Scheduler:
                               finish=fin_all))
 
     def _issue_all(self) -> None:
-        progress = True
-        while progress:
-            progress = False
-            for p in list(self.committed):
-                key = (p.wid, p.sid)
-                if key in self.issued \
-                        or p.wid not in self.frontier.workflows \
-                        or p.sid in self.frontier.completed[p.wid]:
-                    self.committed.remove(p)
-                    continue
-                if self._issuable(p):
-                    self.committed.remove(p)
-                    self._issue(p)
-                    progress = True
+        """Issue every committed placement that is dependency-ready on
+        free live devices, purging stale commitments (already issued,
+        retired workflow, completed stage).
+
+        Single pass: issuing a placement never makes another committed
+        placement MORE issuable at the same instant — parents only
+        complete in event handlers, and issuing only raises device
+        free times — so one in-order sweep reaches the same fixpoint
+        the historical issue-until-no-progress loop did, without
+        re-scanning the pool once per issued placement.
+        """
+        if not self.committed:
+            return
+        keep: list[Placement] = []
+        for p in self.committed:
+            key = (p.wid, p.sid)
+            if key in self.issued \
+                    or p.wid not in self.frontier.workflows \
+                    or p.sid in self.frontier.completed[p.wid]:
+                self._drop_commit_index(p)
+                continue
+            if self._issuable(p):
+                self._drop_commit_index(p)
+                self._issue(p)
+            else:
+                keep.append(p)
+        self.committed = keep
 
     def _admit(self, wf: Workflow, arrival: float,
                deadline: Optional[float] = None) -> None:
@@ -1741,7 +1983,7 @@ class Scheduler:
         solution hint."""
         if self.committed:
             revoked = list(self.committed)
-            self.committed.clear()
+            self._clear_committed()
             self.preemptions += 1
             hook = getattr(self.policy, "on_preempt", None)
             if hook is not None:
@@ -1783,8 +2025,16 @@ class Scheduler:
                 for _ in range(nq):
                     qd[qid] = max(qd.get(qid, 0.0), dfin)
                     qid += 1
-        self.issued.discard(key)
+        self._drop_issued(key)
         done = self.frontier.complete(wid, sid)
+        # committed placements waiting on this stage move one parent
+        # closer to issuable; zero unmet parents = pool-feasible
+        for ck in self._commit_waiting.pop(key, ()):
+            n = self._commit_unmet.get(ck)
+            if n is not None:
+                self._commit_unmet[ck] = n - 1
+                if n == 1:
+                    self._commit_feasible.add(ck)
         hook = getattr(self.policy, "on_completion", None)
         if hook is not None:
             hook(wid, sid, state)
@@ -1827,7 +2077,31 @@ class Scheduler:
                                    self.state, sids))
         return out
 
-    def _process_arrival(self, wf: Workflow) -> None:
+    def _process_arrivals(self, wfs: list[Workflow]) -> None:
+        """Process one same-instant run of arrival events (pop order).
+
+        With ``config.batch_probes`` and 2+ simultaneous arrivals, the
+        admission probes are batched: one shared delta-rescored
+        lookahead wave covers every candidate
+        (:meth:`~repro.core.admission.AdmissionController.probe_batch`)
+        and the per-arrival decisions are applied in pop order with
+        the congestion floor evaluated at decision time — each
+        decision still sees its predecessors' admissions.  Otherwise
+        the arrivals are processed sequentially, byte-identically to
+        the unbatched scheduler.
+        """
+        adm = self.admission
+        if len(wfs) < 2 or adm is None or not self.config.batch_probes:
+            for wf in wfs:
+                self._process_arrival(wf)
+            return
+        probes = adm.probe_batch(wfs, self.state, self.frontier,
+                                 self.policy, self._claimed_keys())
+        for wf in wfs:
+            self._process_arrival(wf, probe=probes.get(wf.wid))
+
+    def _process_arrival(self, wf: Workflow,
+                         probe: Optional[tuple] = None) -> None:
         state = self.state
         if wf.wid in self._workflows_all:
             # stats/arrivals are keyed by wid for the whole run, so a
@@ -1841,7 +2115,7 @@ class Scheduler:
             self._admit(wf, state.now)
             return
         dec = adm.on_arrival(wf, state, self.frontier, self.policy,
-                             self._claimed_keys())
+                             self._claimed_keys(), probe=probe)
         if dec.action == "admit":
             self._admit(wf, state.now, dec.deadline)
             if dec.preempt:
@@ -1874,7 +2148,7 @@ class Scheduler:
         if key not in self.issued or token != self._run_token.get(key, 0):
             return                      # stale event (already handled)
         wid, sid = key
-        self.issued.discard(key)
+        self._drop_issued(key)
         self._run_token[key] = token + 1
         attempt = self._attempts.get(key, 0) + 1
         self._attempts[key] = attempt
@@ -1964,8 +2238,7 @@ class Scheduler:
         d = crash.device
         if d in state.down:
             return
-        for key in sorted(k for k in self.issued
-                          if d in self.runs[k].placement.devices):
+        for key in sorted(self._issued_by_dev.get(d, ())):
             run = self.runs[key]
             for sd in run.placement.devices:
                 if sd != d:
@@ -1982,7 +2255,7 @@ class Scheduler:
                                    reason="crash",
                                    recover_at=crash.recover_at,
                                    n_revoked=n))
-        self.committed.clear()          # failure-aware replan
+        self._clear_committed()         # failure-aware replan
 
     def _on_device_recover(self, d: int) -> None:
         """Device rejoined (crash recovery or quarantine expiry):
@@ -1997,7 +2270,7 @@ class Scheduler:
         if hook is not None:
             hook(d, state)
         self._emit(DeviceRecoveredEvent(t=state.now, device=d))
-        self.committed.clear()          # replan onto the wider set
+        self._clear_committed()         # replan onto the wider set
 
     def _quarantine(self, d: int) -> None:
         """Health tracker tripped on ``d``: temporarily evict it
@@ -2024,11 +2297,15 @@ class Scheduler:
         """Withdraw committed-but-unissued placements touching ``d``
         (no execution state was mutated for them) and notify the
         policy's preemption hook.  Returns the revoked count."""
-        revoked = [p for p in self.committed if d in p.devices]
-        if not revoked:
+        keys = self._committed_by_dev.get(d)
+        if not keys:
             return 0
+        keys = set(keys)
+        revoked = [p for p in self.committed if (p.wid, p.sid) in keys]
         self.committed = [p for p in self.committed
-                          if d not in p.devices]
+                          if (p.wid, p.sid) not in keys]
+        for p in revoked:
+            self._drop_commit_index(p)
         hook = getattr(self.policy, "on_preempt", None)
         if hook is not None:
             hook(revoked, self.state)
@@ -2039,10 +2316,15 @@ class Scheduler:
         workflow up.  Invalidates its in-flight runs, scrubs its
         commitments/holds, retires it from the frontier, and records
         it on :attr:`failed` (reported by :meth:`drain`)."""
-        for key in sorted(k for k in self.issued if k[0] == wid):
-            self.issued.discard(key)
+        for key in sorted(self._issued_by_wid.get(wid, ())):
+            self._drop_issued(key)
             self._run_token[key] = self._run_token.get(key, 0) + 1
-        self.committed = [p for p in self.committed if p.wid != wid]
+        dropped = [p for p in self.committed if p.wid == wid]
+        if dropped:
+            self.committed = [p for p in self.committed
+                              if p.wid != wid]
+            for p in dropped:
+                self._drop_commit_index(p)
         for key in [k for k in self._hold if k[0] == wid]:
             del self._hold[key]
         for key in [k for k in self._attempts if k[0] == wid]:
@@ -2081,12 +2363,11 @@ class Scheduler:
             # heap event guarantees the clock reaches their release
             ready = [k for k in ready
                      if not self._held(k, state.now)]
-        pool_feasible = any(
-            all(par in self.frontier.completed[p.wid]
-                for par in self.frontier.workflows[p.wid]
-                .stages[p.sid].parents)
-            for p in self.committed
-            if p.wid in self.frontier.workflows)
+        # O(1) via the unmet-parent index: _issue_all just purged every
+        # commitment whose workflow left the frontier, so a key with
+        # zero unmet parents is exactly what the historical
+        # all-parents-completed scan over the pool found
+        pool_feasible = bool(self._commit_feasible)
         if ready and not pool_feasible:
             new = self._plan(ready)
             self.replans += 1
@@ -2102,7 +2383,7 @@ class Scheduler:
                     self._emit(PlacementEvent(
                         t=state.now, wid=p.wid, sid=p.sid,
                         devices=p.devices, shard_sizes=p.shard_sizes))
-                self.committed.extend(new)
+                self._commit_all(new)
                 self._issue_all()  # start the fresh plan NOW, before
                 return "work"      # the clock advances to next event
         if not advance:
@@ -2150,11 +2431,20 @@ class Scheduler:
                 self._finish(key)
                 completed_any = True
         else:
+            # consecutive same-instant arrivals are collected into one
+            # batch so their admission probes can share a lookahead
+            # wave; the flush before any other event kind (and at loop
+            # end) preserves the exact pop-order semantics
+            arrivals: list[Workflow] = []
             while self._heap and self._heap[0][0] <= t + 1e-12:
                 _, _, _, kind, payload = heapq.heappop(self._heap)
                 if kind == "arrive":
-                    self._process_arrival(payload)
-                elif kind == "finish":
+                    arrivals.append(payload)
+                    continue
+                if arrivals:
+                    self._process_arrivals(arrivals)
+                    arrivals = []
+                if kind == "finish":
                     key, token, run = payload
                     if key in self.issued \
                             and token == self._run_token.get(key, 0):
@@ -2177,6 +2467,8 @@ class Scheduler:
                     self._on_device_crash(payload)
                 else:               # "recover"
                     self._on_device_recover(payload)
+            if arrivals:
+                self._process_arrivals(arrivals)
         if completed_any and adm is not None:
             # re-admission sweep: freed capacity may now fit the
             # oldest deferred arrivals (one per sweep so each
@@ -2194,7 +2486,7 @@ class Scheduler:
         if completed_any and self.replan_on_completion and self.committed:
             # revoke unissued commitments: the completed stage changed
             # ρ/κ/ℓ/τ, so the merged frontier is re-solved
-            self.committed.clear()
+            self._clear_committed()
         return "advanced"
 
 
@@ -2225,6 +2517,11 @@ def audit_invariants(sched: Scheduler) -> list[str]:
       completion sets <-> registry/arrival tables, completed sids
       exist in their DAG, and no in-flight workflow already has final
       stats;
+    * the indexed structures match their brute-force references: the
+      frontier's incremental ready index reproduces the full DAG walk,
+      the commit-pool key/unmet/feasibility indexes match the pool,
+      and the issued by-device/by-workflow indexes match the issued
+      set;
     * event ring accounting: ``n_total == n_dropped + retained``, the
       cap is respected, and nothing is dropped while uncapped.
     """
@@ -2265,11 +2562,14 @@ def audit_invariants(sched: Scheduler) -> list[str]:
                 v.append(f"committed placement {key} targets downed "
                          f"device {d}")
     # frontier bookkeeping ------------------------------------------------
-    if sorted(fr._order) != sorted(fr.workflows):
-        v.append("frontier order list out of sync with workflow map")
     if sorted(fr.completed) != sorted(fr.workflows):
         v.append("frontier completion sets out of sync with "
                  "workflow map")
+    for name, idx in (("ready", fr._ready), ("unmet", fr._unmet),
+                      ("topo-pos", fr._topo_pos)):
+        if sorted(idx) != sorted(fr.workflows):
+            v.append(f"frontier {name} index keys out of sync with "
+                     f"workflow map")
     for wid, wf in fr.workflows.items():
         if wid not in sched._workflows_all:
             v.append(f"frontier workflow {wid} missing from the "
@@ -2284,6 +2584,50 @@ def audit_invariants(sched: Scheduler) -> list[str]:
         if wid in sched.stats:
             v.append(f"workflow {wid} is both in flight and "
                      f"finalized in stats")
+    # indexed structures vs brute-force references ------------------------
+    if fr.ready(set()) != fr.ready_reference(set()):
+        v.append("frontier ready index diverges from the brute-force "
+                 "DAG walk")
+    c_keys = {(p.wid, p.sid) for p in sched.committed}
+    if c_keys != sched._committed_keys:
+        v.append("committed key index out of sync with the pool")
+    feas: set[StageKey] = set()
+    for p in sched.committed:
+        key = (p.wid, p.sid)
+        wf = fr.workflows.get(p.wid)
+        if wf is None:
+            continue
+        done = fr.completed[p.wid]
+        brute = sum(1 for par in wf.stages[p.sid].parents
+                    if par not in done)
+        if sched._commit_unmet.get(key) != brute:
+            v.append(f"commit unmet-parent count for {key} is "
+                     f"{sched._commit_unmet.get(key)}, expected "
+                     f"{brute}")
+        if brute == 0:
+            feas.add(key)
+    if feas != {k for k in sched._commit_feasible
+                if k in c_keys and k[0] in fr.workflows}:
+        v.append("commit feasibility index out of sync with the pool")
+    by_dev: dict[int, set[StageKey]] = {}
+    for p in sched.committed:
+        for d in p.devices:
+            by_dev.setdefault(d, set()).add((p.wid, p.sid))
+    if by_dev != sched._committed_by_dev:
+        v.append("committed by-device index out of sync with the pool")
+    if set(sched._issued_devices) != sched.issued:
+        v.append("issued device record out of sync with the issued "
+                 "set")
+    i_dev: dict[int, set[StageKey]] = {}
+    i_wid: dict[str, set[StageKey]] = {}
+    for key, devs in sched._issued_devices.items():
+        i_wid.setdefault(key[0], set()).add(key)
+        for d in devs:
+            i_dev.setdefault(d, set()).add(key)
+    if i_dev != sched._issued_by_dev:
+        v.append("issued by-device index out of sync")
+    if i_wid != sched._issued_by_wid:
+        v.append("issued by-workflow index out of sync")
     # event ring accounting ----------------------------------------------
     ev = sched.events
     if ev.n_total != ev.n_dropped + len(ev):

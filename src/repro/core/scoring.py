@@ -225,6 +225,33 @@ class FrontierScores:
             return gain
         return np.where(self.eligible[i], gain, NEG)
 
+    def restrict(self, cols: Sequence[int]) -> "FrontierScores":
+        """Column-sliced copy for a device-pool subproblem.
+
+        ``cols`` are column *positions* into :attr:`devices` (not device
+        ids).  Every per-device table is sliced to the pool's columns so
+        downstream row building, shard-weight derivation (``solo_best``
+        becomes pool-local, by design) and solving see only the pool's
+        devices; rows, scalars and the eligibility flags carry over
+        unchanged.  Fancy indexing copies, so the slice never aliases
+        the cached full-axis tables, and slicing the full column set in
+        order reproduces the originals bit-for-bit.  The component
+        cache is deliberately dropped (``comp=None``) — it is keyed to
+        the full device axis and must never seed a delta rescore from a
+        pool-shaped table.
+        """
+        idx = np.asarray(list(cols), dtype=int)
+        return dataclasses.replace(
+            self,
+            devices=[self.devices[j] for j in idx],
+            raw=self.raw[:, idx],
+            eft=self.eft[:, idx],
+            base=self.base[:, idx],
+            eligible=self.eligible[:, idx],
+            wait=self.wait[idx],
+            comp=None,
+        )
+
 
 class _WaveCtx:
     """Per-wave scratch: cluster vectors, state gathers, lazy caches."""

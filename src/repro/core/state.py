@@ -44,6 +44,8 @@ from repro.core.workflow import ModelProfile, Stage, Workflow
 
 @dataclasses.dataclass
 class PrefixEntry:
+    """One warm shared-prefix slot on a device: group, model, warmth."""
+
     group: str
     model: str
     warm_queries: int = 0          # number of queries whose prefix is warm
@@ -52,6 +54,10 @@ class PrefixEntry:
 
 @dataclasses.dataclass
 class ExecutionState:
+    """Mutable cluster-wide execution state ``s_t``: residency (ρ),
+    prefix caches (κ), output locations (ℓ), device free times (τ),
+    the fault domain, and mechanism counters."""
+
     cluster: Cluster
     profiles: dict[str, ModelProfile]
     # ρ_t: device -> resident model alias (None = empty)
@@ -93,6 +99,7 @@ class ExecutionState:
 
     # -- dirty-set protocol (see module docstring) -----------------------
     def touch_device(self, device: int) -> None:
+        """Mark ``device`` dirty for the delta-rescoring consumer."""
         self._dirty_devices.add(device)
 
     def drain_dirty(self) -> set[int]:
@@ -103,12 +110,16 @@ class ExecutionState:
 
     # -- ρ --------------------------------------------------------------
     def resident_model(self, device: int) -> Optional[str]:
+        """Model alias currently resident on ``device`` (None = empty)."""
         return self.residency.get(device)
 
     def is_resident(self, model: str, device: int) -> bool:
+        """Whether ``model`` is the resident model on ``device``."""
         return self.residency.get(device) == model
 
     def set_resident(self, device: int, model: str) -> None:
+        """Load ``model`` onto ``device``, counting the switch and
+        dropping prefix entries invalidated by the swap."""
         if self.residency.get(device) != model:
             self.model_switches += 1
             # switching a model invalidates that device's prefix cache
@@ -133,6 +144,8 @@ class ExecutionState:
 
     def warm_prefix(self, device: int, group: Optional[str], model: str,
                     queries: int, now: float) -> None:
+        """Record that ``queries`` of prefix ``group`` are warm on
+        ``device`` under ``model`` (monotone in query count)."""
         if group is None:
             return
         slot = self.prefix[device].setdefault(
@@ -146,6 +159,7 @@ class ExecutionState:
 
     # -- ℓ --------------------------------------------------------------
     def parent_locations(self, wid: str, stage: Stage) -> dict[str, tuple]:
+        """Map each parent stage id to the devices holding its output."""
         return {p: self.output_loc.get((wid, p), ()) for p in stage.parents}
 
     def parent_on_device(self, wid: str, stage: Stage, device: int) -> int:
@@ -158,10 +172,12 @@ class ExecutionState:
 
     # -- τ --------------------------------------------------------------
     def set_free_at(self, device: int, t: float) -> None:
+        """Set device ``d``'s next-free time τ_d and mark it dirty."""
         self.free_at[device] = t
         self.touch_device(device)
 
     def device_free(self, device: int) -> float:
+        """Next-free time τ_d for ``device`` (0.0 if never used)."""
         return self.free_at.get(device, 0.0)
 
     def wait_time(self, device: int, t: Optional[float] = None) -> float:
@@ -175,6 +191,22 @@ class ExecutionState:
         probe divides this by the device count to estimate how long a
         new arrival waits before its first stage can start."""
         return sum(self.wait_time(d) for d in self.cluster.ids())
+
+    def residency_groups(self) -> dict[Optional[str], list[int]]:
+        """Device ids grouped by currently-resident model.
+
+        Devices with no resident model (cold, or wiped by a fail-stop
+        crash) land under the ``None`` key.  Group membership follows
+        the cluster's canonical id order, so for a fixed residency map
+        the grouping is deterministic.  The hierarchical frontier
+        partitioner uses this to build affinity-aware device pools:
+        keeping same-model devices in one pool preserves the colocation
+        and prefix-cache bonuses that the planner score rewards.
+        """
+        out: dict[Optional[str], list[int]] = {}
+        for d in self.cluster.ids():
+            out.setdefault(self.residency.get(d), []).append(d)
+        return out
 
     # -- fault domain -----------------------------------------------------
     def live_ids(self) -> list[int]:
@@ -361,11 +393,15 @@ class PlanningOverlay(ExecutionState):
 
     def warm_prefix(self, device: int, group: Optional[str], model: str,
                     queries: int, now: float) -> None:
+        """Copy-on-write wrapper: own the device's prefix map, then
+        apply the base-class warm-prefix update to the overlay only."""
         if group is None:
             return
         self._own_prefix(device)
         super().warm_prefix(device, group, model, queries, now)
 
     def set_resident(self, device: int, model: str) -> None:
+        """Copy-on-write wrapper around residency switching, so the
+        prefix-invalidation side effect stays overlay-local."""
         self._own_prefix(device)
         super().set_resident(device, model)

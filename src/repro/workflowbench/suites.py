@@ -65,6 +65,7 @@ def prefix_suite_instance(ratio: float, index: int,
 
 def prefix_suite(ratio: float, n_instances: int = 8,
                  num_queries: int = 16) -> list[Workflow]:
+    """Batch of prefix-sharing workflow instances at one shared ratio."""
     return [prefix_suite_instance(ratio, i, num_queries)
             for i in range(n_instances)]
 
@@ -104,6 +105,7 @@ def conflict_suite_instance(ratio: float, index: int,
 
 def conflict_suite(ratio: float, n_instances: int = 4,
                    num_queries: int = 16) -> list[Workflow]:
+    """Batch of cache-conflict workflow instances at one shared ratio."""
     return [conflict_suite_instance(ratio, i, num_queries)
             for i in range(n_instances)]
 
@@ -196,6 +198,81 @@ def overloaded_serving_trace(n_workflows: int = 18, rate: float = 14.0,
     return poisson_serving_trace(n_workflows=n_workflows, rate=rate,
                                  seed=seed, num_queries=num_queries,
                                  mix="mixed")
+
+
+def scale_instance(index: int, num_queries: int = 4) -> Workflow:
+    """One small workflow for the 1k-workflow scale trace.
+
+    Shapes cycle through four tiny templates (2–5 stages: pair, chain,
+    diamond, shardable fan-out/merge) over the five bench model
+    families, with prefix groups shared within a burst-sized cohort —
+    small enough that a thousand instances drain in bench time, varied
+    enough that scoring (transfer, residency, prefix, sharding) and the
+    pooled partitioner all stay live.  Deterministic in ``index``.
+    """
+    models = ["qwen-7b", "deepseek-7b", "llama-8b", "llama-3b",
+              "qwen-14b"]
+    m = models[index % 5]
+    m2 = models[(index + 2) % 5]
+    grp = f"scale:g{index % 16}"
+    shape = index % 4
+    stages: dict[str, Stage] = {}
+    if shape == 0:                                  # pair: a -> b
+        stages["a"] = Stage("a", m, base_cost={-1: 0.06},
+                            prefix_group=grp, shared_fraction=0.5,
+                            output_tokens=192.0)
+        stages["b"] = Stage("b", m2, base_cost={-1: 0.08},
+                            output_tokens=256.0, parents=("a",))
+    elif shape == 1:                                # chain: a -> b -> c
+        stages["a"] = Stage("a", m, base_cost={-1: 0.05},
+                            output_tokens=192.0)
+        stages["b"] = Stage("b", m2, base_cost={-1: 0.09},
+                            prefix_group=grp, shared_fraction=0.5,
+                            output_tokens=256.0, parents=("a",))
+        stages["c"] = Stage("c", m, base_cost={-1: 0.06},
+                            output_tokens=192.0, parents=("b",))
+    elif shape == 2:                                # diamond
+        stages["src"] = Stage("src", m, base_cost={-1: 0.05},
+                              output_tokens=192.0)
+        for side in ("l", "r"):
+            stages[side] = Stage(side, m2, base_cost={-1: 0.08},
+                                 prefix_group=grp, shared_fraction=0.5,
+                                 output_tokens=256.0, parents=("src",))
+        stages["sink"] = Stage("sink", m, base_cost={-1: 0.06},
+                               output_tokens=192.0,
+                               parents=("l", "r"))
+    else:                                           # fan-out / merge
+        stages["src"] = Stage("src", m, base_cost={-1: 0.05},
+                              output_tokens=192.0)
+        for i in range(3):
+            stages[f"w{i}"] = Stage(
+                f"w{i}", m2, max_shards=2, base_cost={-1: 0.1},
+                prefix_group=grp, shared_fraction=0.5,
+                output_tokens=256.0, parents=("src",))
+        stages["merge"] = Stage("merge", m, base_cost={-1: 0.07},
+                                output_tokens=256.0,
+                                parents=("w0", "w1", "w2"))
+    return Workflow(wid=f"scale-{index:04d}", stages=stages,
+                    num_queries=num_queries, family="scale")
+
+
+def scale_serving_trace(n_workflows: int = 1000, burst: int = 8,
+                        gap: float = 0.25, num_queries: int = 4
+                        ) -> list[tuple[float, "Workflow"]]:
+    """Bursty arrival trace for the 1k-workflow ``--scale`` gate.
+
+    Arrivals land in bursts of ``burst`` workflows at the SAME
+    timestamp (exercising batched admission probing: one shared
+    lookahead overlay per burst), bursts spaced ``gap`` simulated
+    seconds apart so in-flight depth stays bounded while consecutive
+    bursts overlap.  Instances are the tiny mixed
+    :func:`scale_instance` shapes.  Fully deterministic.
+    """
+    trace: list[tuple[float, Workflow]] = []
+    for i in range(n_workflows):
+        t = (i // burst) * gap
+        trace.append((t, scale_instance(i, num_queries)))
+    return trace
 
 
 def chaos_fault_plan(seed: int = 0) -> "FaultPlan":

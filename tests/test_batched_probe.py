@@ -1,0 +1,141 @@
+"""Batched admission probing: burst arrivals share one lookahead.
+
+When an event batch delivers several same-timestamp arrivals and
+``SchedulerConfig.batch_probes`` is on, the admission controller runs
+ONE shared delta-rescored overlay (a single ``plan_shared`` wave with
+every candidate's source stages) instead of one overlay per arrival,
+and applies the congestion floor per candidate at decision time — so
+decisions stay deterministic, respect arrival order, and match what
+sequential probing decides.  These tests pin all three properties plus
+the probe-count accounting and the config surface.
+"""
+import dataclasses
+
+from repro.core.admission import AdmissionController, SLOConfig
+from repro.core.devices import homogeneous_cluster
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.workflowbench.suites import overloaded_serving_trace
+
+
+def _bursty_trace(n=18, bucket=0.5):
+    """The overloaded n=18 trace with arrivals quantized onto shared
+    timestamps, so every bucket lands as one simultaneous burst."""
+    trace = overloaded_serving_trace(n_workflows=n)
+    return [(round(t / bucket) * bucket, wf) for t, wf in trace]
+
+
+def _run(trace, batch_probes, n_devices=6, **cfg_kw):
+    config = SchedulerConfig(policy="FATE", slo=SLOConfig(),
+                             batch_probes=batch_probes, **cfg_kw)
+    sched = Scheduler(homogeneous_cluster(n_devices), config)
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    res = sched.drain()
+    return res, sched
+
+
+def _events(sched):
+    return [(type(e).__name__, dataclasses.astuple(e))
+            for e in sched.events]
+
+
+def test_batched_matches_sequential_on_overloaded_trace():
+    """Same-timestamp bursts: batched probing must reproduce the
+    sequential path's admit/defer/reject decisions, placements, and
+    timings on the overloaded n=18 trace exactly."""
+    trace = _bursty_trace()
+    seq, s_seq = _run(trace, batch_probes=False)
+    bat, s_bat = _run(trace, batch_probes=True)
+    assert set(seq.stats) == set(bat.stats)
+    assert seq.rejected == bat.rejected          # order-sensitive
+    assert seq.deferrals == bat.deferrals
+    assert seq.preemptions == bat.preemptions
+    assert seq.horizon == bat.horizon
+    assert {w: s.makespan for w, s in seq.stats.items()} \
+        == {w: s.makespan for w, s in bat.stats.items()}
+    assert set(s_seq.runs) == set(s_bat.runs)
+    assert all(s_seq.runs[k].placement.devices
+               == s_bat.runs[k].placement.devices for k in s_seq.runs)
+    # the trace actually stressed the control plane
+    assert seq.rejected or seq.deferrals
+
+
+def test_batched_matches_sequential_distinct_timestamps():
+    """Distinct-timestamp arrivals form singleton batches, which fall
+    back to the sequential path — results must be bit-identical."""
+    trace = overloaded_serving_trace(n_workflows=12)
+    seq, s_seq = _run(trace, batch_probes=False)
+    bat, s_bat = _run(trace, batch_probes=True)
+    assert _events(s_seq) == _events(s_bat)
+
+
+def test_batched_burst_deterministic():
+    """Two identical batched runs emit bit-identical event streams."""
+    trace = _bursty_trace()
+    _, a = _run(trace, batch_probes=True)
+    _, b = _run(trace, batch_probes=True)
+    assert _events(a) == _events(b)
+
+
+def test_burst_decisions_respect_arrival_order():
+    """Within one burst the controller decides in submit order: the
+    AdmittedEvent/rejection sequence lists burst members exactly as
+    submitted (admission is stateful — earlier admits raise the floor
+    later candidates see — so order is part of the contract)."""
+    trace = _bursty_trace()
+    res, sched = _run(trace, batch_probes=True)
+    order = {wf.wid: i for i, (_, wf) in enumerate(trace)}
+    by_t: dict[float, list[str]] = {}
+    for t, wf in trace:
+        by_t.setdefault(t, []).append(wf.wid)
+    decided: dict[float, list[str]] = {}
+    for ev in sched.events:
+        name = type(ev).__name__
+        if name == "AdmittedEvent":
+            decided.setdefault(ev.t, []).append(ev.wid)
+    for t, wids in decided.items():
+        burst = [w for w in by_t.get(t, []) if w in wids]
+        assert [w for w in wids if w in burst] \
+            == sorted(burst, key=order.__getitem__)
+
+
+def test_probe_count_matches_candidates():
+    """Batched probing still accounts one probe per probed candidate
+    (n_probes is the admission plane's work metric)."""
+    trace = _bursty_trace()
+    _, s_seq = _run(trace, batch_probes=False)
+    _, s_bat = _run(trace, batch_probes=True)
+    assert s_bat.admission.n_probes > 0
+    assert s_bat.admission.n_probes == s_seq.admission.n_probes
+
+
+def test_probe_batch_empty_when_admission_off():
+    from repro.core.executor import fresh_state
+    from repro.core.policies import make_policy
+
+    adm = AdmissionController(SLOConfig(admission=False))
+    state = fresh_state(homogeneous_cluster(2))
+    trace = overloaded_serving_trace(n_workflows=2)
+    wfs = [wf for _, wf in trace]
+    from repro.core.executor import SharedFrontier
+    frontier = SharedFrontier()
+    out = adm.probe_batch(wfs, state, frontier, make_policy("FATE"),
+                          set())
+    assert out == {}
+    assert adm.n_probes == 0
+
+
+def test_config_round_trips_batch_probes_and_pools():
+    cfg = SchedulerConfig(policy="FATE", batch_probes=True, pools=4)
+    doc = cfg.to_json()
+    back = SchedulerConfig.from_json(doc)
+    assert back.batch_probes is True and back.pools == 4
+    # defaults stay off/monolithic, including for configs serialized
+    # before the knobs existed
+    assert SchedulerConfig().batch_probes is False
+    assert SchedulerConfig().pools == 1
+    import json
+    old = json.loads(SchedulerConfig(policy="FATE").to_json())
+    del old["batch_probes"], old["pools"]
+    legacy = SchedulerConfig.from_json(json.dumps(old))
+    assert legacy.batch_probes is False and legacy.pools == 1

@@ -184,7 +184,9 @@ def test_crash_revokes_committed_placements_on_dead_device():
         lambda revoked, state: observed.extend(revoked)
     doomed = Placement("w", "a", (2, 3), (4, 4))
     survivor = Placement("w", "b", (0,), (8,))
-    sched.committed.extend([doomed, survivor])
+    # commitments enter through _commit_all so the indexed
+    # by-device view the revocation path reads stays in sync
+    sched._commit_all([doomed, survivor])
     sched._on_device_crash(DeviceCrash(device=2, at=0.0))
     assert observed == [doomed]
     assert 2 in sched.state.down

@@ -1,0 +1,231 @@
+"""Randomized invariant stress suite for the event-driven scheduler.
+
+Property-based (hypothesis, with the offline deterministic shim as
+fallback): each example draws a full serving scenario — random DAG
+shapes, bursty arrivals sharing timestamps, tight or loose SLO
+deadlines, pool counts, batched probing, and optionally a seeded fault
+plan — then drives ``Scheduler.step()`` to drain with
+``audit_invariants`` asserted at EVERY step (``audit_every=1`` raises
+``RecoveryError`` on the first violation).  The properties:
+
+* the run always terminates, with zero invariant violations at every
+  step and after drain;
+* conservation: every submitted workflow ends in exactly one of
+  completed / rejected / failed;
+* a mid-run snapshot restores into a scheduler that passes the audit
+  and drains to the bit-identical outcome.
+
+Each test enforces a wall-clock budget so the suite stays inside
+tier-1 time; the heavier examples carry the ``slow`` marker
+(deselect with ``-m "not slow"``).
+"""
+import random
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # offline container
+    from _fallback_hypothesis import given, settings, strategies as st
+
+from repro.core.admission import SLOConfig
+from repro.core.devices import homogeneous_cluster
+from repro.core.faults import DeviceCrash, FaultPlan, ShardFailure, \
+    Slowdown
+from repro.core.scheduler import (Scheduler, SchedulerConfig,
+                                  audit_invariants)
+from repro.core.workflow import Stage, Workflow
+
+BUDGET_S = 120.0                # per-test wall-clock ceiling
+MODELS = ["qwen-7b", "deepseek-7b", "llama-8b", "llama-3b"]
+
+
+def random_workflow(rng: random.Random, wid: str) -> Workflow:
+    """Random small DAG: 2-6 stages, random acyclic parents, a mix of
+    shardable and prefix-sharing stages."""
+    n = rng.randint(2, 6)
+    names = [f"s{i}" for i in range(n)]
+    stages: dict[str, Stage] = {}
+    for i, sid in enumerate(names):
+        k = rng.randint(0, min(i, 2))
+        parents = tuple(sorted(rng.sample(names[:i], k))) if k else ()
+        stages[sid] = Stage(
+            sid, rng.choice(MODELS),
+            base_cost={-1: rng.uniform(0.04, 0.12)},
+            max_shards=2 if rng.random() < 0.3 else 1,
+            prefix_group=(f"{wid}:g" if rng.random() < 0.5 else None),
+            shared_fraction=0.5,
+            output_tokens=float(rng.choice([128, 256, 384])),
+            parents=parents)
+    return Workflow(wid=wid, stages=stages, num_queries=2)
+
+
+def random_trace(rng: random.Random, n_wfs: int):
+    """Bursty arrival trace: arrivals advance in random increments but
+    frequently share the previous timestamp (burst member)."""
+    trace = []
+    t = 0.0
+    for i in range(n_wfs):
+        if i and rng.random() < 0.5:
+            pass                         # same timestamp: burst member
+        else:
+            t += rng.uniform(0.0, 0.6)
+        trace.append((round(t, 6), random_workflow(rng, f"wf{i:03d}")))
+    return trace
+
+
+def random_fault_plan(rng: random.Random, trace, n_devices: int
+                      ) -> FaultPlan:
+    crashes = ()
+    if rng.random() < 0.7:
+        at = rng.uniform(0.2, 2.0)
+        crashes = (DeviceCrash(device=rng.randrange(n_devices), at=at,
+                               recover_at=at + rng.uniform(0.5, 2.0)),)
+    slowdowns = ()
+    if rng.random() < 0.5:
+        at = rng.uniform(0.0, 1.0)
+        slowdowns = (Slowdown(device=rng.randrange(n_devices), at=at,
+                              until=at + rng.uniform(0.5, 2.0),
+                              factor=rng.uniform(1.5, 3.0)),)
+    failures = []
+    for _ in range(rng.randint(0, 2)):
+        _, wf = rng.choice(trace)
+        failures.append(ShardFailure(
+            wid=wf.wid, sid=rng.choice(list(wf.stages)),
+            at_fraction=rng.uniform(0.1, 0.9)))
+    return FaultPlan(seed=rng.randrange(1 << 16), crashes=crashes,
+                     slowdowns=slowdowns, failures=tuple(failures),
+                     max_retries=3, retry_backoff=0.05,
+                     straggler_threshold=1.8, speculate=True)
+
+
+def random_config(rng: random.Random, faults=None) -> SchedulerConfig:
+    slo = None
+    if rng.random() < 0.8:
+        slo = SLOConfig(
+            latency_scale=rng.choice([1.5, 2.5, 6.0, 30.0]),
+            backlog_limit=rng.choice([2, 8]),
+            admission=rng.random() < 0.8,
+            preemption=rng.random() < 0.7)
+    return SchedulerConfig(
+        policy="FATE", slo=slo,
+        pools=rng.choice([1, 2, 3]),
+        batch_probes=rng.random() < 0.6,
+        event_buffer=rng.choice([None, 256]),
+        faults=faults)
+
+
+def _drive_audited(trace, config, n_devices):
+    """Submit the trace and step to drain with audit_every=1 (raises
+    RecoveryError on the first invariant violation)."""
+    sched = Scheduler(homogeneous_cluster(n_devices), config,
+                      audit_every=1)
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    res = sched.drain()
+    assert not audit_invariants(sched)   # once more, post-drain
+    return res, sched
+
+
+def _check_conservation(trace, res):
+    submitted = {wf.wid for _, wf in trace}
+    completed = set(res.stats)
+    rejected = set(res.rejected)
+    failed = set(res.failed)
+    assert completed | rejected | failed == submitted
+    assert not completed & rejected
+    assert not completed & failed
+    assert not rejected & failed
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=0, max_value=1_000_000))
+@settings(max_examples=8, deadline=None)
+def test_random_traces_hold_invariants_every_step(seed):
+    """Random bursty SLO traces, audited at every step: zero
+    violations, guaranteed drain, conservation of workflows."""
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    trace = random_trace(rng, rng.randint(6, 12))
+    config = random_config(rng)
+    res, _ = _drive_audited(trace, config, rng.choice([3, 4, 6]))
+    _check_conservation(trace, res)
+    assert time.perf_counter() - t0 < BUDGET_S
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=0, max_value=1_000_000))
+@settings(max_examples=5, deadline=None)
+def test_random_faulted_traces_hold_invariants_every_step(seed):
+    """Same property under randomized fault plans (crash + recovery,
+    slowdown episodes, targeted shard failures): the failure-handling
+    paths clear/rebuild the indexes and must never desync them."""
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    n_devices = rng.choice([4, 6])
+    trace = random_trace(rng, rng.randint(6, 10))
+    faults = random_fault_plan(rng, trace, n_devices)
+    config = random_config(rng, faults=faults)
+    res, _ = _drive_audited(trace, config, n_devices)
+    _check_conservation(trace, res)
+    assert time.perf_counter() - t0 < BUDGET_S
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=0, max_value=1_000_000),
+       st.floats(min_value=0.1, max_value=0.9))
+@settings(max_examples=5, deadline=None)
+def test_mid_run_snapshot_restores_bit_identically(seed, frac):
+    """Snapshot at a random point mid-run, restore from the JSON
+    document, audit, and drain: the restored run's outcome must be
+    bit-identical to the uninterrupted run's."""
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    n_devices = rng.choice([4, 6])
+    trace = random_trace(rng, rng.randint(6, 10))
+    config = random_config(rng)
+
+    def fresh():
+        sched = Scheduler(homogeneous_cluster(n_devices), config)
+        for t, wf in trace:
+            sched.submit(wf, at=t)
+        return sched
+
+    base = fresh()
+    steps = 0
+    while base.step():
+        steps += 1
+    base_res = base.drain()
+
+    sched = fresh()
+    for _ in range(max(1, int(steps * frac))):
+        if not sched.step():
+            break
+    restored = Scheduler.restore(sched.snapshot())
+    assert not audit_invariants(restored)
+    res = restored.drain()
+    assert not audit_invariants(restored)
+    assert set(res.stats) == set(base_res.stats)
+    assert {w: (s.arrival, s.finish, s.makespan)
+            for w, s in res.stats.items()} \
+        == {w: (s.arrival, s.finish, s.makespan)
+            for w, s in base_res.stats.items()}
+    assert res.rejected == base_res.rejected
+    assert res.failed == base_res.failed
+    assert res.horizon == base_res.horizon
+    assert time.perf_counter() - t0 < BUDGET_S
+
+
+def test_stress_machinery_smoke():
+    """Unmarked fast path (always in tier-1): one fixed scenario per
+    machinery piece, so a `-m "not slow"` run still exercises the
+    stress harness end to end."""
+    t0 = time.perf_counter()
+    rng = random.Random(1234)
+    trace = random_trace(rng, 8)
+    config = SchedulerConfig(policy="FATE", slo=SLOConfig(), pools=2,
+                             batch_probes=True)
+    res, _ = _drive_audited(trace, config, 4)
+    _check_conservation(trace, res)
+    assert time.perf_counter() - t0 < BUDGET_S

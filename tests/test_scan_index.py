@@ -1,0 +1,277 @@
+"""Indexed hot-loop structures vs their brute-force references.
+
+The 1k-scale PR replaced every O(in-flight) scan in the scheduler's
+event loop with incrementally-maintained indexes: the frontier's
+per-workflow ready lists, the commit pool's key/unmet/feasibility and
+by-device views, the issued set's by-device/by-workflow views, the
+admission controller's floor-work and in-flight-slack memos, and the
+bounded event ring.  Each test here drives an index against the
+brute-force computation it replaced on small inputs and asserts exact
+agreement — plus an end-to-end drain with the per-step invariant audit
+armed (the audit itself cross-checks every index).
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # offline container
+    from _fallback_hypothesis import given, settings, strategies as st
+
+from repro.core.admission import AdmissionController, SLOConfig
+from repro.core.devices import homogeneous_cluster
+from repro.core.executor import fresh_state
+from repro.core.scheduler import (EventLog, Scheduler, SchedulerConfig,
+                                  SharedFrontier, audit_invariants)
+from repro.core.workflow import Stage, Workflow
+from repro.workflowbench.suites import (chaos_fault_plan,
+                                        overloaded_serving_trace)
+
+
+def random_workflow(rng: random.Random, wid: str) -> Workflow:
+    """Small random DAG: 2-7 stages, random parents among earlier
+    stages (always acyclic)."""
+    n = rng.randint(2, 7)
+    models = ["qwen-7b", "llama-8b", "llama-3b"]
+    stages: dict[str, Stage] = {}
+    names = [f"s{i}" for i in range(n)]
+    for i, sid in enumerate(names):
+        k = rng.randint(0, min(i, 3))
+        parents = tuple(sorted(rng.sample(names[:i], k))) if k else ()
+        stages[sid] = Stage(sid, rng.choice(models),
+                            base_cost={-1: 0.05 + 0.01 * i},
+                            parents=parents)
+    return Workflow(wid=wid, stages=stages, num_queries=2)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25)
+def test_frontier_ready_index_matches_reference(seed):
+    """Random admit/complete/retire sequences: the incremental ready
+    index must equal the brute-force DAG walk after every mutation,
+    under random exclude sets, until every workflow retires."""
+    rng = random.Random(seed)
+    fr = SharedFrontier()
+    wfs = [random_workflow(rng, f"w{i}") for i in range(rng.randint(2, 5))]
+    pending = []
+    for wf in wfs:
+        fr.admit(wf)
+        pending.append(wf)
+        assert fr.ready(set()) == fr.ready_reference(set())
+    versions = [fr.version]
+    while fr.workflows:
+        ready = fr.ready(set())
+        assert ready == fr.ready_reference(set())
+        # random exclude subset must filter identically
+        excl = {k for k in ready if rng.random() < 0.4}
+        assert fr.ready(excl) == fr.ready_reference(excl)
+        wid, sid = rng.choice(ready)
+        finished = fr.complete(wid, sid)
+        assert finished == (wid not in fr.workflows)
+        versions.append(fr.version)
+    assert sorted(set(versions)) == versions     # strictly monotone
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=10)
+def test_frontier_early_retire_and_readmit(seed):
+    """Retiring a workflow mid-flight (eviction path) drops all of its
+    index state; the remaining merged frontier still matches the
+    reference, and the wid can be admitted again afterwards."""
+    rng = random.Random(seed)
+    fr = SharedFrontier()
+    for i in range(3):
+        fr.admit(random_workflow(rng, f"w{i}"))
+    victim = rng.choice(list(fr.workflows))
+    fr.retire(victim)
+    assert victim not in fr._ready and victim not in fr._unmet
+    assert fr.ready(set()) == fr.ready_reference(set())
+    fr.admit(random_workflow(rng, victim))
+    assert fr.ready(set()) == fr.ready_reference(set())
+
+
+def _brute_indexes(sched):
+    """Recompute every scheduler index the slow way."""
+    by_dev_c: dict[int, set] = {}
+    for p in sched.committed:
+        for d in p.devices:
+            by_dev_c.setdefault(d, set()).add((p.wid, p.sid))
+    by_dev_i: dict[int, set] = {}
+    by_wid_i: dict[str, set] = {}
+    for key in sched.issued:
+        devs = sched._issued_devices[key]
+        by_wid_i.setdefault(key[0], set()).add(key)
+        for d in devs:
+            by_dev_i.setdefault(d, set()).add(key)
+    fr = sched.frontier
+    feas = set()
+    for p in sched.committed:
+        wf = fr.workflows.get(p.wid)
+        if wf is None:
+            continue
+        done = fr.completed[p.wid]
+        if all(par in done for par in wf.stages[p.sid].parents):
+            feas.add((p.wid, p.sid))
+    return by_dev_c, by_dev_i, by_wid_i, feas
+
+
+def test_scheduler_indexes_match_brute_force_every_step():
+    """Step an overloaded SLO run and cross-check the commit/issued
+    indexes against full recomputation after every step (stronger
+    than the audit's spot checks: exact map equality)."""
+    trace = overloaded_serving_trace(n_workflows=10)
+    sched = Scheduler(homogeneous_cluster(4),
+                      SchedulerConfig(policy="FATE", slo=SLOConfig()))
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    steps = 0
+    while sched.step():
+        steps += 1
+        by_dev_c, by_dev_i, by_wid_i, feas = _brute_indexes(sched)
+        assert sched._committed_keys \
+            == {(p.wid, p.sid) for p in sched.committed}
+        assert {d: ks for d, ks in sched._committed_by_dev.items() if ks} \
+            == by_dev_c
+        assert {d: ks for d, ks in sched._issued_by_dev.items() if ks} \
+            == by_dev_i
+        assert {w: ks for w, ks in sched._issued_by_wid.items() if ks} \
+            == by_wid_i
+        assert set(sched._issued_devices) == sched.issued
+        # feasibility index: every brute-feasible committed key of a
+        # live workflow is feasible in the index and vice versa
+        idx_feas = {k for k in sched._commit_feasible
+                    if k in sched._committed_keys
+                    and k[0] in sched.frontier.workflows}
+        assert idx_feas == feas
+        assert sched.frontier.ready(set()) \
+            == sched.frontier.ready_reference(set())
+    assert steps > 0
+    sched.drain()
+
+
+def test_faulted_pooled_run_under_per_step_audit():
+    """Chaos trace (crash + recovery + shard failures) with pools and
+    batched probes on, audited EVERY step: the crash/recover paths
+    clear and rebuild the indexes, and audit_invariants raises
+    RecoveryError on any index desync (so a clean drain is the
+    assertion)."""
+    trace = overloaded_serving_trace(n_workflows=12)
+    cfg = SchedulerConfig(policy="FATE", slo=SLOConfig(), pools=2,
+                          batch_probes=True,
+                          faults=chaos_fault_plan(seed=0))
+    sched = Scheduler(homogeneous_cluster(6), cfg, audit_every=1)
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    res = sched.drain()
+    assert not audit_invariants(sched)
+    assert res.stats                     # work actually completed
+    assert res.device_downs >= 1         # the fault script engaged
+
+
+def test_admission_floor_work_memo_matches_fresh_controller():
+    """The (frontier.version, fault_epoch)-keyed floor-work memo must
+    be invisible: the memoized controller always returns what a fresh
+    controller computes, across admits/completions/retires."""
+    rng = random.Random(7)
+    state = fresh_state(homogeneous_cluster(4))
+    fr = SharedFrontier()
+    memo = AdmissionController(SLOConfig())
+    for i in range(4):
+        fr.admit(random_workflow(rng, f"m{i}"))
+        a = memo.remaining_floor_work(fr, state)
+        b = AdmissionController(SLOConfig()).remaining_floor_work(
+            fr, state)
+        assert a == b
+        # cached second call returns the identical object/value
+        assert memo.remaining_floor_work(fr, state) == a
+    while fr.workflows:
+        wid, sid = fr.ready(set())[0]
+        fr.complete(wid, sid)
+        fresh = AdmissionController(SLOConfig())
+        assert memo.remaining_floor_work(fr, state) \
+            == fresh.remaining_floor_work(fr, state)
+
+
+def test_admission_inflight_slack_memo_matches_brute():
+    """_inflight_slack pairs (remaining tail, deadline) must match a
+    fresh controller's computation after every frontier mutation."""
+    rng = random.Random(11)
+    state = fresh_state(homogeneous_cluster(4))
+    fr = SharedFrontier()
+    memo = AdmissionController(SLOConfig())
+    wfs = [random_workflow(rng, f"s{i}") for i in range(3)]
+    for wf in wfs:
+        fr.admit(wf)
+        memo.deadlines[wf.wid] = 5.0 + len(memo.deadlines)
+    for _ in range(6):
+        if not fr.workflows:
+            break
+        fresh = AdmissionController(SLOConfig())
+        fresh.deadlines = dict(memo.deadlines)
+        assert memo._inflight_slack(state, fr) \
+            == fresh._inflight_slack(state, fr)
+        # memo hit between mutations returns the same pairs
+        assert memo._inflight_slack(state, fr) \
+            == fresh._inflight_slack(state, fr)
+        wid, sid = rng.choice(fr.ready(set()))
+        fr.complete(wid, sid)
+
+
+@given(st.integers(min_value=1, max_value=200),
+       st.integers(min_value=201, max_value=1500))
+@settings(max_examples=10)
+def test_event_ring_accounting_matches_reference(maxlen, n_events):
+    """Bounded EventLog at 1k+ appends: n_total/n_dropped/retained
+    window/since() all match a plain-list reference."""
+    log = EventLog(maxlen=maxlen)
+    ref: list = []
+    for i in range(n_events):
+        ev = ("ev", i)
+        log.append(ev)                   # EventLog is type-agnostic
+        ref.append(ev)
+    assert log.n_total == n_events
+    assert log.n_dropped == max(0, n_events - maxlen)
+    assert list(log) == ref[-maxlen:]
+    assert len(log) == min(maxlen, n_events)
+    # since(): absolute positions, evicted prefix silently absent
+    assert log.since(0) == ref[-maxlen:]
+    mid = n_events // 2
+    assert log.since(mid) == ref[max(mid, n_events - maxlen):]
+    assert log.since(n_events) == []
+    with pytest.raises(ValueError):
+        log.since(n_events + 1)
+    with pytest.raises(ValueError):
+        log.since(-1)
+
+
+def test_snapshot_restore_rebuilds_indexes():
+    """A snapshot taken mid-run restores with every index rebuilt
+    (reindex + _rebuild_indexes): zero audit violations immediately
+    after restore, and the restored run drains to the same outcome."""
+    trace = overloaded_serving_trace(n_workflows=10)
+
+    def fresh_run():
+        sched = Scheduler(homogeneous_cluster(4),
+                          SchedulerConfig(policy="FATE",
+                                          slo=SLOConfig(), pools=2,
+                                          batch_probes=True))
+        for t, wf in trace:
+            sched.submit(wf, at=t)
+        return sched
+
+    base = fresh_run()
+    base_res = base.drain()
+
+    sched = fresh_run()
+    for _ in range(6):
+        sched.step()
+    snap = sched.snapshot()
+    restored = Scheduler.restore(snap)
+    assert not audit_invariants(restored)
+    res = restored.drain()
+    assert not audit_invariants(restored)
+    assert set(res.stats) == set(base_res.stats)
+    assert {w: s.makespan for w, s in res.stats.items()} \
+        == {w: s.makespan for w, s in base_res.stats.items()}
+    assert res.rejected == base_res.rejected

@@ -7,9 +7,10 @@ the equivalent gate implemented on ``ast``:
    ``README.md`` and ``docs/*.md`` must exist on disk (http(s) and
    mailto links are skipped; ``#fragment`` suffixes are stripped).
 2. **Docstring lint** over the documented-surface modules
-   (``core/scoring.py``, ``core/planner.py``, ``core/executor.py``,
-   ``core/costs.py``, ``core/admission.py``, ``core/calibration.py``,
-   ``core/frontier_solver.py``, ``workflowbench/runner.py``): the
+   (``core/scoring.py``, ``core/state.py``, ``core/planner.py``,
+   ``core/executor.py``, ``core/costs.py``, ``core/admission.py``,
+   ``core/calibration.py``, ``core/frontier_solver.py``,
+   ``workflowbench/runner.py``, ``workflowbench/suites.py``): the
    module itself and every PUBLIC
    class, function, method, and property (name not starting with
    ``_``) must carry a docstring whose first paragraph (summary) ends
@@ -31,6 +32,7 @@ REPO = Path(__file__).resolve().parents[1]
 
 DOCSTRING_MODULES = [
     "src/repro/core/scoring.py",
+    "src/repro/core/state.py",
     "src/repro/core/planner.py",
     "src/repro/core/executor.py",
     "src/repro/core/scheduler.py",
@@ -45,6 +47,7 @@ DOCSTRING_MODULES = [
     "src/repro/core/policies/fate.py",
     "src/repro/core/policies/baselines.py",
     "src/repro/workflowbench/runner.py",
+    "src/repro/workflowbench/suites.py",
 ]
 
 MARKDOWN_FILES = ["README.md", *sorted(
