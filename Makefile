@@ -17,11 +17,11 @@ test-sched:
 	  tests/test_scheduler_api.py tests/test_faults.py \
 	  tests/test_recovery.py tests/test_pool_partition.py \
 	  tests/test_batched_probe.py tests/test_scan_index.py \
-	  tests/test_scale_stress.py
+	  tests/test_scale_stress.py tests/test_multiclass.py
 
 bench-sched:
 	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
-	  --serve-slo --calibrate --chaos --recovery --scale
+	  --serve-slo --calibrate --chaos --recovery --scale --classes
 
 # Cost-model calibration gate (fit round-trip, >=2x probe-error
 # reduction vs hand-set constants, fixed-profile score-path parity);
@@ -63,6 +63,10 @@ deprecated-check:
 # killed journaled run bit-identically with clean invariant audits,
 # or if the --scale gate stops completing 1000 workflows on 64
 # devices with zero invariant violations under the per-event
-# overhead ceiling and single-pool/monolithic parity)
+# overhead ceiling and single-pool/monolithic parity, or if the
+# --classes gate loses default-class bit-parity, platinum attainment
+# under the weighted multi-class config, the bottom class's bounded-
+# wait completion guarantee, or bit-identical journaled recovery of
+# runs killed mid-preemption)
 # + docs + the deprecated-surface gate.
 check: test-sched bench-sched docs-check deprecated-check

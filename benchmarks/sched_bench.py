@@ -16,6 +16,7 @@ bit-identical placements, and writes a ``BENCH_sched.json`` trajectory.
     PYTHONPATH=src python -m benchmarks.sched_bench --calibrate  # cost model
     PYTHONPATH=src python -m benchmarks.sched_bench --chaos      # fault gate
     PYTHONPATH=src python -m benchmarks.sched_bench --scale      # 1k gate
+    PYTHONPATH=src python -m benchmarks.sched_bench --classes    # priority gate
     PYTHONPATH=src python -m benchmarks.sched_bench --config SCHED_config.json
 
 Gates (enforced by exit code, used by ``make check`` / CI):
@@ -609,6 +610,217 @@ def run_recovery(n_workflows: int = 18, rate: float = 14.0,
     }
 
 
+def run_classes(n_workflows: int = 18, rate: float = 14.0,
+                n_devices: int = 6, seed: int = 0,
+                kill_fractions=(0.15, 0.5, 0.85),
+                snap_every: int = 20) -> dict:
+    """Multi-class priority benchmark: weighted SLOs, aging, and true
+    preemption of running shards.
+
+    Three legs, all on the overloaded n=18 Poisson burst:
+
+    1. **Default-class parity** — a config whose only class is
+       ``"default"`` (``classes={"default": ClassSpec()}``) must
+       reproduce the class-free ``SLOConfig()`` run bit-identically:
+       same event log (field-for-field), same placements, same
+       per-workflow stats.  The multi-class machinery is strictly
+       additive.
+    2. **Multi-class gates** — the same arrivals tagged
+       platinum/batch/batch (:func:`multiclass_overloaded_trace`)
+       under a weighted config with aging and running-shard
+       preemption.  Gates: platinum SLO attainment >= the
+       single-class controlled run's overall attainment; the batch
+       (bottom) class completes 100% of its arrivals with max wait
+       bounded by the aging starvation bound plus twice the
+       single-class horizon; running-shard preemptions actually
+       fire; zero invariant violations.
+    3. **Journaled preemption recovery** — the multi-class config
+       plus the ``--chaos`` fault script runs journaled, is killed at
+       swept event indices (always including one just past the first
+       ``ShardPreemptionEvent``), restored cold from snapshot +
+       journal-tail replay, and drained.  Gates: the baseline emits
+       at least one ``ShardPreemptionEvent``; every kill point
+       recovers bit-identically (stats, rejections, failures,
+       horizon, preemption counters, class map, event count) with
+       clean audits at restore and after drain.
+
+    All gates are exit-code enforced when ``--classes`` is passed;
+    the report is written to ``BENCH_classes.json``.
+    """
+    import dataclasses
+    import tempfile
+
+    from repro.core.admission import ClassSpec, SLOConfig
+    from repro.core.journal import EventJournal
+    from repro.core.scheduler import (Scheduler, SchedulerConfig,
+                                      audit_invariants)
+    from repro.workflowbench.metrics import class_summary, slo_summary
+    from repro.workflowbench.suites import (chaos_fault_plan,
+                                            multiclass_overloaded_trace,
+                                            overloaded_serving_trace)
+
+    cluster = homogeneous_cluster(n_devices)
+    trace = overloaded_serving_trace(n_workflows=n_workflows, rate=rate,
+                                     seed=seed, num_queries=8)
+    mc_trace = multiclass_overloaded_trace(
+        n_workflows=n_workflows, rate=rate, seed=seed, num_queries=8)
+    mc_slo = SLOConfig(
+        classes={"platinum": ClassSpec(weight=4.0, latency_scale=8.0),
+                 "batch": ClassSpec(weight=1.0, latency_scale=40.0,
+                                    backlog_limit=18)},
+        aging_rate=0.5, preempt_running=True, preempt_running_max=6,
+        preempt_kill_cap=3)
+    # aging closes the weight gap at aging_rate per second of queue
+    # wait, so the bottom class outranks a fresh top-class arrival
+    # after at most this many seconds (the anti-starvation guarantee)
+    starvation_bound = ((mc_slo.class_weight("platinum")
+                         - mc_slo.class_weight("batch"))
+                        / mc_slo.aging_rate)
+
+    def _events(sched):
+        return [(type(e).__name__, dataclasses.astuple(e))
+                for e in sched.events]
+
+    def _placements(sched):
+        return {f"{w}/{s}": [list(r.placement.devices),
+                             list(r.placement.shard_sizes)]
+                for (w, s), r in sched.runs.items()}
+
+    def _stats(res):
+        return {w: dataclasses.astuple(s)
+                for w, s in sorted(res.stats.items())}
+
+    def _run_mc(cfg, journal=None):
+        sched = Scheduler(cluster, cfg, journal=journal)
+        for t, wf, klass in mc_trace:
+            sched.submit(wf, at=t, klass=klass)
+        return sched
+
+    # ---- leg 1: default-only class config is bit-identical --------
+    plain, s_plain = _run_from_config(
+        trace, cluster, SchedulerConfig(policy="FATE", slo=SLOConfig()))
+    defaulted, s_defaulted = _run_from_config(
+        trace, cluster,
+        SchedulerConfig(policy="FATE", slo=SLOConfig(
+            classes={"default": ClassSpec()})))
+    parity = (_events(s_plain) == _events(s_defaulted)
+              and _placements(s_plain) == _placements(s_defaulted)
+              and _stats(plain) == _stats(defaulted)
+              and plain.rejected == defaulted.rejected
+              and plain.horizon == defaulted.horizon)
+
+    # ---- leg 2: weighted classes, aging, running-shard preemption -
+    single = slo_summary({"controlled": plain})["controlled"]
+    mc_sched = _run_mc(SchedulerConfig(policy="FATE", slo=mc_slo))
+    mc_res = mc_sched.drain()
+    mc_audit = audit_invariants(mc_sched)
+    per_class = class_summary(mc_res)
+    plat = per_class.get("platinum", {})
+    batch = per_class.get("batch", {})
+    wait_bound = starvation_bound + 2.0 * plain.horizon
+    gates = {
+        "platinum_attainment_ge_single": (
+            plat.get("slo_attainment", 0.0)
+            >= single["slo_attainment"]),
+        "batch_completes_everything": (
+            batch.get("completion_rate", 0.0) == 1.0),
+        "batch_wait_bounded": (
+            batch.get("max_wait", float("inf")) <= wait_bound),
+        "shard_preemptions_fired": mc_res.shard_preemptions > 0,
+        "audit_clean": not mc_audit,
+    }
+
+    # ---- leg 3: journaled chaos + preemption crash recovery -------
+    rec_cfg = SchedulerConfig(policy="FATE", slo=mc_slo,
+                              faults=chaos_fault_plan(seed))
+
+    def _fingerprint(res, sched):
+        return {
+            "stats": {w: [s.arrival, s.finish,
+                          list(s.query_completion), s.deadline]
+                      for w, s in sorted(res.stats.items())},
+            "rejected": sorted(res.rejected),
+            "failed": sorted(res.failed),
+            "horizon": res.horizon,
+            "counters": [res.replans, res.preemptions,
+                         res.shard_preemptions, res.deferrals,
+                         res.device_downs, res.shard_failures,
+                         res.retries],
+            "classes": dict(sorted(res.classes.items())),
+            "n_events": sched.events.n_total,
+        }
+
+    base_sched = _run_mc(SchedulerConfig.from_json(rec_cfg.to_json()))
+    base_res = base_sched.drain()
+    base_fp = _fingerprint(base_res, base_sched)
+    total = base_sched.events.n_total
+    preempt_idxs = [i for i, e in enumerate(base_sched.events)
+                    if type(e).__name__ == "ShardPreemptionEvent"]
+    kill_points = sorted({max(1, int(total * f))
+                          for f in kill_fractions}
+                         | ({preempt_idxs[0] + 1} if preempt_idxs
+                            else set()))
+
+    rows = []
+    for k in kill_points:
+        with tempfile.TemporaryDirectory() as tmp:
+            journal = EventJournal(tmp, rotate_bytes=64 * 1024)
+            sched = _run_mc(SchedulerConfig.from_json(rec_cfg.to_json()),
+                            journal=journal)
+            journal.write_snapshot(sched.snapshot())
+            steps = 0
+            while sched.events.n_total < k and sched.step():
+                steps += 1
+                if steps % snap_every == 0:
+                    journal.write_snapshot(sched.snapshot())
+            killed_at = sched.events.n_total
+            del sched, journal                 # crash: abandon in place
+
+            reopened = EventJournal(tmp)
+            restored = Scheduler.restore(reopened.latest_snapshot(),
+                                         reopened)
+            audit_restored = audit_invariants(restored)
+            res = restored.drain()
+            audit_drained = audit_invariants(restored)
+            identical = _fingerprint(res, restored) == base_fp
+            rows.append({
+                "kill_event_index": k,
+                "killed_at": killed_at,
+                "past_first_preemption": bool(
+                    preempt_idxs and k > preempt_idxs[0]),
+                "audit_restored": audit_restored,
+                "audit_drained": audit_drained,
+                "identical": identical,
+                "pass": (identical and not audit_restored
+                         and not audit_drained),
+            })
+
+    recovery_ok = (bool(preempt_idxs) and bool(rows)
+                   and all(r["pass"] for r in rows))
+    ok = parity and all(gates.values()) and recovery_ok
+    return {
+        "n_workflows": n_workflows,
+        "rate": rate,
+        "n_devices": n_devices,
+        "seed": seed,
+        "default_class_parity": parity,
+        "single_class": single,
+        "per_class": per_class,
+        "starvation_bound_s": starvation_bound,
+        "batch_wait_bound_s": wait_bound,
+        "shard_preemptions": mc_res.shard_preemptions,
+        "revoke_preemptions": mc_res.preemptions,
+        "gates": gates,
+        "recovery": {
+            "baseline_events": total,
+            "preemption_event_indices": preempt_idxs,
+            "kill_points": rows,
+            "pass": recovery_ok,
+        },
+        "pass": ok,
+    }
+
+
 def _profile_parity(profile, width: int = 16, n_devices: int = 8,
                     horizon: int = 3) -> bool:
     """Bit-identical placements under a FIXED calibration profile.
@@ -985,6 +1197,12 @@ def main() -> None:
                          "invariant violations, mean per-event overhead "
                          "ceiling, single-pool/monolithic parity); "
                          "writes BENCH_scale.json")
+    ap.add_argument("--classes", action="store_true",
+                    help="run the multi-class priority gate (default-"
+                         "class bit-parity, weighted platinum/batch "
+                         "SLOs with aging and running-shard "
+                         "preemption, journaled preemption crash "
+                         "recovery); writes BENCH_classes.json")
     ap.add_argument("--recovery", action="store_true",
                     help="run the crash-recovery gate (journaled chaos "
                          "run killed at swept event indices, restored "
@@ -1160,6 +1378,39 @@ def main() -> None:
               f"{scale['single_pool_parity']}  ->  "
               f"{'PASS' if scale['pass'] else 'FAIL'}  [{scale_path}]")
         ok = ok and scale["pass"]
+        report["pass"] = ok
+    if args.classes:
+        # fixed trace size as in --serve-slo: the class gates are
+        # defined on the overloaded n=18 burst; the full report goes
+        # to its own artifact next to BENCH_sched.json
+        cls = run_classes()
+        cls_path = Path(args.out).parent / "BENCH_classes.json"
+        cls_path.write_text(json.dumps(cls, indent=2) + "\n")
+        report["classes"] = cls
+        print(f"classes: default-class parity (events/placements/"
+              f"stats bit-identical): {cls['default_class_parity']}")
+        for klass, row in cls["per_class"].items():
+            print(f"classes: {klass:9s} "
+                  f"attainment={row['slo_attainment']:.3f} "
+                  f"completed={row['n_completed']}/{row['n_offered']} "
+                  f"max_wait={row['max_wait']:.1f}s "
+                  f"p95={row['p95_latency']:.1f}s")
+        print(f"classes: single-class attainment "
+              f"{cls['single_class']['slo_attainment']:.3f}; "
+              f"batch wait bound {cls['batch_wait_bound_s']:.1f}s "
+              f"(starvation bound {cls['starvation_bound_s']:.1f}s); "
+              f"shard preemptions {cls['shard_preemptions']}")
+        rec = cls["recovery"]
+        for row in rec["kill_points"]:
+            print(f"classes: kill@{row['kill_event_index']:5d} "
+                  f"past-preempt={'y' if row['past_first_preemption'] else 'n'} "
+                  f"audit={len(row['audit_restored']) + len(row['audit_drained'])} "
+                  f"identical={row['identical']}")
+        print(f"classes: {len(rec['kill_points'])} journaled kill "
+              f"points, {len(rec['preemption_event_indices'])} "
+              f"preemption events in baseline  ->  "
+              f"{'PASS' if cls['pass'] else 'FAIL'}  [{cls_path}]")
+        ok = ok and cls["pass"]
         report["pass"] = ok
     if args.recovery:
         # fixed trace size as in --chaos: the recovery gate is defined

@@ -46,11 +46,28 @@ predicted-vs-observed pairs are kept on ``probe_log`` for the
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Callable, Mapping, Optional, Sequence
 
 from repro.core.calibration import ProbeCorrector
 from repro.core.state import ExecutionState
 from repro.core.workflow import Workflow
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSpec:
+    """One admission class's scheduling contract.
+
+    ``weight`` orders classes for backlog re-probing, congestion-floor
+    accounting, displacement protection, and running-shard preemption
+    (strictly-lower-weight workflows are preemptible by a tight
+    higher-weight admission).  ``latency_scale`` overrides the global
+    :attr:`SLOConfig.latency_scale` for the class's deadlines (``None``
+    inherits it); ``backlog_limit`` likewise bounds the class's OWN
+    deferral-queue share instead of the shared global limit.
+    """
+    weight: float = 1.0
+    latency_scale: Optional[float] = None
+    backlog_limit: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +78,20 @@ class SLOConfig:
     ``t + latency_scale * cp_lower_bound(wf)`` — a multiple of the
     fastest possible execution on an empty cluster, so heavy DAGs get
     proportionally more budget than small ones.
+
+    Multi-class serving (``classes`` non-empty) layers weighted SLOs on
+    top: each admission class carries a :class:`ClassSpec` (weight,
+    deadline scale, backlog share), the backlog is re-probed
+    class-major (effective weight, then age — where effective weight is
+    ``weight + aging_rate * wait``, the anti-starvation promotion), the
+    congestion floors of a high-class candidate exclude lower-class
+    committed-but-unissued work, and ``preempt_running`` arms
+    kill/replay preemption of issued-and-running lower-class shards
+    (see :meth:`repro.core.scheduler.Scheduler._preempt_running`).
+    With ``classes`` EMPTY (the default) every class-aware branch is
+    skipped and the controller is bit-identical to the single-class
+    one — the compatibility contract ``tests/test_multiclass.py``
+    asserts.
     """
     latency_scale: float = 2.5      # deadline = arrival + scale * cp_lb
     backlog_limit: int = 8          # bounded deferral queue length
@@ -85,11 +116,58 @@ class SLOConfig:
     # unbounded, the benchmark/test default; long-running serving
     # deployments set a cap so the log cannot grow without bound)
     probe_log_limit: Optional[int] = None
+    # -- multi-class control plane (empty = single-class, bit-identical
+    # to the pre-class controller) --------------------------------------
+    classes: Mapping[str, ClassSpec] = \
+        dataclasses.field(default_factory=dict)
+    # anti-starvation aging: a backlog entry's effective weight grows
+    # by aging_rate per second of wait, so a bottom-class entry
+    # overtakes a fresh top-class one after
+    # (w_top - w_bottom) / aging_rate seconds — the starvation bound
+    # docs/PRIORITY.md derives (0.0 = strict class order forever)
+    aging_rate: float = 0.0
+    # kill/replay preemption of ISSUED-and-running strictly-lower-class
+    # shards when a higher-class arrival would otherwise be deferred
+    # (or admits SLO-tight); the scheduler revokes the run token,
+    # credits partial state back, and re-enqueues the stage
+    preempt_running: bool = False
+    preempt_running_max: int = 2    # max victims per trigger
+    # a stage killed this many times becomes immune (anti-livelock:
+    # guarantees bottom-class progress under sustained platinum load)
+    preempt_kill_cap: int = 2
+    # seconds the freed devices are held for the trigger's replan
+    # before the victim stage re-enters the merged solve
+    preempt_holdoff: float = 0.05
 
-    def deadline(self, arrival: float, cp_lb: float) -> float:
+    def __post_init__(self):
+        if self.classes:
+            coerced = {k: (v if isinstance(v, ClassSpec)
+                           else ClassSpec(**v))
+                       for k, v in self.classes.items()}
+            object.__setattr__(self, "classes", coerced)
+
+    def class_spec(self, klass: str) -> Optional[ClassSpec]:
+        """The configured :class:`ClassSpec` for ``klass`` (``None``
+        when unconfigured — callers fall back to the global knobs)."""
+        return self.classes.get(klass) if self.classes else None
+
+    def class_weight(self, klass: str) -> float:
+        """Scheduling weight of ``klass`` (1.0 when unconfigured)."""
+        spec = self.class_spec(klass)
+        return spec.weight if spec is not None else 1.0
+
+    def deadline(self, arrival: float, cp_lb: float,
+                 klass: str = "default") -> float:
         """Absolute completion deadline for a workflow with critical-path
-        lower bound ``cp_lb`` that arrived at ``arrival``."""
-        return arrival + self.latency_scale * cp_lb
+        lower bound ``cp_lb`` that arrived at ``arrival``.  With a
+        class-configured ``latency_scale`` override, the class's scale
+        replaces the global one (single-class configs ignore
+        ``klass``)."""
+        scale = self.latency_scale
+        spec = self.class_spec(klass)
+        if spec is not None and spec.latency_scale is not None:
+            scale = spec.latency_scale
+        return arrival + scale * cp_lb
 
 
 @dataclasses.dataclass
@@ -278,6 +356,15 @@ class AdmissionController:
         self.backlog: list[tuple[float, Workflow]] = []
         self.rejected: list[str] = []
         self.deadlines: dict[str, float] = {}
+        # admission class per live workflow id (registered by the
+        # scheduler before any decision touches the wid; absent =
+        # "default").  Only consulted when slo.classes is non-empty.
+        self.klass: dict[str, str] = {}
+        # live view of the owning scheduler's ISSUED stage-key set
+        # (bound via bind_issued) — the class-aware congestion floor
+        # charges lower-class workflows only for their issued (sunk)
+        # stages, and committed-but-unissued work is preemptible
+        self._issued_view: Optional[Callable[[], set]] = None
         self.n_deferrals = 0
         self.n_probes = 0
         # admitted-but-unfinished probe predictions awaiting their
@@ -353,6 +440,31 @@ class AdmissionController:
         self._family.pop(wid, None)
         self.deadlines.pop(wid, None)
         self.pending.pop(wid, None)
+        self.klass.pop(wid, None)
+
+    # -- admission classes -----------------------------------------------
+    def bind_issued(self, view: Callable[[], set]) -> None:
+        """Bind a zero-arg callable returning the owning scheduler's
+        live issued stage-key set (class-aware floors read it; the
+        single-class path never calls it)."""
+        self._issued_view = view
+
+    def note_class(self, wid: str, klass: str) -> None:
+        """Register a workflow's admission class before its first
+        decision (the scheduler calls this on every arrival)."""
+        self.klass[wid] = klass
+
+    def _klass_of(self, wid: str) -> str:
+        return self.klass.get(wid, "default")
+
+    def _eff_weight(self, klass: str, wait: float) -> float:
+        """Aged class weight of a backlog entry: the configured weight
+        plus ``aging_rate`` per second already waited — the
+        anti-starvation promotion that bounds bottom-class wait at
+        ``(w_max - w) / aging_rate`` seconds behind the heaviest
+        class."""
+        return (self.slo.class_weight(klass)
+                + self.slo.aging_rate * max(wait, 0.0))
 
     # -- durability ------------------------------------------------------
     def state_dict(self) -> dict:
@@ -368,6 +480,7 @@ class AdmissionController:
             "backlog": [[arr, wf.wid] for arr, wf in self.backlog],
             "rejected": list(self.rejected),
             "deadlines": dict(self.deadlines),
+            "klass": dict(self.klass),
             "n_deferrals": self.n_deferrals,
             "n_probes": self.n_probes,
             "pending": {wid: list(v)
@@ -386,6 +499,7 @@ class AdmissionController:
                         for arr, wid in doc["backlog"]]
         self.rejected = list(doc["rejected"])
         self.deadlines = dict(doc["deadlines"])
+        self.klass = dict(doc.get("klass") or {})
         self.n_deferrals = int(doc["n_deferrals"])
         self.n_probes = int(doc["n_probes"])
         self.pending = {wid: tuple(v)
@@ -615,7 +729,16 @@ class AdmissionController:
         while still charging heavy arrivals for the queue they join.
         Both bounds amortize over the LIVE device count, so admission
         tightens under partial outage.
+
+        Multi-class runs dispatch to the class-aware variant: the
+        fair-share bound weights the candidate's cluster share by its
+        class weight, and the drain bound charges strictly-lower-class
+        workflows only for their ISSUED (sunk) stages — their committed
+        and queued future work is preemptible, so a platinum candidate
+        does not wait behind it.
         """
+        if self.slo.classes:
+            return self._congestion_floor_classed(wf, state, frontier)
         n_dev = max(state.n_live, 1)
         self.tail_bounds(wf, state)
         own = (sum(self._efloor[wf.wid].values())
@@ -624,6 +747,55 @@ class AdmissionController:
         fair = own * k / n_dev
         drain = (self.remaining_floor_work(frontier, state)
                  + own) / n_dev
+        return 0.5 * (fair + drain)
+
+    def _congestion_floor_classed(self, wf: Workflow,
+                                  state: ExecutionState,
+                                  frontier) -> float:
+        """Class-aware congestion floor (``slo.classes`` non-empty).
+
+        Weighted fair share: the candidate holds ``w_c / (W + w_c)`` of
+        the cluster, ``W`` the total in-flight weight — with uniform
+        weights this reduces exactly (same float operations) to the
+        single-class ``own * k / n_dev``.  Drain bound: workflows of
+        strictly lower weight contribute only the effective floors of
+        their ISSUED stages (work already on devices is sunk; committed
+        or queued work is preemptible by this candidate), while equal-
+        or-higher classes contribute their full remaining work plus
+        activation, exactly as the single-class accounting does.  Not
+        memoized: the issued set changes without a frontier-version
+        bump, so the ``(version, epoch)`` memo key cannot cover it.
+        """
+        n_dev = max(state.n_live, 1)
+        self.tail_bounds(wf, state)
+        own = (sum(self._efloor[wf.wid].values())
+               + self.activation_work(wf, state))
+        w_c = self.slo.class_weight(self._klass_of(wf.wid))
+        issued = (self._issued_view()
+                  if self._issued_view is not None else None)
+        issued_by_wid: dict[str, list[str]] = {}
+        if issued:
+            for iw, sid in issued:
+                issued_by_wid.setdefault(iw, []).append(sid)
+        total = 0.0
+        w_sum = 0.0
+        for wid, wf2 in frontier.workflows.items():
+            w2 = self.slo.class_weight(self._klass_of(wid))
+            w_sum += w2
+            self.tail_bounds(wf2, state)
+            floor = self._efloor[wid]
+            done = frontier.completed[wid]
+            if w2 < w_c - 1e-12:
+                # strictly lower class: only sunk (issued) work counts
+                total += sum(floor[sid]
+                             for sid in sorted(issued_by_wid.get(wid, ()))
+                             if sid not in done)
+                continue
+            total += sum(c for sid, c in floor.items()
+                         if sid not in done)
+            total += self.activation_work(wf2, state, done)
+        fair = own * (w_sum + w_c) / (w_c * n_dev)
+        drain = (total + own) / n_dev
         return 0.5 * (fair + drain)
 
     def _probe_analytic(self, wf: Workflow, state: ExecutionState,
@@ -675,7 +847,8 @@ class AdmissionController:
         cands: list[Workflow] = []
         for wf in wfs:
             cp = self.cp_lower_bound(wf, state)
-            deadline = self.slo.deadline(state.now, cp)
+            deadline = self.slo.deadline(state.now, cp,
+                                         self._klass_of(wf.wid))
             if cp > deadline - state.now + 1e-12:
                 continue                      # decide() rejects unprobed
             cands.append(wf)
@@ -783,8 +956,9 @@ class AdmissionController:
         event batch raise this candidate's floor exactly as sequential
         probing would.
         """
+        klass = self._klass_of(wf.wid)
         cp = self.cp_lower_bound(wf, state)
-        deadline = self.slo.deadline(arrival, cp)
+        deadline = self.slo.deadline(arrival, cp, klass)
         if not self.slo.admission:
             return AdmissionDecision("admit", cp, deadline, cp)
         budget = deadline - state.now
@@ -801,7 +975,7 @@ class AdmissionController:
         margin = self.probe_margin(wf, state)
         fits = margin * predicted <= budget + 1e-12
         if fits and not self._displaces_inflight(state, frontier,
-                                                 displacement):
+                                                 displacement, klass):
             preempt = (self.slo.preemption
                        and predicted * self.slo.preempt_slack > budget)
             return AdmissionDecision("admit", predicted, deadline, cp,
@@ -810,26 +984,37 @@ class AdmissionController:
                                  margin=margin)
 
     def _displaces_inflight(self, state: ExecutionState, frontier,
-                            displacement: float) -> bool:
+                            displacement: float,
+                            klass: str = "default") -> bool:
         """True if the candidate's displacement would push an
         otherwise-on-track in-flight workflow past its deadline.
 
         Workflows already predicted to miss are NOT protected — under
         overload everything is late, and refusing all admissions for
         the sake of already-lost deadlines would idle the cluster.
+        In multi-class runs, STRICTLY-LOWER-weight workflows are not
+        protected either: a platinum candidate may displace batch
+        deadlines (the batch tier's protection is its completion
+        guarantee plus aging, not deadline isolation).
         """
         if displacement <= 0.0:
             return False
-        for rem, deadline in self._inflight_slack(state, frontier):
+        w_c = (self.slo.class_weight(klass)
+               if self.slo.classes else None)
+        for rem, deadline, wid in self._inflight_slack(state, frontier):
+            if (w_c is not None
+                    and self.slo.class_weight(self._klass_of(wid))
+                    < w_c - 1e-12):
+                continue
             without = state.now + rem
             if without <= deadline + 1e-12 < without + displacement:
                 return True
         return False
 
     def _inflight_slack(self, state: ExecutionState,
-                        frontier) -> list[tuple[float, float]]:
-        """Memoized ``(remaining-tail, deadline)`` pairs for every
-        in-flight workflow with a registered deadline.
+                        frontier) -> list[tuple[float, float, str]]:
+        """Memoized ``(remaining-tail, deadline, wid)`` triples for
+        every in-flight workflow with a registered deadline.
 
         Keyed on ``(frontier.version, fault_epoch)`` like
         :meth:`remaining_floor_work`: the remaining tails only change
@@ -845,7 +1030,7 @@ class AdmissionController:
             m_ver, m_ep, m_pairs = self._slack_memo
             if m_ver == ver and m_ep == self._fault_epoch:
                 return m_pairs
-        pairs: list[tuple[float, float]] = []
+        pairs: list[tuple[float, float, str]] = []
         for wid, deadline in self.deadlines.items():
             wf = frontier.workflows.get(wid)
             if wf is None:
@@ -854,7 +1039,7 @@ class AdmissionController:
             done = frontier.completed[wid]
             rem = max((tails[sid] for sid in wf.topo_order
                        if sid not in done), default=0.0)
-            pairs.append((rem, deadline))
+            pairs.append((rem, deadline, wid))
         if ver is not None:
             self._slack_memo = (ver, self._fault_epoch, pairs)
         return pairs
@@ -871,18 +1056,35 @@ class AdmissionController:
         if hasattr(policy, "forget_workflow"):
             policy.forget_workflow(wid)
 
+    def _backlog_full(self, klass: str) -> bool:
+        """Whether a deferral of class ``klass`` would overflow its
+        queue: the class's own ``backlog_limit`` counted against its
+        own entries when one is configured, else the shared global
+        limit against the whole backlog."""
+        spec = self.slo.class_spec(klass)
+        if spec is not None and spec.backlog_limit is not None:
+            n = sum(1 for _arr, w in self.backlog
+                    if self._klass_of(w.wid) == klass)
+            return n >= spec.backlog_limit
+        return len(self.backlog) >= self.slo.backlog_limit
+
     def on_arrival(self, wf: Workflow, state: ExecutionState, frontier,
                    policy, claimed: set,
-                   probe: Optional[tuple[float, float]] = None
+                   probe: Optional[tuple[float, float]] = None,
+                   dec: Optional[AdmissionDecision] = None
                    ) -> AdmissionDecision:
         """Arrival-time decision with backlog bookkeeping applied:
         deferrals land in the bounded backlog (or degrade to reject
         when it is full); rejects are recorded.  ``probe`` forwards a
-        precomputed raw estimate from :meth:`probe_batch`."""
-        dec = self.decide(wf, state, frontier, policy, claimed,
-                          arrival=state.now, probe=probe)
+        precomputed raw estimate from :meth:`probe_batch`; ``dec``
+        forwards a decision the caller already computed (the
+        scheduler's running-shard preemption path re-decides after
+        reclaiming devices and hands the final decision in)."""
+        if dec is None:
+            dec = self.decide(wf, state, frontier, policy, claimed,
+                              arrival=state.now, probe=probe)
         if dec.action == "defer":
-            if len(self.backlog) >= self.slo.backlog_limit:
+            if self._backlog_full(self._klass_of(wf.wid)):
                 dec.action = "reject"
             else:
                 self.backlog.append((state.now, wf))
@@ -896,24 +1098,40 @@ class AdmissionController:
     def readmit(self, state: ExecutionState, frontier, policy,
                 claimed: set, force: bool = False
                 ) -> list[tuple[float, Workflow, AdmissionDecision]]:
-        """Oldest-feasible-first re-admission sweep over the backlog.
+        """Re-admission sweep over the backlog.
+
+        Single-class: oldest-feasible-first, exactly the historical
+        order.  Multi-class (``slo.classes`` non-empty): CLASS-MAJOR —
+        entries are probed by descending effective weight
+        (``weight + aging_rate * wait``), ties by age (the stable sort
+        preserves the backlog's arrival order), so a deferred platinum
+        entry is re-probed before older batch entries while aging
+        still promotes long-waiting batch work past fresh platinum.
 
         Entries whose deadline became unreachable are shed (rejected);
         the first entry whose fresh probe admits is returned (at most
         one per call, so the caller's frontier update is visible to the
-        next sweep).  With ``force=True`` the oldest reachable entry is
-        admitted regardless of its probe — the executor uses this to
-        drain the backlog when no further completion events exist.
+        next sweep).  With ``force=True`` the oldest reachable entry
+        (in sweep order) is admitted regardless of its probe — the
+        executor uses this to drain the backlog when no further
+        completion events exist.
         Returns ``[(original_arrival, workflow, decision)]``.
         """
+        entries = self.backlog
+        if self.slo.classes:
+            entries = sorted(
+                entries,
+                key=lambda e: -self._eff_weight(
+                    self._klass_of(e[1].wid), state.now - e[0]))
         admitted: list[tuple[float, Workflow, AdmissionDecision]] = []
         keep: list[tuple[float, Workflow]] = []
-        for arrival, wf in self.backlog:
+        for arrival, wf in entries:
             if admitted:
                 keep.append((arrival, wf))
                 continue
             cp = self.cp_lower_bound(wf, state)
-            deadline = self.slo.deadline(arrival, cp)
+            deadline = self.slo.deadline(arrival, cp,
+                                         self._klass_of(wf.wid))
             if state.now + cp > deadline + 1e-12:
                 self._shed(wf.wid, policy)         # expired
                 continue

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -220,7 +220,9 @@ class FrontierPlanner:
     def plan_shared(self, workflows: dict[str, Workflow],
                     state: ExecutionState,
                     ready: Sequence[StageKey],
-                    max_waves: Optional[int] = None) -> list[Placement]:
+                    max_waves: Optional[int] = None,
+                    priorities: Optional[Mapping[str, float]] = None
+                    ) -> list[Placement]:
         """Commit-and-advance over the merged frontier of many DAGs.
 
         Each in-flight workflow's ready rows are scored by the same
@@ -236,6 +238,12 @@ class FrontierPlanner:
         without paying for a full plan.  ``None`` (default) falls back
         to the planner-level ``max_waves`` (itself ``None`` = plan
         until the frontier is exhausted).
+
+        ``priorities`` optionally maps ``wid`` to a class weight that
+        multiplies the workflow's objective rows, biasing the shared
+        solve toward higher-class work without changing feasibility.
+        A weight of exactly 1.0 is skipped entirely, so uniform
+        priorities solve the bit-identical unweighted problem.
         """
         if max_waves is None:
             max_waves = self.max_waves
@@ -253,7 +261,8 @@ class FrontierPlanner:
         n_waves = 0
         while remaining:
             wave = self._plan_wave_shared(workflows, sim, remaining,
-                                          scorer, session)
+                                          scorer, session,
+                                          priorities=priorities)
             if not wave:
                 break
             for p in wave:
@@ -270,7 +279,9 @@ class FrontierPlanner:
                           sim: ExecutionState,
                           remaining: Sequence[StageKey],
                           scorer: Scorer,
-                          session: dict) -> list[Placement]:
+                          session: dict,
+                          priorities: Optional[Mapping[str, float]] = None
+                          ) -> list[Placement]:
         by_wid: dict[str, list[str]] = {}
         for wid, sid in remaining:
             by_wid.setdefault(wid, []).append(sid)
@@ -324,11 +335,12 @@ class FrontierPlanner:
                                                  counts)
         if partition is not None:
             return self._solve_pooled(workflows, sim, per_wf, margin,
-                                      partition)
+                                      partition, priorities=priorities)
         for wid, fs, sids in per_wf:
             rows, weights = self._rows_from_scores(
                 self._mask_down(fs, sim), sids, margin,
                 key_of=lambda s, w=wid: (w, s))
+            weights = _scale_weights(weights, priorities, wid)
             if rows:
                 hint = None
                 if self.warm_start and self._shared_hint:
@@ -467,7 +479,8 @@ class FrontierPlanner:
                       sim: ExecutionState,
                       per_wf: list[tuple[str, FrontierScores, list[str]]],
                       margin: float,
-                      partition: tuple[list[list[int]], dict[str, int]]
+                      partition: tuple[list[list[int]], dict[str, int]],
+                      priorities: Optional[Mapping[str, float]] = None
                       ) -> list[Placement]:
         """Exact per-pool solves of one partitioned wave.
 
@@ -490,6 +503,7 @@ class FrontierPlanner:
                 sub = self._mask_down(fs, sim).restrict(cols)
                 rows, weights = self._rows_from_scores(
                     sub, sids, margin, key_of=lambda s, w=wid: (w, s))
+                weights = _scale_weights(weights, priorities, wid)
                 if not rows:
                     continue
                 hint = None
@@ -751,6 +765,22 @@ def _simulate_copy(state: ExecutionState) -> ExecutionState:
     sim.down = set(state.down)
     sim.fault_epoch = state.fault_epoch
     return sim
+
+
+def _scale_weights(weights: list, priorities: Optional[Mapping[str, float]],
+                   wid: str) -> list:
+    """Multiply one workflow's objective rows by its class priority.
+
+    The exact-1.0 skip is load-bearing: uniform priorities must hand
+    the solver the untouched weight arrays so single-class runs stay
+    bit-identical to priority-free planning.
+    """
+    if not priorities:
+        return weights
+    w = float(priorities.get(wid, 1.0))
+    if w == 1.0:
+        return weights
+    return [w * arr for arr in weights]
 
 
 def _apply_estimate(wf: Workflow, sim: ExecutionState, p: Placement,

@@ -2,7 +2,7 @@
 horizon-aware state-conditional scoring (the paper's method)."""
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Optional, Sequence
+from typing import TYPE_CHECKING, Mapping, Optional, Sequence
 
 from repro.core.costs import CostParams
 from repro.core.planner import FrontierPlanner, Placement
@@ -22,6 +22,10 @@ class FATEPolicy(BasePolicy):
     engine + exact frontier solver)."""
 
     name = "FATE"
+    # the scheduler may bias the shared solve with per-workflow class
+    # weights (multi-class SLO configs); policies without this flag
+    # are planned unweighted
+    supports_priorities = True
 
     def __init__(self, params: Optional[ScoreParams] = None,
                  time_limit: float = 5.0, use_matrix: bool = True,
@@ -61,9 +65,13 @@ class FATEPolicy(BasePolicy):
 
     def plan_shared(self, workflows: dict[str, Workflow],
                     state: ExecutionState,
-                    ready: Sequence[StageKey]) -> list[Placement]:
-        """Serving mode: one merged frontier problem across DAGs."""
-        return self.planner.plan_shared(workflows, state, ready)
+                    ready: Sequence[StageKey],
+                    priorities: Optional[Mapping[str, float]] = None
+                    ) -> list[Placement]:
+        """Serving mode: one merged frontier problem across DAGs
+        (``priorities`` weights per-workflow objective rows)."""
+        return self.planner.plan_shared(workflows, state, ready,
+                                        priorities=priorities)
 
     def forget_workflow(self, wid: str) -> None:
         """Release per-workflow planner caches (workflow retired)."""

@@ -413,6 +413,29 @@ class PreemptionEvent(SchedulerEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardPreemptionEvent(SchedulerEvent):
+    """An ISSUED-and-running stage attempt was killed to reclaim its
+    devices for a higher-class admission (kill/replay semantics).
+
+    The attempt's run token was revoked — its pending finish/fail/
+    timeout heap events (including speculative copies, which share the
+    token) are now stale — its exclusively-held devices were freed at
+    the preemption instant, its warm-prefix state was forfeited
+    (partial τ/κ credit-back through the dirty-device protocol; the
+    residency ρ it loaded is real and stays), and the stage returns to
+    the ready frontier after a short holdoff so the trigger's replan
+    claims the freed devices first.  ``devices`` is the killed
+    attempt's primary placement; ``klass``/``trigger_klass`` are the
+    victim's and the trigger's admission classes."""
+    wid: str
+    sid: str
+    devices: tuple
+    trigger_wid: str
+    klass: str = "default"
+    trigger_klass: str = "default"
+
+
+@dataclasses.dataclass(frozen=True)
 class CompletionEvent(SchedulerEvent):
     """A stage finished; ``workflow_done`` marks its workflow's last
     stage (the workflow retired from the frontier)."""
@@ -482,9 +505,9 @@ class DegradedEvent(SchedulerEvent):
 #: Every concrete event type, in lifecycle order (docs/tests anchor).
 EVENT_TYPES = (ArrivalEvent, AdmittedEvent, DeferredEvent,
                RejectedEvent, PlacementEvent, IssueEvent,
-               PreemptionEvent, CompletionEvent, DeviceDownEvent,
-               DeviceRecoveredEvent, ShardFailedEvent, RetryEvent,
-               DegradedEvent)
+               PreemptionEvent, ShardPreemptionEvent, CompletionEvent,
+               DeviceDownEvent, DeviceRecoveredEvent, ShardFailedEvent,
+               RetryEvent, DegradedEvent)
 
 #: Type registry ``SchedulerEvent.from_dict`` dispatches through —
 #: class name -> class, one entry per :data:`EVENT_TYPES` member.
@@ -617,6 +640,8 @@ def _heap_entry_doc(entry: tuple) -> dict:
     elif kind == "timeout":
         key, token = payload
         doc.update(key=list(key), token=token)
+    elif kind == "release":
+        doc["key"] = list(payload)
     elif kind == "crash":
         doc["crash"] = dataclasses.asdict(payload)
     elif kind == "recover":
@@ -641,6 +666,8 @@ def _heap_entry_from_doc(doc: Mapping,
         payload = (tuple(doc["key"]), doc["attempt"], doc["backoff"])
     elif kind == "timeout":
         payload = (tuple(doc["key"]), doc["token"])
+    elif kind == "release":
+        payload = tuple(doc["key"])
     elif kind == "crash":
         payload = DeviceCrash(**doc["crash"])
     elif kind == "recover":
@@ -971,7 +998,12 @@ class ServingResult:
     budget under fault injection; the fault counters
     (``device_downs``/``shard_failures``/``retries``/``stragglers``/
     ``speculations``) stay zero without a
-    :class:`~repro.core.faults.FaultPlan`.
+    :class:`~repro.core.faults.FaultPlan`.  ``shard_preemptions``
+    counts kill/replay preemptions of issued-and-running shards
+    (multi-class runs with ``preempt_running`` only) and ``classes``
+    maps every offered workflow id to its admission class, so
+    per-class attainment is computable for rejected/failed workflows
+    too (:func:`repro.workflowbench.metrics.class_summary`).
     """
     stats: dict[str, WorkflowServeStats]
     horizon: float                     # first arrival -> last completion
@@ -987,6 +1019,8 @@ class ServingResult:
     retries: int = 0
     stragglers: int = 0
     speculations: int = 0
+    shard_preemptions: int = 0
+    classes: dict[str, str] = dataclasses.field(default_factory=dict)
 
     @property
     def n_offered(self) -> int:
@@ -1113,6 +1147,10 @@ class Scheduler:
         self.admission: Optional[AdmissionController] = (
             AdmissionController(self.slo, corrector=probe_corrector)
             if self.slo is not None else None)
+        if self.admission is not None:
+            # late-bound view: self.issued is REBOUND by _load_snapshot,
+            # so the controller must read the attribute, not the set
+            self.admission.bind_issued(lambda: self.issued)
 
         # event stream ---------------------------------------------------
         self.events = EventLog(self.config.event_buffer)
@@ -1171,6 +1209,7 @@ class Scheduler:
         self.max_in_flight = 0
         self.replans = 0
         self.preemptions = 0
+        self.shard_preemptions = 0
         self._switches_before = state.model_switches
         self._guard = 0
         self._n_rejected_seen = 0
@@ -1198,6 +1237,9 @@ class Scheduler:
         # invalidates the stale finish/timeout events still in flight
         self._run_token: dict[StageKey, int] = {}
         self._attempts: dict[StageKey, int] = {}
+        # kill/replay anti-livelock: stages preempted this many times
+        # (slo.preempt_kill_cap) become immune to further preemption
+        self._preempt_counts: dict[StageKey, int] = {}
         # retry backoff holds: stage key -> earliest replan time
         self._hold: dict[StageKey, float] = {}
         self._submitted: set[str] = set()
@@ -1271,9 +1313,13 @@ class Scheduler:
         pins an absolute completion deadline for stats/events even
         without an SLO config (with one, the SLO-derived deadline
         governs admission and this override only annotates the
-        outcome).  ``klass`` names the admission class recorded on the
-        workflow's stats (one scheduling class today; the hook for
-        per-class weighted SLOs).  Returns the workflow id.
+        outcome).  ``klass`` names the admission class; with
+        ``SLOConfig.classes`` configured it must be one of the
+        registered class names (``ValueError`` otherwise, mirroring
+        ``make_policy``'s unknown-name behavior) and selects the
+        per-class weight/deadline scale.  Without class config any
+        label is accepted and merely annotates stats.  Returns the
+        workflow id.
 
         Raises ``ValueError`` on a duplicate ``wf.wid`` (stats and
         arrivals are keyed by wid for the whole run, so a reused id
@@ -1305,6 +1351,11 @@ class Scheduler:
                 f"negative deadline {deadline!r} for {wf.wid!r}; "
                 f"deadlines are absolute times on a clock that "
                 f"starts at 0.0")
+        if (self.slo is not None and self.slo.classes
+                and klass not in self.slo.classes):
+            raise ValueError(
+                f"unknown admission class {klass!r} for {wf.wid!r}; "
+                f"configured classes: {sorted(self.slo.classes)}")
         self._submitted.add(wf.wid)
         t = self.state.now if at is None else float(at)
         # batch mode replicates the historical batch executor's heap
@@ -1410,7 +1461,9 @@ class Scheduler:
             device_downs=self.device_downs,
             shard_failures=self.shard_failures,
             retries=self.retries, stragglers=self.stragglers,
-            speculations=self.speculations)
+            speculations=self.speculations,
+            shard_preemptions=self.shard_preemptions,
+            classes=dict(self._klass))
         return self.result
 
     def batch_result(self, wid: str) -> RunResult:
@@ -1554,11 +1607,13 @@ class Scheduler:
                 "shard_failures": self.shard_failures,
                 "retries": self.retries,
                 "stragglers": self.stragglers,
-                "speculations": self.speculations},
+                "speculations": self.speculations,
+                "shard_preemptions": self.shard_preemptions},
             "failed": list(self.failed),
             "run_token": _keyed_dict_doc(self._run_token),
             "attempts": _keyed_dict_doc(self._attempts),
             "hold": _keyed_dict_doc(self._hold),
+            "preempt_counts": _keyed_dict_doc(self._preempt_counts),
             "faults": (None if self.injector is None else {
                 "injector": self.injector.state_dict(),
                 "health": self.health.state_dict()}),
@@ -1671,10 +1726,13 @@ class Scheduler:
         self.retries = c["retries"]
         self.stragglers = c["stragglers"]
         self.speculations = c["speculations"]
+        self.shard_preemptions = c.get("shard_preemptions", 0)
         self.failed = list(doc["failed"])
         self._run_token = _keyed_dict_from_doc(doc["run_token"])
         self._attempts = _keyed_dict_from_doc(doc["attempts"])
         self._hold = _keyed_dict_from_doc(doc["hold"])
+        self._preempt_counts = _keyed_dict_from_doc(
+            doc.get("preempt_counts") or {})
         f = doc.get("faults")
         if f is not None:
             self.injector.load_state(f["injector"])
@@ -1992,6 +2050,111 @@ class Scheduler:
                                        trigger_wid=trigger_wid,
                                        n_revoked=len(revoked)))
 
+    def _preempt_running(self, trigger_wid: str) -> int:
+        """Kill/replay preemption of ISSUED-and-running shards on
+        behalf of a higher-class arrival (multi-class configs with
+        ``preempt_running`` only; a no-op — returning 0 — otherwise,
+        keeping single-class runs bit-identical).
+
+        Victims are issued stages of strictly lower class weight than
+        the trigger, excluding stages already killed
+        ``preempt_kill_cap`` times (anti-livelock immunity) and stages
+        about to finish at the current instant (killing them gains no
+        capacity and loses finished work).  Up to
+        ``preempt_running_max`` victims are killed per trigger,
+        furthest-from-finishing first.  Returns the kill count.
+        """
+        slo = self.slo
+        if (slo is None or not slo.classes or not slo.preempt_running
+                or not self.issued):
+            return 0
+        w_t = slo.class_weight(self._klass.get(trigger_wid, "default"))
+        now = self.state.now
+        victims = []
+        for key in self.issued:
+            wid = key[0]
+            if wid == trigger_wid:
+                continue
+            w_v = slo.class_weight(self._klass.get(wid, "default"))
+            if not (w_v < w_t - 1e-12):
+                continue
+            if (self._preempt_counts.get(key, 0)
+                    >= slo.preempt_kill_cap):
+                continue
+            run = self.runs[key]
+            if run.finish <= now + 1e-9:
+                continue
+            victims.append((-run.finish, key))
+        victims.sort()
+        n = 0
+        for _neg_fin, key in victims[:max(slo.preempt_running_max, 0)]:
+            self._kill_run(key, trigger_wid)
+            n += 1
+        return n
+
+    def _kill_run(self, key: StageKey, trigger_wid: str) -> None:
+        """Kill one issued run and credit its partial state back.
+
+        The run token is bumped so the in-flight finish/fail heap
+        events go stale (the same machinery that retires speculative
+        losers), the stage leaves the issued set (it re-enters the
+        ready frontier, so the next settle loop replans it), and the
+        devices the run held are credited back through the dirty-device
+        mutators: τ is released to now and the κ prefix warm this
+        attempt wrote is revoked (a killed attempt produces no reusable
+        cache — mirroring ``fail_frac``'s no-warm rule).  Residency ρ
+        is NOT rolled back: the model weights really were loaded.
+
+        A device is only freed when no OTHER issued stage has a
+        token-valid heap event running on it — speculative copies queue
+        on busy devices, so blindly freeing would corrupt their τ.
+
+        A short ``preempt_holdoff`` is recorded against the stage (with
+        a "release" heap event guaranteeing the clock reaches its
+        expiry) so the very next solve cannot re-place the victim ahead
+        of the trigger it was killed for.
+        """
+        state = self.state
+        wid, sid = key
+        run = self.runs[key]
+        token = self._run_token.get(key, 0)
+        mine: set[int] = set()
+        busy_others: set[int] = set()
+        for (_t, _prio, _seq, kind, payload) in self._heap:
+            if kind not in ("finish", "fail"):
+                continue
+            k2, tok2, run2 = payload
+            if tok2 != self._run_token.get(k2, 0):
+                continue
+            if k2 == key:
+                mine.update(run2.placement.devices)
+            elif k2 in self.issued:
+                busy_others.update(run2.placement.devices)
+        st = self.frontier.workflows[wid].stages[sid]
+        for d in sorted(mine - busy_others):
+            if d in state.down:
+                continue
+            state.set_free_at(d, state.now)
+            if st.keep_cache:
+                state.revoke_prefix(d, st.prefix_group, st.model)
+        self._run_token[key] = token + 1
+        self._drop_issued(key)
+        self.shard_preemptions += 1
+        self._preempt_counts[key] = \
+            self._preempt_counts.get(key, 0) + 1
+        holdoff = max(self.slo.preempt_holdoff, 0.0)
+        if holdoff > 0.0:
+            t_r = state.now + holdoff
+            self._hold[key] = t_r
+            heapq.heappush(self._heap, (t_r, self._seq, self._seq,
+                                        "release", key))
+            self._seq += 1
+        self._emit(ShardPreemptionEvent(
+            t=state.now, wid=wid, sid=sid,
+            devices=run.placement.devices, trigger_wid=trigger_wid,
+            klass=self._klass.get(wid, "default"),
+            trigger_klass=self._klass.get(trigger_wid, "default")))
+
     def _emit_new_rejections(self, reason: str) -> None:
         adm = self.admission
         if adm is None:
@@ -2066,6 +2229,17 @@ class Scheduler:
     def _plan(self, ready: list[StageKey]) -> list[Placement]:
         policy = self.policy
         if not self.batch and hasattr(policy, "plan_shared"):
+            if (self.slo is not None and self.slo.classes
+                    and getattr(policy, "supports_priorities", False)):
+                # class weights bias the shared solve toward
+                # higher-class rows (uniform weights are skipped in
+                # the planner, keeping single-class solves identical)
+                prios = {wid: self.slo.class_weight(
+                             self._klass.get(wid, "default"))
+                         for wid in self.frontier.workflows}
+                return policy.plan_shared(self.frontier.workflows,
+                                          self.state, ready,
+                                          priorities=prios)
             return policy.plan_shared(self.frontier.workflows,
                                       self.state, ready)
         out: list[Placement] = []
@@ -2095,6 +2269,11 @@ class Scheduler:
             for wf in wfs:
                 self._process_arrival(wf)
             return
+        if self.slo is not None and self.slo.classes:
+            # the shared probe's deadline shortcut reads the class map
+            for wf in wfs:
+                adm.note_class(wf.wid,
+                               self._klass.get(wf.wid, "default"))
         probes = adm.probe_batch(wfs, self.state, self.frontier,
                                  self.policy, self._claimed_keys())
         for wf in wfs:
@@ -2114,14 +2293,33 @@ class Scheduler:
         if adm is None:
             self._admit(wf, state.now)
             return
-        dec = adm.on_arrival(wf, state, self.frontier, self.policy,
-                             self._claimed_keys(), probe=probe)
+        if self.slo is not None and self.slo.classes:
+            # class-aware path: register the class before the first
+            # decision; a deferral may first reclaim devices from
+            # running lower-class shards (kill/replay) and re-decide
+            # against the reclaimed state before backlog bookkeeping
+            adm.note_class(wf.wid, self._klass.get(wf.wid, "default"))
+            dec = adm.decide(wf, state, self.frontier, self.policy,
+                             self._claimed_keys(), arrival=state.now,
+                             probe=probe)
+            if (dec.action == "defer"
+                    and self._preempt_running(wf.wid) > 0):
+                dec = adm.decide(wf, state, self.frontier,
+                                 self.policy, self._claimed_keys(),
+                                 arrival=state.now)
+            dec = adm.on_arrival(wf, state, self.frontier,
+                                 self.policy, self._claimed_keys(),
+                                 dec=dec)
+        else:
+            dec = adm.on_arrival(wf, state, self.frontier, self.policy,
+                                 self._claimed_keys(), probe=probe)
         if dec.action == "admit":
             self._admit(wf, state.now, dec.deadline)
             if dec.preempt:
                 # SLO-tight arrival: revoke unissued commitments so it
                 # competes immediately
                 self._preempt_commitments(wf.wid)
+                self._preempt_running(wf.wid)
         elif dec.action == "defer":
             self._emit(DeferredEvent(t=state.now, wid=wf.wid,
                                      predicted_latency=dec.predicted_latency,
@@ -2400,6 +2598,7 @@ class Scheduler:
                     self._admit(wfp, arr, dec.deadline)
                     if dec.preempt:
                         self._preempt_commitments(wfp.wid)
+                        self._preempt_running(wfp.wid)
                 self._emit_new_rejections("expired")
                 return "work"
             if self.batch:
@@ -2463,6 +2662,11 @@ class Scheduler:
                 elif kind == "timeout":
                     key, token = payload
                     self._on_timeout(key, token)
+                elif kind == "release":
+                    # preemption holdoff expired: the victim stage may
+                    # re-enter the plan (no event is emitted — the
+                    # hold's lazy clear makes this a pure clock driver)
+                    self._hold.pop(payload, None)
                 elif kind == "crash":
                     self._on_device_crash(payload)
                 else:               # "recover"
@@ -2483,6 +2687,7 @@ class Scheduler:
                     self._admit(wfp, arr, dec.deadline)
                     if dec.preempt:
                         self._preempt_commitments(wfp.wid)
+                        self._preempt_running(wfp.wid)
         if completed_any and self.replan_on_completion and self.committed:
             # revoke unissued commitments: the completed stage changed
             # ρ/κ/ℓ/τ, so the merged frontier is re-solved
@@ -2512,7 +2717,9 @@ def audit_invariants(sched: Scheduler) -> list[str]:
     * committed placements reference live frontier workflows with
       satisfied completions only, and never target a downed
       (crashed/quarantined) device;
-    * stages in retry backoff are not concurrently issued;
+    * stages in retry backoff are not concurrently issued, and every
+      live hold (retry backoff or preemption holdoff) has a pending
+      retry/release heap event that lifts it;
     * frontier bookkeeping is closed: order list <-> workflow map <->
       completion sets <-> registry/arrival tables, completed sids
       exist in their DAG, and no in-flight workflow already has final
@@ -2546,6 +2753,20 @@ def audit_invariants(sched: Scheduler) -> list[str]:
                      f"completion event (lost work)")
         if key in sched._hold:
             v.append(f"stage {key} is in retry backoff but issued")
+    # holds ---------------------------------------------------------------
+    # every live hold needs a heap event that reaches its release time
+    # (a "retry" from the failure path or a "release" from running-shard
+    # preemption) — otherwise the stage could sit held forever
+    releasable: set[StageKey] = set()
+    for (_t, _prio, _seq, kind, payload) in sched._heap:
+        if kind == "retry":
+            releasable.add(payload[0])
+        elif kind == "release":
+            releasable.add(payload)
+    for key, t_r in sorted(sched._hold.items()):
+        if t_r > sched.state.now + 1e-9 and key not in releasable:
+            v.append(f"held stage {key} (until {t_r:.6f}) has no "
+                     f"pending retry/release event to lift the hold")
     # committed pool ------------------------------------------------------
     seen: set[StageKey] = set()
     for p in sched.committed:

@@ -157,6 +157,22 @@ class ExecutionState:
         slot.last_used = now
         self.touch_device(device)
 
+    def revoke_prefix(self, device: int, group: Optional[str],
+                      model: str) -> None:
+        """Forfeit the warm-prefix entry for ``group`` on ``device``
+        (only if it is held under ``model``): the κ credit-back of a
+        killed stage attempt, whose :meth:`warm_prefix` recorded cache
+        state that never materialized.  Conservative — a prior
+        attempt's genuinely-warm entry for the same group is forfeited
+        with it, which only under-estimates future benefit.  Marks the
+        device dirty like every other state mutator."""
+        if group is None:
+            return
+        e = self.prefix.get(device, {}).get(group)
+        if e is not None and e.model == model:
+            del self.prefix[device][group]
+            self.touch_device(device)
+
     # -- ℓ --------------------------------------------------------------
     def parent_locations(self, wid: str, stage: Stage) -> dict[str, tuple]:
         """Map each parent stage id to the devices holding its output."""
@@ -405,3 +421,11 @@ class PlanningOverlay(ExecutionState):
         prefix-invalidation side effect stays overlay-local."""
         self._own_prefix(device)
         super().set_resident(device, model)
+
+    def revoke_prefix(self, device: int, group: Optional[str],
+                      model: str) -> None:
+        """Copy-on-write wrapper: the forfeit stays overlay-local."""
+        if group is None:
+            return
+        self._own_prefix(device)
+        super().revoke_prefix(device, group, model)

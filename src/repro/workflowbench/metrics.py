@@ -115,6 +115,57 @@ def slo_summary(results: dict) -> dict[str, dict]:
     return out
 
 
+def class_summary(res) -> dict[str, dict]:
+    """Per-admission-class breakdown of one
+    :class:`~repro.core.scheduler.ServingResult`.
+
+    Classes come from ``res.classes`` (every OFFERED workflow id, so
+    rejected and failed arrivals are attributed to their class too);
+    workflows a pre-multiclass run produced (empty ``classes``) fall
+    back to the per-stat ``klass`` label.  Per class:
+
+    * ``slo_attainment`` — SLO-met completions over offered in-class
+      arrivals (rejections and fault-failures count against it);
+    * ``completion_rate`` — completed over offered (the bottom-class
+      starvation gate asserts this is 1.0);
+    * ``mean_wait`` / ``max_wait`` — end-to-end makespan
+      (finish − arrival, queueing included): the bounded-wait side of
+      the anti-starvation guarantee;
+    * ``p95_latency`` — pooled per-query p95 over in-class completions;
+    * offered / completed / rejected / failed counts.
+    """
+    klass_of = dict(res.classes)
+    for wid, s in res.stats.items():
+        klass_of.setdefault(wid, s.klass)
+    for wid in list(res.rejected) + list(res.failed):
+        klass_of.setdefault(wid, "default")
+    out: dict[str, dict] = {}
+    for klass in sorted(set(klass_of.values())):
+        wids = {w for w, k in klass_of.items() if k == klass}
+        stats = [s for w, s in res.stats.items() if w in wids]
+        n_rej = sum(1 for w in res.rejected if w in wids)
+        n_fail = sum(1 for w in res.failed if w in wids)
+        offered = len(stats) + n_rej + n_fail
+        lat = [v for s in stats for v in s.latencies]
+        waits = [s.makespan for s in stats]
+        met = sum(1 for s in stats if s.slo_met)
+        out[klass] = {
+            "n_offered": offered,
+            "n_completed": len(stats),
+            "n_rejected": n_rej,
+            "n_failed": n_fail,
+            "slo_attainment": (met / offered if offered
+                               else float("nan")),
+            "completion_rate": (len(stats) / offered if offered
+                                else float("nan")),
+            "mean_wait": (sum(waits) / len(waits) if waits
+                          else float("nan")),
+            "max_wait": (max(waits) if waits else float("nan")),
+            "p95_latency": _pooled_p95(lat),
+        }
+    return out
+
+
 def _median(xs: Sequence[float]) -> float:
     """``statistics.median`` with NaN (not ValueError) on empty input —
     the robust center the probe-error gate compares, insensitive to the

@@ -200,6 +200,29 @@ def overloaded_serving_trace(n_workflows: int = 18, rate: float = 14.0,
                                  mix="mixed")
 
 
+def multiclass_overloaded_trace(n_workflows: int = 18, rate: float = 14.0,
+                                seed: int = 0, num_queries: int = 8,
+                                class_cycle: tuple = ("platinum", "batch",
+                                                      "batch")
+                                ) -> list[tuple[float, "Workflow", str]]:
+    """The overloaded trace annotated with admission classes.
+
+    Exactly :func:`overloaded_serving_trace` — identical workflows,
+    arrival times, and wids (so :func:`chaos_fault_plan`'s targeted
+    ``serve-prefix-000``/``serve-conflict-001`` failures keep
+    landing) — with each arrival assigned a class from ``class_cycle``
+    by arrival index.  The default cycle makes every third arrival
+    platinum, so both tiers stay busy through the overload.  Returns
+    ``[(arrival, workflow, klass)]`` triples for
+    ``Scheduler.submit(wf, at=t, klass=k)``.  Deterministic in
+    ``seed``.
+    """
+    trace = overloaded_serving_trace(n_workflows=n_workflows, rate=rate,
+                                     seed=seed, num_queries=num_queries)
+    return [(t, wf, class_cycle[i % len(class_cycle)])
+            for i, (t, wf) in enumerate(trace)]
+
+
 def scale_instance(index: int, num_queries: int = 4) -> Workflow:
     """One small workflow for the 1k-workflow scale trace.
 
