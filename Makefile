@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-sched bench-sched calibrate audit docs-check \
-  deprecated-check check
+  deprecated-check gateway-smoke check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -17,11 +17,15 @@ test-sched:
 	  tests/test_scheduler_api.py tests/test_faults.py \
 	  tests/test_recovery.py tests/test_pool_partition.py \
 	  tests/test_batched_probe.py tests/test_scan_index.py \
-	  tests/test_scale_stress.py tests/test_multiclass.py
+	  tests/test_scale_stress.py tests/test_multiclass.py \
+	  tests/test_routing.py tests/test_gateway.py \
+	  tests/test_arrival_queue.py tests/test_pools_auto.py \
+	  tests/test_event_stream_live.py
 
 bench-sched:
 	$(PYTHON) -m benchmarks.sched_bench --quick --profile --serve \
-	  --serve-slo --calibrate --chaos --recovery --scale --classes
+	  --serve-slo --calibrate --chaos --recovery --scale --classes \
+	  --gateway
 
 # Cost-model calibration gate (fit round-trip, >=2x probe-error
 # reduction vs hand-set constants, fixed-profile score-path parity);
@@ -42,6 +46,13 @@ audit:
 # implements the same checks on ast).
 docs-check:
 	$(PYTHON) tools/docs_check.py
+
+# Gateway smoke: boot the asyncio HTTP gateway on an ephemeral port,
+# submit one workflow over real HTTP, drain its NDJSON event stream,
+# and exit nonzero if any event was dropped or the workflow never
+# reached its terminal event (see serving/gateway.py --smoke).
+gateway-smoke:
+	$(PYTHON) -m repro.serving.gateway --smoke
 
 # Deprecated-surface gate: fails if any in-repo caller still uses the
 # policy_kwargs path outside the back-compat wrappers / parity tests
@@ -67,6 +78,9 @@ deprecated-check:
 # --classes gate loses default-class bit-parity, platinum attainment
 # under the weighted multi-class config, the bottom class's bounded-
 # wait completion guarantee, or bit-identical journaled recovery of
-# runs killed mid-preemption)
+# runs killed mid-preemption, or if the --gateway gate loses
+# single-replica gateway/direct-Scheduler bit-parity, 100% completion
+# under wall-clock Poisson HTTP load, routing-disabled bit-identity,
+# or the routed-cheaper-than-fixed-at-quality-floor contract)
 # + docs + the deprecated-surface gate.
 check: test-sched bench-sched docs-check deprecated-check

@@ -1119,6 +1119,252 @@ def run_serve(n_workflows: int = 12, rate: float = 6.0,
     }
 
 
+def _gateway_events(sched) -> list:
+    """Versioned event documents in emission order (parity compares)."""
+    return [ev.to_dict() for ev in sched.events]
+
+
+def _gateway_placements(sched) -> dict:
+    """Issued-run placement records keyed by stage (parity compares)."""
+    return {k: (r.placement.devices, r.placement.shard_sizes,
+                r.placement.model, r.start, r.finish)
+            for k, r in sched.runs.items()}
+
+
+def _busy_device_seconds(sched) -> float:
+    """Total device-seconds of issued execution: the routed-vs-fixed
+    cost objective (each run occupies every device in its placement
+    for its full duration)."""
+    return sum((r.finish - r.start) * len(r.placement.devices)
+               for r in sched.runs.values())
+
+
+def _routed_quality(sched, trace) -> dict:
+    """Chosen-family quality audit over the issued runs.
+
+    Per run, quality is 1.0 when the stage ran its default family,
+    else the declared candidate quality for the chosen alias.  Returns
+    the minimum / mean chosen quality and how many runs were routed
+    off their default — the quality-floor side of the gate.
+    """
+    by_wid = {wf.wid: wf for _, wf in trace}
+    qualities, n_routed = [], 0
+    for (wid, sid), r in sched.runs.items():
+        st = by_wid[wid].stages[sid]
+        model = r.placement.model or st.model
+        if model == st.model:
+            qualities.append(1.0)
+        else:
+            n_routed += 1
+            qualities.append(dict(st.candidates)[model])
+    return {"min_quality": min(qualities) if qualities else 1.0,
+            "mean_quality": (sum(qualities) / len(qualities)
+                             if qualities else 1.0),
+            "n_runs": len(qualities), "n_routed": n_routed}
+
+
+def run_gateway(n_devices: int = 6, seed: int = 0) -> dict:
+    """HTTP serving-gateway gate (``--gateway``): the event-driven
+    scheduler behind ``serving/gateway.py``, plus cost/quality routing.
+
+    Four legs, all exit-code enforced:
+
+    1. **Single-replica parity** — the overloaded n=18 trace submitted
+       over live HTTP (explicit arrival times) then drained must be
+       bit-identical to a direct ``Scheduler`` run: same events, same
+       placements, same ``scheduler_fingerprint``.  The gateway adds
+       transport, never scheduling decisions.
+    2. **Poisson HTTP load** — wall-clock-paced Poisson submissions
+       against the live gateway (no ``at``); gates 100%% completion
+       and reports end-to-end P95 (gateway ingress wall-stamp to
+       completion — transport + scheduling overhead included) and
+       per-request submit latency.
+    3. **Routing disabled == today** — a config with
+       ``routing=RoutingConfig()`` on candidate-free workloads (the
+       overloaded n=18 serving trace AND the 32x16 H=4 batch frontier)
+       must match ``routing=None`` bit-for-bit: enabling the router
+       without ``Stage.candidates`` is a provable no-op.
+    4. **Routed vs fixed family** — on the routed trace (large default
+       family with cheaper admissible alternates), routing must
+       complete everything at chosen quality >= the floor while
+       spending strictly fewer busy device-seconds than the
+       fixed-family run, and must actually route (>0 off-default
+       runs).
+    """
+    import http.client
+
+    from repro.core.routing import RoutingConfig
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.scoring import ScoreParams
+    from repro.serving.gateway import (Gateway, GatewayServer,
+                                       scheduler_fingerprint)
+    from repro.workflowbench.metrics import slo_summary
+    from repro.workflowbench.suites import (overloaded_serving_trace,
+                                            poisson_serving_trace,
+                                            routed_serving_trace)
+
+    cluster = homogeneous_cluster(n_devices)
+    cfg = SchedulerConfig(policy="FATE")
+
+    def _post(conn, path, doc=None):
+        body = json.dumps(doc).encode() if doc is not None else b""
+        conn.request("POST", path, body=body,
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read())
+
+    # -- leg 1: single-replica parity over live HTTP -------------------
+    trace = overloaded_serving_trace(seed=seed, num_queries=8)
+    direct_res, direct_sched = _run_from_config(trace, cluster, cfg)
+    gw = Gateway(lambda: Scheduler(cluster, cfg), replicas=1)
+    with GatewayServer(gw) as srv:
+        for t, wf in trace:
+            conn = http.client.HTTPConnection(srv.host, srv.port,
+                                              timeout=60)
+            status, sub = _post(conn, "/v1/workflows",
+                                {"workflow": wf.to_dict(), "at": t})
+            conn.close()
+            assert status == 202, (status, sub)
+        conn = http.client.HTTPConnection(srv.host, srv.port,
+                                          timeout=600)
+        _, drain_doc = _post(conn, "/v1/drain")
+        conn.close()
+    gw_sched = gw.replicas[0].sched
+    parity = {
+        "events_identical": (_gateway_events(direct_sched)
+                             == _gateway_events(gw_sched)),
+        "placements_identical": (_gateway_placements(direct_sched)
+                                 == _gateway_placements(gw_sched)),
+        "fingerprint_direct": scheduler_fingerprint(direct_sched),
+        "fingerprint_gateway": drain_doc["replicas"][0]["fingerprint"],
+        "n_completed": len(gw_sched.stats),
+        "n_offered": direct_res.n_offered,
+    }
+    parity["fingerprint_identical"] = (parity["fingerprint_direct"]
+                                       == parity["fingerprint_gateway"])
+    parity_ok = (parity["events_identical"]
+                 and parity["placements_identical"]
+                 and parity["fingerprint_identical"])
+
+    # -- leg 2: wall-clock Poisson load over live HTTP -----------------
+    load_trace = poisson_serving_trace(n_workflows=12, rate=6.0,
+                                       seed=seed, num_queries=8)
+    gw2 = Gateway(lambda: Scheduler(homogeneous_cluster(8), cfg),
+                  replicas=1)
+    submit_ms = []
+    wall0 = time.perf_counter()
+    with GatewayServer(gw2) as srv:
+        prev_t = 0.0
+        for t, wf in load_trace:
+            # pace submissions at the trace's Poisson gaps (compressed
+            # 4x so the leg stays quick; relative order preserved)
+            time.sleep(max(0.0, (t - prev_t) / 4.0))
+            prev_t = t
+            conn = http.client.HTTPConnection(srv.host, srv.port,
+                                              timeout=60)
+            t0 = time.perf_counter()
+            status, sub = _post(conn, "/v1/workflows",
+                                {"workflow": wf.to_dict()})
+            submit_ms.append((time.perf_counter() - t0) * 1e3)
+            conn.close()
+            assert status == 202, (status, sub)
+        conn = http.client.HTTPConnection(srv.host, srv.port,
+                                          timeout=600)
+        _, metrics_live = (conn.request("GET", "/v1/metrics"),
+                           json.loads(conn.getresponse().read()))
+        conn.close()
+        conn = http.client.HTTPConnection(srv.host, srv.port,
+                                          timeout=600)
+        _, drain2 = _post(conn, "/v1/drain")
+        conn.close()
+    wall_s = time.perf_counter() - wall0
+    slo_row = drain2["metrics"]["slo"]
+    load = {
+        "n_offered": len(load_trace),
+        "n_completed": slo_row["n_completed"],
+        "completion": (slo_row["n_completed"] / len(load_trace)),
+        "p95_e2e_s": slo_row["p95_latency"],
+        "mean_e2e_s": slo_row["mean_latency"],
+        "submit_mean_ms": sum(submit_ms) / len(submit_ms),
+        "submit_max_ms": max(submit_ms),
+        "wall_s": wall_s,
+        "live_metrics_replicas": len(metrics_live["replicas"]),
+    }
+    load_ok = (load["completion"] == 1.0
+               and load["p95_e2e_s"] is not None)
+
+    # -- leg 3: routing disabled is bit-identical ----------------------
+    cfg_route_off = SchedulerConfig(policy="FATE")
+    cfg_route_noop = SchedulerConfig(policy="FATE",
+                                     routing=RoutingConfig())
+    _, s_off = _run_from_config(trace, cluster, cfg_route_off)
+    _, s_noop = _run_from_config(trace, cluster, cfg_route_noop)
+    serving_noop = (_gateway_events(s_off) == _gateway_events(s_noop)
+                    and _gateway_placements(s_off)
+                    == _gateway_placements(s_noop)
+                    and scheduler_fingerprint(s_off)
+                    == scheduler_fingerprint(s_noop))
+    # batch frontier: the 32x16 H=4 wide config, planner-level
+    wf = bench_workflow(32)
+    hcluster = heterogeneous_cluster(16)
+    state_a = _warmed_state(wf, 32, hcluster)
+    state_b = _warmed_state(wf, 32, hcluster)
+    ready = [f"w{i}" for i in range(32)]
+    params = ScoreParams(horizon=4)
+    plain = FrontierPlanner(params).plan(wf, state_a, list(ready))
+    routed = FrontierPlanner(params, routing=RoutingConfig()).plan(
+        wf, state_b, list(ready))
+    batch_noop = ([(p.sid, p.devices, p.shard_sizes, p.model)
+                   for p in plain]
+                  == [(p.sid, p.devices, p.shard_sizes, p.model)
+                      for p in routed])
+    noop = {"serving_identical": serving_noop,
+            "batch_identical": batch_noop}
+    noop_ok = serving_noop and batch_noop
+
+    # -- leg 4: routed vs fixed family cost/quality --------------------
+    rtrace = routed_serving_trace(n_workflows=10, rate=4.0, seed=seed)
+    fixed_res, fixed_sched = _run_from_config(
+        rtrace, cluster, SchedulerConfig(policy="FATE"))
+    routed_res, routed_sched = _run_from_config(
+        rtrace, cluster,
+        SchedulerConfig(policy="FATE", routing=RoutingConfig()))
+    quality = _routed_quality(routed_sched, rtrace)
+    floor = RoutingConfig().quality_floor
+    routed_row = {
+        "n_offered": routed_res.n_offered,
+        "fixed_completed": len(fixed_res.stats),
+        "routed_completed": len(routed_res.stats),
+        "fixed_cost_device_s": _busy_device_seconds(fixed_sched),
+        "routed_cost_device_s": _busy_device_seconds(routed_sched),
+        "quality_floor": floor,
+        **quality,
+        "fixed_p95": slo_summary(
+            {"fixed": fixed_res})["fixed"]["p95_latency"],
+        "routed_p95": slo_summary(
+            {"routed": routed_res})["routed"]["p95_latency"],
+    }
+    routed_row["cost_ratio"] = (routed_row["routed_cost_device_s"]
+                                / routed_row["fixed_cost_device_s"])
+    routed_ok = (routed_row["routed_completed"]
+                 == routed_row["n_offered"]
+                 and quality["n_routed"] > 0
+                 and quality["min_quality"] >= floor
+                 and routed_row["routed_cost_device_s"]
+                 < routed_row["fixed_cost_device_s"])
+
+    return {
+        "n_devices": n_devices,
+        "parity": parity,
+        "load": load,
+        "routing_noop": noop,
+        "routed_vs_fixed": routed_row,
+        "legs": {"parity": parity_ok, "load": load_ok,
+                 "routing_noop": noop_ok, "routed": routed_ok},
+        "pass": parity_ok and load_ok and noop_ok and routed_ok,
+    }
+
+
 def run_from_config_file(config_path: str, out: Path,
                          n_workflows: int = 18, rate: float = 14.0,
                          n_devices: int = 6, seed: int = 0) -> dict:
@@ -1203,6 +1449,15 @@ def main() -> None:
                          "SLOs with aging and running-shard "
                          "preemption, journaled preemption crash "
                          "recovery); writes BENCH_classes.json")
+    ap.add_argument("--gateway", action="store_true",
+                    help="run the HTTP serving-gateway gate (100%% "
+                         "completion under wall-clock Poisson HTTP "
+                         "load with e2e P95, single-replica gateway "
+                         "bit-identical to a direct Scheduler run, "
+                         "routing disabled bit-identical on serving "
+                         "and batch traces, routed cheaper than "
+                         "fixed-family at quality >= floor); writes "
+                         "BENCH_gateway.json")
     ap.add_argument("--recovery", action="store_true",
                     help="run the crash-recovery gate (journaled chaos "
                          "run killed at swept event indices, restored "
@@ -1411,6 +1666,40 @@ def main() -> None:
               f"preemption events in baseline  ->  "
               f"{'PASS' if cls['pass'] else 'FAIL'}  [{cls_path}]")
         ok = ok and cls["pass"]
+        report["pass"] = ok
+    if args.gateway:
+        # fixed trace sizes: parity is defined on the overloaded n=18
+        # burst and the 32x16 H=4 wide frontier; the full report goes
+        # to its own artifact next to BENCH_sched.json
+        gwy = run_gateway()
+        gwy_path = Path(args.out).parent / "BENCH_gateway.json"
+        gwy_path.write_text(json.dumps(gwy, indent=2) + "\n")
+        report["gateway"] = gwy
+        par, load = gwy["parity"], gwy["load"]
+        print(f"gateway: single-replica parity events="
+              f"{par['events_identical']} placements="
+              f"{par['placements_identical']} fingerprint="
+              f"{par['fingerprint_identical']} "
+              f"({par['n_completed']}/{par['n_offered']} workflows)")
+        print(f"gateway: HTTP load {load['n_completed']}/"
+              f"{load['n_offered']} completed "
+              f"(completion={load['completion']:.2f}) "
+              f"e2e p95={load['p95_e2e_s']:.2f}s "
+              f"submit mean={load['submit_mean_ms']:.1f}ms "
+              f"max={load['submit_max_ms']:.1f}ms "
+              f"wall={load['wall_s']:.1f}s")
+        rv = gwy["routed_vs_fixed"]
+        print(f"gateway: routing-noop serving="
+              f"{gwy['routing_noop']['serving_identical']} batch="
+              f"{gwy['routing_noop']['batch_identical']}; routed "
+              f"cost {rv['routed_cost_device_s']:.1f} vs fixed "
+              f"{rv['fixed_cost_device_s']:.1f} device-s "
+              f"(ratio {rv['cost_ratio']:.2f}), "
+              f"{rv['n_routed']}/{rv['n_runs']} runs routed, "
+              f"min quality {rv['min_quality']:.2f} "
+              f"(floor {rv['quality_floor']:.2f})  ->  "
+              f"{'PASS' if gwy['pass'] else 'FAIL'}  [{gwy_path}]")
+        ok = ok and gwy["pass"]
         report["pass"] = ok
     if args.recovery:
         # fixed trace size as in --chaos: the recovery gate is defined

@@ -41,11 +41,20 @@ class FrontierProblem:
     which optimal assignment is returned — see
     :func:`solve_frontier_exact`).  Entries for rows or devices absent
     from this problem are ignored, so a stale hint is always safe.
+
+    ``exclusive`` optionally lists mutual-exclusion groups of stage
+    keys: within each group at most ONE key may have any assigned rows
+    in a feasible solution.  The cost/quality router uses this to offer
+    one stage under several model families — ``(wid, sid)`` plus its
+    ``(wid, sid, alias)`` variants form one group — while guaranteeing
+    a single family wins the stage.  ``None``/empty adds no constraint
+    and no branching, so unrouted problems solve identically.
     """
     rows: list[tuple]             # (stage_key, slot_index)
     devices: list[int]
     weights: np.ndarray           # [n_rows, n_devices]
     hint: Optional[dict] = None   # (stage_key, slot) -> device id
+    exclusive: Optional[list[list]] = None   # groups of stage keys
 
     def slot_rows(self, stage_key) -> list[int]:
         """Row indices belonging to ``stage_key`` (all slots)."""
@@ -70,12 +79,16 @@ def merge_problems(problems: list[FrontierProblem]) -> FrontierProblem:
             raise ValueError("merge_problems: mismatched device axes")
     rows: list[tuple] = []
     hint: dict = {}
+    exclusive: list[list] = []
     for pr in problems:
         rows.extend(pr.rows)
         if pr.hint:
             hint.update(pr.hint)   # (wid, sid)-keyed rows never collide
+        if pr.exclusive:
+            exclusive.extend(pr.exclusive)
     weights = np.concatenate([pr.weights for pr in problems], axis=0)
-    return FrontierProblem(rows, devices, weights, hint=hint or None)
+    return FrontierProblem(rows, devices, weights, hint=hint or None,
+                           exclusive=exclusive or None)
 
 
 @dataclasses.dataclass
@@ -184,9 +197,11 @@ def _hint_incumbent(problem: FrontierProblem
     """Feasible warm-start assignment from ``problem.hint``.
 
     Walks rows in order, accepting each hinted (row, device) pair that
-    keeps the assignment feasible: device eligible and unused, and slot
+    keeps the assignment feasible: device eligible and unused, slot
     monotonicity (slot k only on top of an accepted slot k−1, which the
-    planner's row ordering guarantees precedes it).  Returns
+    planner's row ordering guarantees precedes it), and mutual
+    exclusion (once one key of an ``exclusive`` group is accepted, the
+    group's other keys are skipped).  Returns
     ``(objective, {row_index: col_index})`` or None when nothing from
     the hint is applicable.  Feasibility ⇒ the objective lower-bounds
     the optimum, so seeding with it can never cut the optimum off.
@@ -195,6 +210,11 @@ def _hint_incumbent(problem: FrontierProblem
     if not hint:
         return None
     col_of = {d: j for j, d in enumerate(problem.devices)}
+    group_of: dict = {}
+    for gi, grp in enumerate(problem.exclusive or ()):
+        for key in grp:
+            group_of[key] = gi
+    chosen: dict[int, tuple] = {}        # group index -> accepted key
     used: set[int] = set()
     accepted: set[tuple] = set()         # (stage_key, slot) taken
     out: dict[int, int] = {}
@@ -211,6 +231,11 @@ def _hint_incumbent(problem: FrontierProblem
             continue
         if slot > 0 and (key, slot - 1) not in accepted:
             continue
+        gi = group_of.get(key)
+        if gi is not None and chosen.get(gi, key) != key:
+            continue
+        if gi is not None:
+            chosen[gi] = key
         used.add(c)
         accepted.add((key, slot))
         out[r] = c
@@ -236,6 +261,15 @@ def solve_frontier_exact(problem: FrontierProblem,
     stage_slots: dict = {}
     for i, (s, k) in enumerate(rows):
         stage_slots.setdefault(s, {})[k] = i
+    # mutual-exclusion groups resolved to per-key row-index sets (keys
+    # with no rows in this problem drop out; singleton groups constrain
+    # nothing)
+    ex_groups: list[list[frozenset]] = []
+    for grp in problem.exclusive or ():
+        rowsets = [frozenset(stage_slots[key].values())
+                   for key in grp if key in stage_slots]
+        if len(rowsets) > 1:
+            ex_groups.append(rowsets)
 
     best_obj = -np.inf
     best_assign: dict[int, int] = {}
@@ -282,8 +316,24 @@ def solve_frontier_exact(problem: FrontierProblem,
             if violation:
                 break
         if violation is None:
-            best_obj = obj
-            best_assign = assign
+            # check mutual exclusion: at most one key per group assigned
+            ex_violation = None
+            for rowsets in ex_groups:
+                live = [rs for rs in rowsets
+                        if any(r in assign for r in rs)]
+                if len(live) >= 2:
+                    ex_violation = (live[0], live[1])
+                    break
+            if ex_violation is None:
+                best_obj = obj
+                best_assign = assign
+                continue
+            # two keys A, B of one group both hold rows: any feasible
+            # solution uses at most one of them, so it survives the
+            # branch banning the other — complete dichotomy
+            rows_a, rows_b = ex_violation
+            stack.append((forced, banned | rows_a))
+            stack.append((forced, banned | rows_b))
             continue
         lo, hi = violation
         # branch A: ban the higher slot; branch B: force the lower slot

@@ -36,6 +36,7 @@ from repro.core.frontier_solver import (NEG, FrontierProblem,
                                         FrontierSolution,
                                         combine_solutions, merge_problems,
                                         solve_frontier_exact)
+from repro.core.routing import RoutingConfig, StageRouter, variant_stage
 from repro.core.scoring import FrontierScores, ScoreParams, Scorer
 from repro.core.state import ExecutionState
 from repro.core.workflow import Stage, StageKey, Workflow
@@ -43,13 +44,20 @@ from repro.core.workflow import Stage, StageKey, Workflow
 
 @dataclasses.dataclass
 class Placement:
-    """A committed stage placement: devices[0] is the primary (slot 0)."""
+    """A committed stage placement: devices[0] is the primary (slot 0).
+
+    ``model`` is the routed model family serving the stage (cost/
+    quality routing, :mod:`repro.core.routing`) — ``None`` means the
+    stage's default ``Stage.model``, which is also what every
+    pre-routing placement deserializes to.
+    """
     wid: str
     sid: str
     devices: tuple[int, ...]
     shard_sizes: tuple[int, ...]
     score: float = 0.0
     planned_at: float = 0.0
+    model: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -89,13 +97,24 @@ class FrontierPlanner:
                  time_limit: float = 5.0, use_matrix: bool = True,
                  use_delta: bool = True, warm_start: bool = True,
                  cost_params: Optional[CostParams] = None,
-                 max_waves: Optional[int] = None, pools: int = 1):
+                 max_waves: Optional[int] = None, pools=1,
+                 routing: Optional[RoutingConfig] = None):
         self.params = params or ScoreParams()
         # hierarchical sharded solve: > 1 splits every merged-frontier
         # wave into that many disjoint device pools (affinity-aware) and
-        # solves each pool exactly; 1 keeps the monolithic merged solve.
+        # solves each pool exactly; 1 keeps the monolithic merged solve;
+        # "auto" derives the count per wave from device count and
+        # frontier width (see _effective_pools).
         # See docs/SCALE.md for the partition scheme and its invariants.
-        self.pools = max(1, int(pools))
+        self.pools = pools if pools == "auto" else max(1, int(pools))
+        # cost/quality model routing (docs/GATEWAY.md): when set, stages
+        # declaring candidate families get extra (wid, sid, alias) rows
+        # in the frontier solve under a mutual-exclusion constraint.
+        # None (default) adds no rows — bit-identical to the unrouted
+        # planner by construction.
+        self.routing = routing
+        self._router = (StageRouter(routing) if routing is not None
+                        else None)
         # test/bench hook: explicit device-id pools (list of id lists)
         # that override the residency-aware partitioner when set.
         self._forced_partition: Optional[list[list[int]]] = None
@@ -149,6 +168,8 @@ class FrontierPlanner:
         self._wave_scores.pop(wid, None)
         if self._scorer is not None:
             self._scorer.forget_workflow(wid)
+        if self._router is not None:
+            self._router.forget_workflow(wid)
         if self._shared_hint:
             self._shared_hint = {k: d for k, d in
                                  self._shared_hint.items()
@@ -330,24 +351,41 @@ class FrontierPlanner:
         margin = (self.params.margin_factor * (base_sum / base_n)
                   if base_n else 1.0)
         partition = None
-        if self.pools > 1 or self._forced_partition is not None:
+        n_pools = self._effective_pools(len(sim.cluster.ids()),
+                                        len(remaining))
+        if n_pools > 1 or self._forced_partition is not None:
             partition = self._partition_frontier(sim, workflows, by_wid,
-                                                 counts)
+                                                 counts, n_pools)
         if partition is not None:
             return self._solve_pooled(workflows, sim, per_wf, margin,
                                       partition, priorities=priorities)
         for wid, fs, sids in per_wf:
+            fsm = self._mask_down(fs, sim)
             rows, weights = self._rows_from_scores(
-                self._mask_down(fs, sim), sids, margin,
-                key_of=lambda s, w=wid: (w, s))
+                fsm, sids, margin, key_of=lambda s, w=wid: (w, s))
             weights = _scale_weights(weights, priorities, wid)
+            exclusive = None
+            if self._router is not None:
+                wf = workflows[wid]
+                # re-arm the merged frontier context: the scoring loop
+                # above left the scorer on the LAST workflow's caches
+                scorer.set_frontier_shared(wf, sids, counts, pressure)
+                vrows, vweights, groups = self._variant_rows(
+                    wf, sim, scorer, fsm, sids, margin,
+                    key_of=lambda s, w=wid: (w, s))
+                if vrows:
+                    rows = rows + vrows
+                    weights = weights + _scale_weights(
+                        vweights, priorities, wid)
+                    exclusive = groups
             if rows:
                 hint = None
                 if self.warm_start and self._shared_hint:
                     hint = {r: self._shared_hint[r] for r in rows
                             if r in self._shared_hint} or None
                 problems.append(FrontierProblem(
-                    rows, fs.devices, np.array(weights), hint=hint))
+                    rows, fs.devices, np.array(weights), hint=hint,
+                    exclusive=exclusive))
         if not problems:
             return []
         problem = merge_problems(problems)
@@ -371,10 +409,26 @@ class FrontierPlanner:
     # ------------------------------------------------------------------
     # hierarchical sharded solve (device-pool partitioning)
     # ------------------------------------------------------------------
+    def _effective_pools(self, n_devices: int, n_rows: int) -> int:
+        """Resolve the pool count for one wave.
+
+        A fixed integer ``pools`` passes through unchanged.  With
+        ``pools="auto"`` the count is derived per wave: one pool per
+        16 devices, further capped so each pool keeps a useful share of
+        the frontier (at least ~4 ready rows per pool) — small clusters
+        and narrow frontiers resolve to 1, which IS the monolithic
+        merged solve (``tests/test_pools_auto.py`` asserts parity).
+        Deterministic in its two inputs.
+        """
+        if self.pools != "auto":
+            return self.pools
+        return max(1, min(n_devices // 16, n_rows // 4))
+
     def _partition_frontier(self, sim: ExecutionState,
                             workflows: dict[str, Workflow],
                             by_wid: dict[str, list[str]],
-                            counts: dict[str, int]
+                            counts: dict[str, int],
+                            n_pools: int = 0
                             ) -> Optional[tuple[list[list[int]],
                                                 dict[str, int]]]:
         """Split one wave into per-pool subproblems, or ``None``.
@@ -407,8 +461,9 @@ class FrontierPlanner:
                     "forced partition must cover every device exactly "
                     "once")
         else:
-            n_pools = self.pools
-            if n_pools >= len(ids):
+            if not n_pools:
+                n_pools = self.pools if self.pools != "auto" else 1
+            if n_pools <= 1 or n_pools >= len(ids):
                 return None
             groups = sim.residency_groups()
             ordered = sorted((m for m in groups if m is not None),
@@ -504,6 +559,20 @@ class FrontierPlanner:
                 rows, weights = self._rows_from_scores(
                     sub, sids, margin, key_of=lambda s, w=wid: (w, s))
                 weights = _scale_weights(weights, priorities, wid)
+                exclusive = None
+                if self._router is not None:
+                    # variants scored over the pool's device columns
+                    # (solo_best pool-local, like the default rows);
+                    # the scorer still carries this wave's merged
+                    # counts/pressure from the scoring loop
+                    vrows, vweights, groups = self._variant_rows(
+                        workflows[wid], sim, self._scorer, sub, sids,
+                        margin, key_of=lambda s, w=wid: (w, s))
+                    if vrows:
+                        rows = rows + vrows
+                        weights = weights + _scale_weights(
+                            vweights, priorities, wid)
+                        exclusive = groups
                 if not rows:
                     continue
                 hint = None
@@ -513,7 +582,8 @@ class FrontierPlanner:
                     hint = {r: self._shared_hint[r] for r in rows
                             if r in self._shared_hint} or None
                 probs.append(FrontierProblem(
-                    rows, sub.devices, np.array(weights), hint=hint))
+                    rows, sub.devices, np.array(weights), hint=hint,
+                    exclusive=exclusive))
                 n_rows += len(rows)
             if not probs:
                 continue
@@ -568,6 +638,83 @@ class FrontierPlanner:
             fs, raw=raw, eft=eft, eligible=eligible,
             constrained=[True] * len(fs.ready))
 
+    def _variant_rows(self, wf: Workflow, sim: ExecutionState,
+                      scorer: Scorer, fs: FrontierScores,
+                      ready: list[str], margin: float,
+                      key_of=lambda s: s
+                      ) -> tuple[list[tuple], list[np.ndarray],
+                                 list[list]]:
+        """Extra solver rows for routed model-family variants.
+
+        For every ready stage with admissible candidates
+        (:class:`~repro.core.routing.StageRouter`), scores the routed
+        twin per (slot, device) through the scalar engine — bit-
+        identical to a matrix row by the repo's parity invariant — and
+        normalizes slot-0 weights against the DEFAULT family's best
+        (``margin + raw − best_default``), so a family only outbids the
+        default when its best device genuinely scores higher.  Returns
+        ``(rows, weights, exclusive_groups)`` with rows keyed
+        ``key_of(sid) + (alias,)``; all empty when routing is off or no
+        stage declares candidates, leaving the solve untouched.
+        """
+        if self._router is None:
+            return [], [], []
+        rows: list[tuple] = []
+        weights: list[np.ndarray] = []
+        groups: list[list] = []
+        devices = fs.devices
+        down = getattr(sim, "down", None) or ()
+        for i, sid in enumerate(ready):
+            stage = wf.stages[sid]
+            cands = self._router.candidates(wf.wid, stage, sim.profiles)
+            if not cands:
+                continue
+            raw_def = fs.raw[i]
+            if np.all(raw_def <= NEG / 2):
+                continue            # default unplaceable: don't route
+            best_def = raw_def[raw_def > NEG / 2].max()
+            base_key = key_of(sid)
+            group = [base_key]
+            for alias, _quality, vstage in cands:
+                eligible = (set(vstage.eligible) if vstage.eligible
+                            else None)
+                raw = np.full(len(devices), NEG)
+                efts = np.full(len(devices), np.inf)
+                for j, d in enumerate(devices):
+                    if d in down:
+                        continue
+                    if eligible is not None and d not in eligible:
+                        continue
+                    raw[j] = scorer.planner_score(wf, vstage, 0, d, 0.0)
+                    efts[j] = scorer.corrected_eft(wf, vstage, d)
+                if np.all(raw <= NEG / 2):
+                    continue
+                key = (*base_key, alias) if isinstance(base_key, tuple) \
+                    else (base_key, alias)
+                rows.append((key, 0))
+                weights.append(np.where(raw > NEG / 2,
+                                        margin + raw - best_def, NEG))
+                solo_best = float(np.min(efts))
+                max_slots = (vstage.max_shards
+                             if self.params.enable_shard else 1)
+                for k in range(1, max_slots):
+                    w = np.full(len(devices), NEG)
+                    for j, d in enumerate(devices):
+                        if d in down:
+                            continue
+                        if eligible is not None and d not in eligible:
+                            continue
+                        w[j] = scorer.planner_score(
+                            wf, vstage, k, d, 0.0, solo_best=solo_best)
+                    if np.all(w <= NEG / 2):
+                        continue
+                    rows.append((key, k))
+                    weights.append(w)
+                group.append(key)
+            if len(group) > 1:
+                groups.append(group)
+        return rows, weights, groups
+
     def _rows_from_scores(self, fs: FrontierScores, ready: list[str],
                           margin: float, key_of=lambda s: s
                           ) -> tuple[list[tuple], list[np.ndarray]]:
@@ -620,12 +767,21 @@ class FrontierPlanner:
         margin = (self.params.margin_factor * (sum(flat) / len(flat))
                   if flat else 1.0)
 
-        rows, weights = self._rows_from_scores(
-            self._mask_down(fs, state), ready, margin)
+        fsm = self._mask_down(fs, state)
+        rows, weights = self._rows_from_scores(fsm, ready, margin)
+        exclusive = None
+        if self._router is not None:
+            vrows, vweights, groups = self._variant_rows(
+                wf, state, scorer, fsm, ready, margin)
+            if vrows:
+                rows = rows + vrows
+                weights = weights + vweights
+                exclusive = groups
         if not rows:
             return [], fs
 
-        problem = FrontierProblem(rows, devices, np.array(weights))
+        problem = FrontierProblem(rows, devices, np.array(weights),
+                                  exclusive=exclusive)
         t0 = time.perf_counter()
         sol = solve_frontier_exact(problem, self.time_limit)
         self.phase_ms["solve"] += (time.perf_counter() - t0) * 1e3
@@ -714,19 +870,21 @@ class FrontierPlanner:
     def _materialize(self, wf: Workflow, state: ExecutionState,
                      cm: CostModel, sol: FrontierSolution
                      ) -> list[Placement]:
-        by_stage: dict[str, dict[int, int]] = {}
-        for (sid, slot), dev in sol.assignment.items():
-            by_stage.setdefault(sid, {})[slot] = dev
+        by_stage: dict = {}
+        for (key, slot), dev in sol.assignment.items():
+            by_stage.setdefault(key, {})[slot] = dev
         out: list[Placement] = []
-        for sid, slots in by_stage.items():
+        for key, slots in by_stage.items():
             if 0 not in slots:     # primary slot missing: drop (solver
                 continue           # guarantees monotonicity, belt&braces)
+            # routed variant rows key as (sid, alias); default as sid
+            sid, model = key if isinstance(key, tuple) else (key, None)
             devs = tuple(slots[k] for k in sorted(slots))
             speeds = [state.cluster.devices[d].speed for d in devs]
             sizes = tuple(shard_partition(wf.num_queries, speeds))
             out.append(Placement(wid=wf.wid, sid=sid, devices=devs,
                                  shard_sizes=sizes, score=sol.objective,
-                                 planned_at=state.now))
+                                 planned_at=state.now, model=model))
         return out
 
     def _materialize_shared(self, workflows: dict[str, Workflow],
@@ -738,16 +896,19 @@ class FrontierPlanner:
         for (key, slot), dev in sol.assignment.items():
             by_stage.setdefault(key, {})[slot] = dev
         out: list[Placement] = []
-        for (wid, sid), slots in by_stage.items():
+        for key, slots in by_stage.items():
             if 0 not in slots:
                 continue
+            # routed variant rows key as (wid, sid, alias)
+            wid, sid = key[0], key[1]
+            model = key[2] if len(key) == 3 else None
             wf = workflows[wid]
             devs = tuple(slots[k] for k in sorted(slots))
             speeds = [state.cluster.devices[d].speed for d in devs]
             sizes = tuple(shard_partition(wf.num_queries, speeds))
             out.append(Placement(wid=wid, sid=sid, devices=devs,
                                  shard_sizes=sizes, score=sol.objective,
-                                 planned_at=state.now))
+                                 planned_at=state.now, model=model))
         return out
 
 
@@ -785,10 +946,17 @@ def _scale_weights(weights: list, priorities: Optional[Mapping[str, float]],
 
 def _apply_estimate(wf: Workflow, sim: ExecutionState, p: Placement,
                     cm: Optional[CostModel] = None) -> None:
-    """Advance the simulated state by a placement's estimated effects."""
+    """Advance the simulated state by a placement's estimated effects.
+
+    A routed placement (``p.model`` set by :meth:`_variant_rows`' solver
+    rows) is estimated against its routed twin — residency, prefix
+    warmth, and duration all follow the family that will actually run.
+    """
     if cm is None:
         cm = CostModel(sim)
     st = wf.stages[p.sid]
+    if p.model is not None and p.model != st.model:
+        st = variant_stage(st, p.model, sim.profiles)
     fins = []
     for d, nq in zip(p.devices, p.shard_sizes):
         t0 = max(sim.now, sim.device_free(d))

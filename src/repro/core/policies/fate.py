@@ -31,14 +31,16 @@ class FATEPolicy(BasePolicy):
                  time_limit: float = 5.0, use_matrix: bool = True,
                  use_delta: bool = True, warm_start: bool = True,
                  cost_params: Optional[CostParams] = None,
-                 max_waves: Optional[int] = None, pools: int = 1):
+                 max_waves: Optional[int] = None, pools=1,
+                 routing=None):
         self.planner = FrontierPlanner(params, time_limit,
                                        use_matrix=use_matrix,
                                        use_delta=use_delta,
                                        warm_start=warm_start,
                                        cost_params=cost_params,
                                        max_waves=max_waves,
-                                       pools=pools)
+                                       pools=pools,
+                                       routing=routing)
         self.params = self.planner.params
 
     @classmethod
@@ -54,7 +56,8 @@ class FATEPolicy(BasePolicy):
             use_matrix=config.use_matrix, use_delta=config.use_delta,
             warm_start=config.warm_start, max_waves=config.max_waves,
             cost_params=cost_params,
-            pools=getattr(config, "pools", 1))
+            pools=getattr(config, "pools", 1),
+            routing=getattr(config, "routing", None))
         kwargs.update(config.policy_kwargs)
         return cls(**kwargs)
 

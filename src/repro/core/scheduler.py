@@ -53,6 +53,7 @@ from repro.core.devices import Cluster, Device
 from repro.core.faults import DeviceHealth, FaultInjector, FaultPlan
 from repro.core.journal import EventJournal, JournalError
 from repro.core.planner import Placement
+from repro.core.routing import RoutingConfig, StageRouter
 from repro.core.scoring import ScoreParams
 from repro.core.state import ExecutionState
 from repro.core.workflow import Stage, StageKey, Workflow
@@ -65,6 +66,16 @@ EVENT_SCHEMA_VERSION = 1
 
 #: Schema version of :meth:`Scheduler.snapshot` documents.
 SNAPSHOT_VERSION = 1
+
+#: Keep queued workflow arrivals on their own heap (``submit`` pushes
+#: there) so the in-flight event heap — which ``_kill_run`` and the
+#: invariant audit scan linearly — stays proportional to running work
+#: even with 100k future arrivals enqueued.  Entries share the
+#: ``(t, prio, seq)`` prefix, so popping the smaller head of the two
+#: heaps reproduces the exact single-heap order (bit-identical event
+#: streams; ``tests/test_arrival_queue.py`` flips this off to assert
+#: it).
+_SPLIT_ARRIVALS = True
 
 
 class RecoveryError(RuntimeError):
@@ -146,12 +157,23 @@ class SchedulerConfig:
     * ``pools`` — hierarchical sharded frontier solve: partition the
       merged ready frontier into this many residency-aware device
       pools and solve each pool exactly, combining the disjoint
-      per-pool solutions (``1`` = the monolithic solve; see
+      per-pool solutions (``1`` = the monolithic solve; the string
+      ``"auto"`` derives the count per wave from device count and
+      frontier width — see
       :class:`~repro.core.planner.FrontierPlanner`);
     * ``batch_probes`` — admission probes of simultaneous arrivals in
       one event batch share a single delta-rescored lookahead wave
       (see :meth:`~repro.core.admission.AdmissionController
-      .probe_batch`) instead of running one solve per arrival.
+      .probe_batch`) instead of running one solve per arrival;
+    * ``routing`` — a :class:`~repro.core.routing.RoutingConfig`
+      enabling cost/quality model-family routing: stages declaring
+      ``candidates`` may be served by an alternate family that clears
+      the quality floor (``None``, the default, is bit-identical to
+      the unrouted planner);
+    * ``gateway`` — plain-dict knobs for the HTTP serving gateway
+      (``serving/gateway.py``: ``replicas``, ``host``, ``port``);
+      inert to the scheduler core itself, carried here so one JSON
+      artifact reproduces a served deployment.
 
     ``to_json``/``from_json`` round-trip the whole object — including
     the embedded calibration profile — so a benchmark gate can be
@@ -173,8 +195,10 @@ class SchedulerConfig:
     replan_on_completion: bool = True
     faults: Optional[FaultPlan] = None
     event_buffer: Optional[int] = None
-    pools: int = 1
+    pools: "int | str" = 1
     batch_probes: bool = False
+    routing: Optional[RoutingConfig] = None
+    gateway: Optional[Mapping] = None
 
     # -- lowering --------------------------------------------------------
     def effective_cost_params(self) -> Optional[CostParams]:
@@ -237,6 +261,10 @@ class SchedulerConfig:
             "event_buffer": self.event_buffer,
             "pools": self.pools,
             "batch_probes": self.batch_probes,
+            "routing": (self.routing.to_dict()
+                        if self.routing is not None else None),
+            "gateway": (dict(self.gateway)
+                        if self.gateway is not None else None),
         }
         return json.dumps(doc, indent=2, sort_keys=True) + "\n"
 
@@ -251,6 +279,9 @@ class SchedulerConfig:
                 f"unsupported SchedulerConfig version {version} "
                 f"(expected {CONFIG_VERSION})")
         cal = doc.get("calibration")
+        pools = doc.get("pools", 1)
+        if pools != "auto":
+            pools = int(pools)
         return cls(
             policy=doc.get("policy", "FATE"),
             policy_kwargs=dict(doc.get("policy_kwargs") or {}),
@@ -271,8 +302,14 @@ class SchedulerConfig:
             faults=(FaultPlan.from_dict(doc["faults"])
                     if doc.get("faults") is not None else None),
             event_buffer=doc.get("event_buffer"),
-            pools=int(doc.get("pools", 1)),
+            pools=pools,
             batch_probes=bool(doc.get("batch_probes", False)),
+            # pre-gateway documents have neither key: legacy configs
+            # load with routing/gateway disabled, unchanged otherwise
+            routing=(RoutingConfig.from_dict(doc["routing"])
+                     if doc.get("routing") is not None else None),
+            gateway=(dict(doc["gateway"])
+                     if doc.get("gateway") is not None else None),
         )
 
     def save(self, path) -> Path:
@@ -596,16 +633,22 @@ class EventLog:
 
 
 def _placement_doc(p: Placement) -> dict:
-    return {"wid": p.wid, "sid": p.sid, "devices": list(p.devices),
-            "shard_sizes": list(p.shard_sizes), "score": p.score,
-            "planned_at": p.planned_at}
+    doc = {"wid": p.wid, "sid": p.sid, "devices": list(p.devices),
+           "shard_sizes": list(p.shard_sizes), "score": p.score,
+           "planned_at": p.planned_at}
+    if p.model is not None:
+        # only routed placements carry the key, so unrouted snapshots
+        # stay byte-identical to pre-routing documents
+        doc["model"] = p.model
+    return doc
 
 
 def _placement_from_doc(doc: Mapping) -> Placement:
     return Placement(doc["wid"], doc["sid"], tuple(doc["devices"]),
                      tuple(doc["shard_sizes"]),
                      score=doc.get("score", 0.0),
-                     planned_at=doc.get("planned_at", 0.0))
+                     planned_at=doc.get("planned_at", 0.0),
+                     model=doc.get("model"))
 
 
 def _stagerun_doc(run: "StageRun") -> dict:
@@ -1170,9 +1213,20 @@ class Scheduler:
         # run state ------------------------------------------------------
         self.frontier = SharedFrontier()
         # (t, prio, seq, kind, payload); prio is seq in serving mode,
-        # the stage id in batch mode (historical tie-break contracts)
+        # the stage id in batch mode (historical tie-break contracts).
+        # Future arrivals live on their own heap (_SPLIT_ARRIVALS) so
+        # in-flight heap scans don't degrade under deep arrival queues;
+        # _peek/_pop_next merge the two in exact single-heap order.
         self._heap: list[tuple] = []
+        self._arrivals_q: list[tuple] = []
         self._seq = 0
+        # routed stage resolution at issue time (Placement.model);
+        # None whenever routing is off — every resolver then returns
+        # the workflow's own stage object untouched
+        self._router: Optional[StageRouter] = (
+            StageRouter(self.config.routing)
+            if getattr(self.config, "routing", None) is not None
+            else None)
         self._n_total_stages = 0
         self.committed: list[Placement] = []
         self.issued: set[StageKey] = set()
@@ -1264,7 +1318,29 @@ class Scheduler:
 
     def next_event_time(self) -> Optional[float]:
         """Timestamp of the next pending event (``None`` when idle)."""
-        return self._heap[0][0] if self._heap else None
+        head = self._peek()
+        return head[0] if head is not None else None
+
+    def _peek(self) -> Optional[tuple]:
+        """Earliest pending entry across the event and arrival heaps
+        (``None`` when both are empty).  Full-tuple comparison on the
+        shared ``(t, prio, seq)`` prefix reproduces the single-heap
+        order exactly."""
+        a = self._heap[0] if self._heap else None
+        b = self._arrivals_q[0] if self._arrivals_q else None
+        if a is None:
+            return b
+        if b is None or a <= b:
+            return a
+        return b
+
+    def _pop_next(self) -> tuple:
+        """Pop the entry :meth:`_peek` points at."""
+        a = self._heap[0] if self._heap else None
+        b = self._arrivals_q[0] if self._arrivals_q else None
+        if b is None or (a is not None and a <= b):
+            return heapq.heappop(self._heap)
+        return heapq.heappop(self._arrivals_q)
 
     # -- event stream ----------------------------------------------------
     def on(self, event_type: type, handler: Callable) -> None:
@@ -1284,17 +1360,28 @@ class Scheduler:
         :meth:`stream` to lazily drive the clock instead)."""
         return iter(list(self.events))
 
-    def stream(self) -> Iterator[SchedulerEvent]:
+    def stream(self, strict: bool = False) -> Iterator[SchedulerEvent]:
         """Drive the scheduler to quiescence lazily, yielding each
         event as it is emitted (one :meth:`step` per batch).
 
         Positions are absolute (ring-buffer safe): with a configured
         ``event_buffer`` cap, events evicted between steps are skipped
-        rather than re-yielded or crashed on.
+        rather than re-yielded or crashed on — unless ``strict`` is
+        set, in which case an eviction the consumer has not seen
+        raises ``RuntimeError`` instead of silently gapping the
+        stream (the contract the gateway's NDJSON endpoint rides:
+        a dropped event must surface as an error, never as silence).
         """
         seen = self.events.n_total
         while True:
             progressed = self.step()
+            if strict and seen < self.events.n_dropped:
+                raise RuntimeError(
+                    f"event stream gap: {self.events.n_dropped - seen}"
+                    f" event(s) were evicted from the ring "
+                    f"(event_buffer={self.events.maxlen}) before this "
+                    f"consumer read them; raise event_buffer or "
+                    f"consume faster")
             if self.events.n_total > seen:
                 for ev in self.events.since(seen):
                     yield ev
@@ -1362,7 +1449,8 @@ class Scheduler:
         # ordering: ties between simultaneous completions break by
         # stage id, not issue order (arrivals sort first via "")
         prio = "" if self.batch else self._seq
-        heapq.heappush(self._heap, (t, prio, self._seq, "arrive", wf))
+        q = self._arrivals_q if _SPLIT_ARRIVALS else self._heap
+        heapq.heappush(q, (t, prio, self._seq, "arrive", wf))
         self._seq += 1
         self._n_total_stages += len(wf.stages)
         self._first_arrival = (t if self._first_arrival is None
@@ -1434,7 +1522,10 @@ class Scheduler:
         last batch is issued at its own timestamp — never back-dated
         to ``t``.
         """
-        while self._heap and self._heap[0][0] <= t + 1e-12:
+        while True:
+            head = self._peek()
+            if head is None or head[0] > t + 1e-12:
+                break
             self.step()
         self.state.now = max(self.state.now, t)
 
@@ -1445,11 +1536,21 @@ class Scheduler:
         while self.step():
             pass
         self._lifecycle = "drained"
+        self.result = self.peek_result()
+        return self.result
+
+    def peek_result(self) -> ServingResult:
+        """Provisional :class:`ServingResult` over the work completed
+        SO FAR, without advancing the clock or finalizing the
+        lifecycle — the live-metrics view the serving gateway's
+        ``/v1/metrics`` endpoint reads mid-run.  :meth:`drain` builds
+        its final result through this same constructor, so a drained
+        run's ``peek_result()`` equals its :attr:`result`."""
         adm = self.admission
         fa = self._first_arrival if self._first_arrival is not None \
             else 0.0
         lf = self._last_finish if self._last_finish is not None else fa
-        self.result = ServingResult(
+        return ServingResult(
             stats=self.stats, horizon=max(lf - fa, 0.0),
             max_in_flight=self.max_in_flight, replans=self.replans,
             model_switches=(self.state.model_switches
@@ -1464,7 +1565,6 @@ class Scheduler:
             speculations=self.speculations,
             shard_preemptions=self.shard_preemptions,
             classes=dict(self._klass))
-        return self.result
 
     def batch_result(self, wid: str) -> RunResult:
         """Single-workflow :class:`RunResult` view of a drained run
@@ -1555,7 +1655,7 @@ class Scheduler:
                 "injected state/policy/world/probe_corrector hooks "
                 "cannot be reconstructed from a snapshot")
         wfs = dict(self._workflows_all)
-        for entry in self._heap:
+        for entry in list(self._heap) + list(self._arrivals_q):
             if entry[3] == "arrive":
                 wfs[entry[4].wid] = entry[4]
         if self.admission is not None:
@@ -1577,7 +1677,10 @@ class Scheduler:
                 "order": list(self.frontier._order),
                 "completed": {wid: sorted(done) for wid, done
                               in self.frontier.completed.items()}},
-            "heap": [_heap_entry_doc(e) for e in self._heap],
+            # one wire key for both heaps (the arrival split is an
+            # in-memory layout, not a snapshot format change)
+            "heap": ([_heap_entry_doc(e) for e in self._heap]
+                     + [_heap_entry_doc(e) for e in self._arrivals_q]),
             "committed": [_placement_doc(p) for p in self.committed],
             "issued": sorted(list(k) for k in self.issued),
             "runs": _keyed_dict_doc({k: _stagerun_doc(r)
@@ -1690,8 +1793,15 @@ class Scheduler:
         self.frontier = fr
         # replaces the scripted crash/recover events the constructor
         # pre-pushed — the snapshot heap carries the pending ones
-        self._heap = [_heap_entry_from_doc(h, wfs)
-                      for h in doc["heap"]]
+        entries = [_heap_entry_from_doc(h, wfs) for h in doc["heap"]]
+        if _SPLIT_ARRIVALS:
+            self._heap = [e for e in entries if e[3] != "arrive"]
+            self._arrivals_q = [e for e in entries if e[3] == "arrive"]
+        else:
+            self._heap = entries
+            self._arrivals_q = []
+        heapq.heapify(self._heap)
+        heapq.heapify(self._arrivals_q)
         self.committed = [_placement_from_doc(p)
                           for p in doc["committed"]]
         self.issued = {tuple(k) for k in doc["issued"]}
@@ -1917,10 +2027,26 @@ class Scheduler:
         return all(self.state.device_free(d) <= self.state.now + 1e-12
                    for d in p.devices)
 
+    def _effective_stage(self, wf: Workflow, sid: str,
+                         model: Optional[str]) -> Stage:
+        """The stage object an attempt actually runs as: the routed
+        twin when the placement carries an alternate family
+        (``Placement.model``, set by the routing-enabled planner),
+        the workflow's own stage otherwise — so issue durations,
+        residency, prefix warmth, and kill/replay credit-back all
+        price the family that really executed."""
+        st = wf.stages[sid]
+        if (model is None or model == st.model
+                or self._router is None):
+            return st
+        var = self._router.variant(wf.wid, st, model,
+                                   self.state.profiles)
+        return var if var is not None else st
+
     def _issue(self, p: Placement) -> None:
         state = self.state
         wf = self.frontier.workflows[p.wid]
-        st = wf.stages[p.sid]
+        st = self._effective_stage(wf, p.sid, p.model)
         if self.batch:
             # mechanism proxies (Appendix C.2), measured at issue
             # before the state update — batch-only: ServingResult
@@ -2130,7 +2256,8 @@ class Scheduler:
                 mine.update(run2.placement.devices)
             elif k2 in self.issued:
                 busy_others.update(run2.placement.devices)
-        st = self.frontier.workflows[wid].stages[sid]
+        st = self._effective_stage(self.frontier.workflows[wid], sid,
+                                   run.placement.model)
         for d in sorted(mine - busy_others):
             if d in state.down:
                 continue
@@ -2401,7 +2528,9 @@ class Scheduler:
         wf = self.frontier.workflows.get(wid)
         if wf is None:
             return
-        st = wf.stages[sid]
+        # a speculative copy re-runs the SAME family the straggling
+        # attempt was routed to (the quality decision is the planner's)
+        st = self._effective_stage(wf, sid, run.placement.model)
         cand = [d for d in (st.eligible or state.cluster.ids())
                 if d not in state.down
                 and d not in run.placement.devices]
@@ -2411,7 +2540,8 @@ class Scheduler:
             self.cm.effective_cost(wf, st, d, wf.num_queries)
             + state.wait_time(d), d))
         p2 = Placement(wid=wid, sid=sid, devices=(best,),
-                       shard_sizes=(wf.num_queries,))
+                       shard_sizes=(wf.num_queries,),
+                       model=run.placement.model)
         slow = self.injector.slow_map((best,), state.now)
         shard_fin, switched, _ = _issue_shards(state, self.cm, wf, st,
                                                p2, slow=slow)
@@ -2587,7 +2717,7 @@ class Scheduler:
         if not advance:
             return "idle"
         # 3. advance the clock to the next event batch
-        if not self._heap:
+        if not self._heap and not self._arrivals_q:
             if adm is not None and adm.backlog:
                 # no further events will trigger re-admission: drain
                 # the backlog (shed expired entries, force the oldest
@@ -2613,7 +2743,7 @@ class Scheduler:
                 raise RuntimeError(
                     f"serving executor deadlock ({self.policy.name})")
             return "done"
-        t = self._heap[0][0]
+        t = self._peek()[0]
         state.now = max(state.now, t)
         completed_any = False
         if self.batch:
@@ -2621,7 +2751,7 @@ class Scheduler:
             # between same-instant completions, as Algorithm 2 does);
             # fault injection is serving-only, so the only kinds are
             # "arrive" and always-valid "finish"
-            _, _, _, kind, payload = heapq.heappop(self._heap)
+            _, _, _, kind, payload = self._pop_next()
             if kind == "arrive":
                 self._process_arrival(payload)
             else:
@@ -2635,8 +2765,11 @@ class Scheduler:
             # wave; the flush before any other event kind (and at loop
             # end) preserves the exact pop-order semantics
             arrivals: list[Workflow] = []
-            while self._heap and self._heap[0][0] <= t + 1e-12:
-                _, _, _, kind, payload = heapq.heappop(self._heap)
+            while True:
+                head = self._peek()
+                if head is None or head[0] > t + 1e-12:
+                    break
+                _, _, _, kind, payload = self._pop_next()
                 if kind == "arrive":
                     arrivals.append(payload)
                     continue

@@ -39,6 +39,12 @@ class Stage:
     level: int = 0
     parents: tuple[str, ...] = ()
     children: tuple[str, ...] = ()
+    # cost/quality routing (core/routing.py): alternate model aliases
+    # the planner may serve this stage with, as (alias, quality) pairs
+    # where quality in (0, 1] is relative to the default ``model``
+    # (implicitly quality 1.0).  Empty = routing never touches the
+    # stage, so legacy workflows are untouched by construction.
+    candidates: tuple[tuple[str, float], ...] = ()
 
     def cost_on(self, device: int) -> float:
         if device in self.base_cost:
@@ -63,6 +69,7 @@ class Stage:
             "comm_weight": self.comm_weight,
             "role": self.role,
             "parents": list(self.parents),
+            "candidates": [[m, q] for m, q in self.candidates],
         }
 
     @classmethod
@@ -73,6 +80,10 @@ class Stage:
         doc["parents"] = tuple(doc.get("parents") or ())
         doc["base_cost"] = {int(d): c
                             for d, c in doc.get("base_cost", {}).items()}
+        # pre-routing documents have no "candidates" key; absent or
+        # null loads as "no alternates" (routing disabled for the stage)
+        doc["candidates"] = tuple((str(m), float(q))
+                                  for m, q in doc.get("candidates") or ())
         return cls(**doc)
 
 

@@ -60,6 +60,8 @@ class ModelBundle:
 
     @classmethod
     def create(cls, name: str, cfg, seed: int = 0) -> "ModelBundle":
+        """Build and initialize the model, jit its prefill/decode step
+        functions, and return the servable bundle."""
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(seed))
 

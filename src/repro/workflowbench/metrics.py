@@ -166,6 +166,38 @@ def class_summary(res) -> dict[str, dict]:
     return out
 
 
+def rebase_result(res, t0: "float | None" = None):
+    """Normalize a :class:`~repro.core.scheduler.ServingResult` onto
+    the scheduler clock: shift every absolute timestamp so the
+    earliest arrival sits at zero (or at an explicit ``t0``).
+
+    Gateway-injected runs timestamp arrivals from wall-clock
+    submission, so their absolute times start at an arbitrary offset
+    instead of the trace-time origin the summaries were written
+    against.  Every summary metric is difference-based (makespan,
+    latencies, P95, SLO slack), so the shift changes nothing for
+    trace-driven runs — this helper exists so the wall-clock
+    assumption is handled in ONE place rather than per-summary.
+    Returns a new result (the input is not mutated); a result already
+    at the origin (or with no completions) is returned as-is.
+    """
+    import dataclasses
+    if not res.stats:
+        return res
+    if t0 is None:
+        t0 = min(s.arrival for s in res.stats.values())
+    if abs(t0) < 1e-12:
+        return res
+    stats = {}
+    for wid, s in res.stats.items():
+        stats[wid] = dataclasses.replace(
+            s, arrival=s.arrival - t0, finish=s.finish - t0,
+            query_completion=[t - t0 for t in s.query_completion],
+            deadline=(s.deadline - t0
+                      if s.deadline is not None else None))
+    return dataclasses.replace(res, stats=stats)
+
+
 def _median(xs: Sequence[float]) -> float:
     """``statistics.median`` with NaN (not ValueError) on empty input —
     the robust center the probe-error gate compares, insensitive to the

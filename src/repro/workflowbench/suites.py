@@ -200,6 +200,69 @@ def overloaded_serving_trace(n_workflows: int = 18, rate: float = 14.0,
                                  mix="mixed")
 
 
+def routed_workflow_instance(index: int, num_queries: int = 8,
+                             candidates: tuple = (("qwen-7b", 0.92),
+                                                  ("llama-3b", 0.84))
+                             ) -> Workflow:
+    """Decompose -> W parallel workers -> merge, with the workers
+    defaulting to the LARGE family (``qwen-14b``) while declaring
+    cheaper alternates via ``Stage.candidates``.
+
+    The default alternate list offers ``qwen-7b`` at quality 0.92
+    (admissible at the default 0.9 quality floor, roughly half the
+    cost) and ``llama-3b`` at 0.84 (below the floor — the router must
+    exclude it even though it is far cheaper), so one instance
+    exercises both sides of the floor.  Decompose/merge stay
+    single-family with no alternates: routing must leave them
+    untouched.
+    """
+    w = 3 + index % 3
+    grp = f"routed-{index}:ctx"
+    stages: dict[str, Stage] = {
+        "decompose": Stage("decompose", "qwen-7b",
+                           base_cost={-1: 0.06}, prefix_group=grp,
+                           shared_fraction=0.5, output_tokens=256.0,
+                           role="decomposition"),
+    }
+    for i in range(w):
+        stages[f"worker{i}"] = Stage(
+            f"worker{i}", "qwen-14b", max_shards=2,
+            base_cost={-1: 0.2}, prefill_fraction=0.7,
+            prefix_group=grp, shared_fraction=0.5,
+            output_tokens=512.0, parents=("decompose",),
+            role="worker", candidates=tuple(candidates))
+    stages["merge"] = Stage(
+        "merge", "qwen-7b", base_cost={-1: 0.08},
+        prefix_group=grp, shared_fraction=0.5, output_tokens=384.0,
+        parents=tuple(f"worker{i}" for i in range(w)), role="merge")
+    return Workflow(wid=f"routed-{index:03d}", stages=stages,
+                    num_queries=num_queries, family="routed")
+
+
+def routed_serving_trace(n_workflows: int = 10, rate: float = 4.0,
+                         seed: int = 0, num_queries: int = 8
+                         ) -> list[tuple[float, "Workflow"]]:
+    """Poisson trace of :func:`routed_workflow_instance` copies — the
+    cost/quality routing benchmark input (``sched_bench --gateway``).
+
+    Every worker stage prefers the large ``qwen-14b`` family but
+    declares cheaper admissible alternates, so a routing-enabled
+    planner can trade quality margin above the floor for cost, while
+    a routing-disabled run must serve everything on the default
+    family.  Deterministic in ``seed``; sorted by arrival time.
+    """
+    import random
+
+    rng = random.Random(seed)
+    trace: list[tuple[float, Workflow]] = []
+    t = 0.0
+    for i in range(n_workflows):
+        t += rng.expovariate(rate)
+        wf = routed_workflow_instance(i, num_queries)
+        trace.append((t, wf))
+    return trace
+
+
 def multiclass_overloaded_trace(n_workflows: int = 18, rate: float = 14.0,
                                 seed: int = 0, num_queries: int = 8,
                                 class_cycle: tuple = ("platinum", "batch",

@@ -1,0 +1,122 @@
+"""Heap-backed split arrival queue (core/scheduler.py).
+
+Future arrivals live on their own heap (``_SPLIT_ARRIVALS``) so the
+hot event loop never scans past queued workload; ``_peek``/``_pop_next``
+merge the arrival heap and the event heap by the full ``(t, prio,
+seq)`` tuple, so the pop order — and therefore every event the
+scheduler emits — is bit-identical to the single-heap scheduler.
+These tests pin that regression contract on an overloaded SLO trace
+and a bursty 120-workflow scale trace, and check that a mid-run
+snapshot round-trips queued arrivals through the concatenated wire
+format.
+"""
+import dataclasses
+import json
+
+import pytest
+
+import repro.core.scheduler as sched_mod
+from repro.core.devices import homogeneous_cluster
+from repro.core.admission import SLOConfig
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.workflowbench.suites import overloaded_serving_trace, \
+    scale_serving_trace
+
+
+def _events(sched):
+    return [(type(e).__name__, dataclasses.astuple(e))
+            for e in sched.events]
+
+
+def _run(trace, config, n_devices, split):
+    prev = sched_mod._SPLIT_ARRIVALS
+    sched_mod._SPLIT_ARRIVALS = split
+    try:
+        sched = Scheduler(homogeneous_cluster(n_devices), config)
+        for t, wf in trace:
+            sched.submit(wf, at=t)
+        res = sched.drain()
+    finally:
+        sched_mod._SPLIT_ARRIVALS = prev
+    return res, sched
+
+
+def test_split_queue_bit_identical_on_overloaded_trace():
+    """Overloaded n=18 SLO trace: admission probes, deferrals, and
+    rejections interleave with arrivals — the split queue must pop in
+    the exact single-heap order through all of it."""
+    trace = overloaded_serving_trace(18, 14.0)
+    cfg = SchedulerConfig(policy="FATE", slo=SLOConfig())
+    res_a, s_a = _run(trace, cfg, 4, split=False)
+    res_b, s_b = _run(trace, cfg, 4, split=True)
+    assert _events(s_a) == _events(s_b)
+    assert res_a.rejected == res_b.rejected
+    assert {w: s.makespan for w, s in res_a.stats.items()} \
+        == {w: s.makespan for w, s in res_b.stats.items()}
+
+
+def test_split_queue_bit_identical_on_bursty_scale_trace():
+    """Bursty same-timestamp arrivals (burst=8) are where tie-breaking
+    by (prio, seq) matters: any divergence in merge order between the
+    two heaps reorders admissions."""
+    trace = scale_serving_trace(n_workflows=80, burst=8, gap=0.25,
+                                num_queries=2)
+    cfg = SchedulerConfig(policy="FATE")
+    _, s_a = _run(trace, cfg, 8, split=False)
+    _, s_b = _run(trace, cfg, 8, split=True)
+    assert _events(s_a) == _events(s_b)
+
+
+def test_snapshot_round_trips_queued_arrivals():
+    """Snapshot while most of the trace is still on the arrival heap:
+    the wire format concatenates both heaps, restore re-splits by
+    kind, and the restored run finishes bit-identically."""
+    trace = scale_serving_trace(n_workflows=40, burst=8, gap=0.25,
+                                num_queries=2)
+    cfg = SchedulerConfig(policy="FATE")
+    sched = Scheduler(homogeneous_cluster(4), cfg)
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    assert sched.step()          # admit the first burst only
+    assert sched._arrivals_q, "trace fully admitted too early"
+    n_queued = len(sched._arrivals_q)
+    snap = json.loads(json.dumps(sched.snapshot()))
+    restored = Scheduler.restore(snap)
+    assert len(restored._arrivals_q) == n_queued
+    assert sorted(restored._arrivals_q) == sorted(sched._arrivals_q)
+    # every queued entry is an arrival; no arrivals leak onto _heap
+    assert all(e[3] == "arrive" for e in restored._arrivals_q)
+    assert all(e[3] != "arrive" for e in restored._heap)
+    sched.drain()
+    restored.drain()
+    assert _events(sched) == _events(restored)
+
+
+def test_peek_and_pop_merge_in_heap_order():
+    """Direct unit check of the two-heap merge: interleaved arrival
+    and completion timestamps pop in global (t, prio, seq) order."""
+    trace = scale_serving_trace(n_workflows=24, burst=8, gap=0.25,
+                                num_queries=2)
+    sched = Scheduler(homogeneous_cluster(4),
+                      SchedulerConfig(policy="FATE"))
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    seen = []
+    while True:
+        head = sched._peek()
+        if head is None:
+            break
+        popped = sched._pop_next()
+        assert popped == head
+        seen.append(popped[:3])
+        # re-park non-arrival entries? No — just drain raw order here:
+        # popping everything exercises the merge without stepping.
+    assert seen == sorted(seen)
+
+
+@pytest.mark.parametrize("split", [False, True])
+def test_drain_completes_all_with_either_queue(split):
+    trace = scale_serving_trace(n_workflows=40, burst=8, gap=0.25,
+                                num_queries=2)
+    res, _ = _run(trace, SchedulerConfig(policy="FATE"), 8, split)
+    assert len(res.stats) == len(trace)

@@ -1,0 +1,77 @@
+"""``SchedulerConfig(pools="auto")`` — derived pool counts.
+
+The hierarchical sharded solve partitions a wave into device pools;
+``pools="auto"`` derives the count per wave (one pool per 16 devices,
+capped at ~4 ready rows per pool).  On a small cluster the derivation
+resolves to 1 — which IS the monolithic merged solve — so an "auto"
+serving run must be bit-identical to ``pools=1``.
+"""
+import dataclasses
+import json
+
+from repro.core.devices import homogeneous_cluster
+from repro.core.planner import FrontierPlanner
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.scoring import ScoreParams
+from repro.workflowbench.suites import poisson_serving_trace, \
+    scale_serving_trace
+
+
+def _events(sched):
+    return [(type(e).__name__, dataclasses.astuple(e))
+            for e in sched.events]
+
+
+def _run(trace, pools, n_devices=4):
+    cfg = SchedulerConfig(policy="FATE", pools=pools)
+    sched = Scheduler(homogeneous_cluster(n_devices), cfg)
+    for t, wf in trace:
+        sched.submit(wf, at=t)
+    res = sched.drain()
+    return res, sched
+
+
+def test_effective_pools_derivation():
+    auto = FrontierPlanner(ScoreParams(), pools="auto")
+    # big cluster, wide frontier: one pool per 16 devices
+    assert auto._effective_pools(64, 32) == 4
+    # row cap: each pool keeps >= ~4 ready rows
+    assert auto._effective_pools(64, 8) == 2
+    # small cluster or narrow frontier -> monolithic
+    assert auto._effective_pools(8, 32) == 1
+    assert auto._effective_pools(64, 3) == 1
+    # fixed integer passes through unchanged
+    fixed = FrontierPlanner(ScoreParams(), pools=3)
+    assert fixed._effective_pools(64, 32) == 3
+
+
+def test_auto_pools_bit_identical_on_small_cluster():
+    """4 devices -> auto resolves to 1 every wave: events and stats
+    must match pools=1 exactly."""
+    trace = poisson_serving_trace(n_workflows=8, rate=6.0, seed=0,
+                                  num_queries=4)
+    res_one, s_one = _run(trace, pools=1)
+    res_auto, s_auto = _run(trace, pools="auto")
+    assert _events(s_one) == _events(s_auto)
+    assert {w: s.makespan for w, s in res_one.stats.items()} \
+        == {w: s.makespan for w, s in res_auto.stats.items()}
+
+
+def test_auto_pools_completes_bursty_trace():
+    trace = scale_serving_trace(n_workflows=40, burst=8, gap=0.25,
+                                num_queries=2)
+    res, _ = _run(trace, pools="auto", n_devices=8)
+    assert len(res.stats) == len(trace)
+
+
+def test_pools_auto_config_round_trip():
+    cfg = SchedulerConfig(policy="FATE", pools="auto")
+    back = SchedulerConfig.from_json(cfg.to_json())
+    assert back.pools == "auto"
+    # integer pools stay integers through the wire
+    cfg2 = SchedulerConfig(policy="FATE", pools=2)
+    assert SchedulerConfig.from_json(cfg2.to_json()).pools == 2
+    # legacy docs without the key default to monolithic
+    doc = json.loads(cfg.to_json())
+    doc.pop("pools")
+    assert SchedulerConfig.from_json(json.dumps(doc)).pools == 1

@@ -48,6 +48,9 @@ DOCSTRING_MODULES = [
     "src/repro/core/policies/baselines.py",
     "src/repro/workflowbench/runner.py",
     "src/repro/workflowbench/suites.py",
+    "src/repro/core/routing.py",
+    "src/repro/serving/engine.py",
+    "src/repro/serving/gateway.py",
 ]
 
 MARKDOWN_FILES = ["README.md", *sorted(
